@@ -1,0 +1,72 @@
+"""Fig. 3: runtime breakdown — init / compute / exchange (push+pull) /
+final parent aggregation — for the partitioned direction-optimized BFS.
+Uses the instrumented BSP stepper (real collectives, timed separately).
+"""
+import argparse
+import json
+import time
+
+import numpy as np
+
+
+def _inproc(scale, nparts, roots):
+    from repro.core import graph as G
+    from repro.core import partition as PT
+    from repro.core.hybrid_bfs import (HybridConfig, hybrid_bfs_instrumented,
+                                       make_hybrid_stepper)
+
+    g = G.rmat(scale, seed=0)
+    plan = PT.make_plan(g, nparts, "specialized")
+    pg = PT.apply_plan(g, plan)
+    rng = np.random.default_rng(0)
+    cand = np.flatnonzero(g.degrees > 0)
+    out = {"init_s": 0.0, "compute_s": 0.0, "exchange_s": 0.0, "agg_s": 0.0}
+    hcfg = HybridConfig()
+    # warm
+    hybrid_bfs_instrumented(pg, int(cand[0]), hcfg)
+    init_fn, compute_fn, exchange_fn, finalize_fn, rootmap =         make_hybrid_stepper(pg, hcfg)
+    import jax
+    for root in rng.choice(cand, roots, replace=False):
+        t0 = time.perf_counter()
+        state = init_fn(rootmap(int(root)))
+        jax.block_until_ready(state["frontier"])
+        out["init_s"] += time.perf_counter() - t0
+        while int(np.asarray(state["frontier"]).sum()) > 0:
+            t0 = time.perf_counter()
+            nxt, pc, bu, bs = compute_fn(state)
+            jax.block_until_ready(nxt)
+            out["compute_s"] += time.perf_counter() - t0
+            t0 = time.perf_counter()
+            state = exchange_fn(state, nxt, pc, bu, bs)
+            jax.block_until_ready(state["frontier"])
+            out["exchange_s"] += time.perf_counter() - t0
+        t0 = time.perf_counter()
+        jax.block_until_ready(finalize_fn(state))
+        out["agg_s"] += time.perf_counter() - t0
+    out = {k: v / roots for k, v in out.items()}
+    print("RESULT " + json.dumps(out), flush=True)
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--nparts", type=int, default=0)
+    ap.add_argument("--roots", type=int, default=3)
+    args = ap.parse_args(argv)
+    if args.nparts:
+        return _inproc(args.scale, args.nparts, args.roots)
+
+    from benchmarks.common import emit, run_with_devices
+    out = run_with_devices("benchmarks.fig3_breakdown", 4,
+                           ["--nparts", 4, "--scale", args.scale,
+                            "--roots", args.roots])
+    res = json.loads([l for l in out.splitlines()
+                      if l.startswith("RESULT ")][-1][7:])
+    total = sum(res.values())
+    for k, v in res.items():
+        emit(f"fig3_{k}", v * 1e6, f"share={v / max(total, 1e-12):.2%}")
+
+
+if __name__ == "__main__":
+    main()

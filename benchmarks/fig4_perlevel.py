@@ -1,0 +1,66 @@
+"""Fig. 4: per-level runtime, classic top-down vs direction-optimized,
+single partition ("2S") vs hybrid 4 partitions ("2S2G" analogue).
+"""
+import argparse
+import json
+
+import numpy as np
+
+
+def _inproc(scale, nparts, heuristic):
+    from repro.core import graph as G
+    from repro.core import partition as PT
+    from repro.core.bfs import BFSConfig, bfs_instrumented
+    from repro.core.hybrid_bfs import HybridConfig, hybrid_bfs_instrumented
+
+    g = G.rmat(scale, seed=0)
+    root = int(np.argmax(g.degrees))
+    cfg = BFSConfig(heuristic=heuristic)
+    if nparts == 1:
+        # single-device fast path: honest per-level times without the
+        # BSP emulation overhead (see EXPERIMENTS SSReproduction note)
+        bfs_instrumented(g, root, cfg)               # warm
+        _, _, st = bfs_instrumented(g, root, cfg)
+        stats = [dict(level=x["level"], direction=x["direction"],
+                      frontier_size=x["frontier_size"],
+                      compute_s=x["seconds"], exchange_s=0.0) for x in st]
+        print("RESULT " + json.dumps(stats), flush=True)
+        return stats
+    plan = PT.make_plan(g, nparts, "specialized")
+    pg = PT.apply_plan(g, plan)
+    hcfg = HybridConfig(bfs=cfg)
+    hybrid_bfs_instrumented(pg, root, hcfg)          # warm
+    _, stats = hybrid_bfs_instrumented(pg, root, hcfg)
+    print("RESULT " + json.dumps(stats), flush=True)
+    return stats
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--nparts", type=int, default=0)
+    ap.add_argument("--heuristic", default="paper")
+    args = ap.parse_args(argv)
+    if args.nparts:
+        return _inproc(args.scale, args.nparts, args.heuristic)
+
+    from benchmarks.common import emit, run_with_devices
+    for label, nparts, heuristic in (("classic_1P", 1, "topdown"),
+                                     ("do_1P", 1, "paper"),
+                                     ("classic_4P", 4, "topdown"),
+                                     ("do_4P", 4, "paper")):
+        out = run_with_devices("benchmarks.fig4_perlevel", max(nparts, 1),
+                               ["--nparts", nparts, "--scale", args.scale,
+                                "--heuristic", heuristic])
+        stats = json.loads([l for l in out.splitlines()
+                            if l.startswith("RESULT ")][-1][7:])
+        for s in stats:
+            emit(f"fig4_{label}_L{s['level']}",
+                 (s["compute_s"] + s["exchange_s"]) * 1e6,
+                 f"dir={s['direction']};|F|={s['frontier_size']}")
+        total = sum(s["compute_s"] + s["exchange_s"] for s in stats)
+        emit(f"fig4_{label}_total", total * 1e6, f"levels={len(stats)}")
+
+
+if __name__ == "__main__":
+    main()

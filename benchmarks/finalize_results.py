@@ -1,0 +1,45 @@
+"""Merge dry-run result files (rerun overrides baseline), emit roofline.md,
+and inline the table into EXPERIMENTS.md §Roofline-table."""
+import json
+import pathlib
+import sys
+
+RES = pathlib.Path(__file__).resolve().parent / "results"
+
+
+def merge():
+    base = json.loads((RES / "dryrun.json").read_text())
+    rerun_p = RES / "dryrun_rerun.json"
+    if rerun_p.exists():
+        rerun = json.loads(rerun_p.read_text())
+        keyed = {(r["arch"], r["shape"], r["mesh"]): r for r in base}
+        for r in rerun:
+            keyed[(r["arch"], r["shape"], r["mesh"])] = r
+        base = list(keyed.values())
+    base.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    (RES / "dryrun_merged.json").write_text(json.dumps(base, indent=1))
+    return base
+
+
+def main():
+    rows = merge()
+    ok = [r for r in rows if r["status"] == "ok"]
+    err = [r for r in rows if r["status"] == "error"]
+    print(f"merged: {len(rows)} records, ok={len(ok)}, err={len(err)}")
+    for r in err:
+        print("  ERROR:", r["arch"], r["shape"], r["mesh"], r.get("error", "")[:120])
+    from benchmarks import roofline
+    rl = roofline.main(["--json", str(RES / "dryrun_merged.json"),
+                        "--markdown", str(RES / "roofline.md")])
+    # inline into EXPERIMENTS.md
+    exp = pathlib.Path(__file__).resolve().parents[1] / "EXPERIMENTS.md"
+    text = exp.read_text()
+    marker = "## §Roofline-table"
+    table = (RES / "roofline.md").read_text()
+    head = text.split(marker)[0]
+    exp.write_text(head + marker + "\n\n" + table)
+    print("EXPERIMENTS.md §Roofline-table updated")
+
+
+if __name__ == "__main__":
+    main()

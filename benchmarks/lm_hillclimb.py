@@ -1,0 +1,113 @@
+"""§Perf hillclimb driver for LM dry-run cells.
+
+Lowers one (arch x shape) cell under a sequence of single-knob variants and
+reports the roofline-term deltas (scan-corrected probes). Coordinate ascent:
+a variant that improves the dominant term by >2% is adopted for subsequent
+variants.
+
+  PYTHONPATH=src python -m benchmarks.lm_hillclimb --arch yi-34b --shape train_4k
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import pathlib
+
+PEAK_FLOPS, HBM_BW, LINK_BW = 197e12, 819e9, 50e9
+
+
+def terms_of(rec):
+    coll = sum(rec.get("collective_bytes_est",
+                       rec.get("collective_bytes", {})).values())
+    return {"compute": rec.get("flops_est", rec.get("hlo_flops", 0)) / PEAK_FLOPS,
+            "memory": rec.get("bytes_est", rec.get("hlo_bytes", 0)) / HBM_BW,
+            "collective": coll / LINK_BW,
+            "temp_gb": rec.get("temp_bytes", 0) / 1e9}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--out", default="")
+    args = ap.parse_args(argv)
+
+    from repro.launch import dryrun as DR
+    from repro.models import flags
+
+    cell = DR.SHAPES[args.shape]
+    variants = [("baseline", {})]
+    if cell.kind == "train":
+        variants += [
+            ("remat=dots", {"REMAT_POLICY": "dots"}),
+            ("flash_chunk=1024", {"FLASH_CHUNK": 1024}),
+            ("flash_chunk=256", {"FLASH_CHUNK": 256}),
+            ("loss_chunk=2048", {"LOSS_CHUNK": 2048}),
+            ("loss_chunk=128", {"LOSS_CHUNK": 128}),
+        ]
+    cfg0 = DR.get_config(args.arch)
+    cfg_variants = []
+    if cfg0.n_experts and cell.kind != "decode":
+        cfg_variants = [("capacity_factor=1.0", {"capacity_factor": 1.0}),
+                        ("capacity_factor=2.0", {"capacity_factor": 2.0})]
+
+    defaults = {k: getattr(flags, k)
+                for k in ("REMAT_POLICY", "FLASH_CHUNK", "LOSS_CHUNK")}
+    results = []
+    adopted = {}
+    base_terms = None
+
+    def run_variant(label, flag_over, cfg_over=None):
+        nonlocal base_terms
+        for k, v in defaults.items():
+            setattr(flags, k, adopted.get(k, v))
+        for k, v in flag_over.items():
+            setattr(flags, k, v)
+        cfg_override = (dataclasses.replace(cfg0, **cfg_over)
+                        if cfg_over else None)
+        orig_get = DR.get_config
+        if cfg_override is not None:
+            DR.get_config = lambda name: cfg_override
+        try:
+            rec = DR.run_cell(args.arch, args.shape, args.multi_pod)
+        finally:
+            DR.get_config = orig_get
+            for k, v in defaults.items():
+                setattr(flags, k, adopted.get(k, v))
+        t = terms_of(rec)
+        dom = max(("compute", "memory", "collective"), key=t.get)
+        row = {"variant": label, **t, "dominant": dom,
+               "compile_s": rec.get("compile_s")}
+        results.append(row)
+        if base_terms is None:
+            base_terms = t
+        print(f"{label:24s} compute={t['compute']:.3f}s memory={t['memory']:.3f}s "
+              f"coll={t['collective']:.3f}s temp={t['temp_gb']:.1f}GB dom={dom}",
+              flush=True)
+        return t, dom
+
+    t0, dom0 = run_variant("baseline", {})
+    best = dict(t0)
+    for label, over in variants[1:]:
+        t, _ = run_variant(label, over)
+        if t[dom0] < best[dom0] * 0.98 and t["temp_gb"] < 16.5:
+            best = dict(t)
+            adopted.update(over)
+            print(f"  -> adopted {label}", flush=True)
+    for label, cover in cfg_variants:
+        t, _ = run_variant(label, {}, cover)
+        results[-1]["cfg_variant"] = True
+
+    out = args.out or f"benchmarks/results/hillclimb_{args.arch}_{args.shape}.json"
+    pathlib.Path(out).parent.mkdir(parents=True, exist_ok=True)
+    pathlib.Path(out).write_text(json.dumps(
+        {"arch": args.arch, "shape": args.shape, "adopted": adopted,
+         "rows": results}, indent=1))
+    print("WROTE", out)
+
+
+if __name__ == "__main__":
+    main()

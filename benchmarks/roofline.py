@@ -1,0 +1,92 @@
+"""Roofline analysis from the dry-run artifacts (EXPERIMENTS.md SSRoofline).
+
+Per (arch x shape x mesh):
+  compute   = FLOPs / (chips x 197e12)          [bf16 peak/chip, TPU v5e]
+  memory    = HBM bytes / (chips x 819e9)
+  collective= collective bytes / (chips x 50e9)  [per-link ICI]
+
+FLOPs/bytes/collectives are the scan-corrected probe estimates (per-device,
+x chips to globalize). Dominant term = the bottleneck; MODEL_FLOPS/HLO ratio
+flags remat/redundancy waste.
+"""
+import argparse
+import json
+import os
+
+from benchmarks.common import RESULTS, emit
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+
+def analyze(path=None):
+    merged = os.path.join(RESULTS, "dryrun_merged.json")
+    path = path or (merged if os.path.exists(merged)
+                    else os.path.join(RESULTS, "dryrun.json"))
+    if not os.path.exists(path):
+        print(f"# no dryrun results at {path}; run repro.launch.dryrun first")
+        return []
+    rows = json.load(open(path))
+    out = []
+    for r in rows:
+        if r.get("status") != "ok":
+            out.append({**r, "dominant": r.get("status")})
+            continue
+        chips = r["n_devices"]
+        flops_dev = r.get("flops_est", r.get("hlo_flops", 0.0))
+        bytes_dev = r.get("bytes_est", r.get("hlo_bytes", 0.0))
+        coll_dev = sum(r.get("collective_bytes_est",
+                             r.get("collective_bytes", {})).values())
+        t_compute = flops_dev / PEAK_FLOPS
+        t_memory = bytes_dev / HBM_BW
+        t_coll = coll_dev / LINK_BW
+        terms = {"compute": t_compute, "memory": t_memory,
+                 "collective": t_coll}
+        dominant = max(terms, key=terms.get)
+        step_time = max(terms.values())
+        ideal = r["model_flops"] / (chips * PEAK_FLOPS)
+        out.append({
+            "arch": r["arch"], "shape": r["shape"], "mesh": r["mesh"],
+            "t_compute_s": t_compute, "t_memory_s": t_memory,
+            "t_collective_s": t_coll, "dominant": dominant,
+            "model_flops": r["model_flops"],
+            "useful_ratio": (r["model_flops"] / chips) / max(flops_dev, 1.0),
+            "roofline_fraction": ideal / max(step_time, 1e-12),
+            "bytes_per_device": r.get("bytes_per_device", 0),
+            "status": "ok",
+        })
+    return out
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", default=None)
+    ap.add_argument("--markdown", default=None,
+                    help="write a markdown table here")
+    args = ap.parse_args(argv)
+    rows = analyze(args.json)
+    md = ["| arch | shape | mesh | compute s | memory s | collective s | "
+          "dominant | useful | roofline frac |",
+          "|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r.get("status") != "ok":
+            md.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | - | - |"
+                      f" - | {r.get('dominant')} | - | - |")
+            continue
+        emit(f"roofline_{r['arch']}_{r['shape']}_{r['mesh']}",
+             r["t_compute_s"] * 1e6,
+             f"dominant={r['dominant']};frac={r['roofline_fraction']:.3f}")
+        md.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.3f} | {r['t_memory_s']:.3f} "
+            f"| {r['t_collective_s']:.3f} | **{r['dominant']}** "
+            f"| {r['useful_ratio']:.2f} | {r['roofline_fraction']:.3f} |")
+    if args.markdown:
+        with open(args.markdown, "w") as f:
+            f.write("\n".join(md) + "\n")
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,56 @@
+"""Benchmark driver: one function per paper table/figure + roofline.
+
+Prints ``name,us_per_call,derived`` CSV. Sized for a single CPU core; pass
+--full for larger graphs.
+"""
+import argparse
+import sys
+import time
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default="",
+                    help="comma list: fig1,fig2,fig3,fig4,table1,energy,roofline")
+    args = ap.parse_args(argv)
+    scale_small = 13 if args.full else 12
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(name):
+        return only is None or name in only
+
+    from benchmarks import (fig1_levels, fig2_partitioning, fig3_breakdown,
+                            fig4_perlevel, roofline, table1_realworld)
+    t0 = time.time()
+    if want("fig1"):
+        print("# --- Fig 1: per-level time + frontier degree ---")
+        fig1_levels.main(["--scale", str(scale_small + 1)])
+    if want("fig2"):
+        print("# --- Fig 2: partitioning strategies x partition count ---")
+        fig2_partitioning.main(["--scale", str(scale_small)])
+        print("# --- Fig 2 right: TEPS across scales ---")
+        fig2_partitioning.main(["--scales"])
+    if want("fig3"):
+        print("# --- Fig 3: runtime breakdown ---")
+        fig3_breakdown.main(["--scale", str(scale_small)])
+    if want("fig4"):
+        print("# --- Fig 4: per-level classic vs direction-optimized ---")
+        fig4_perlevel.main(["--scale", str(scale_small)])
+    if want("table1"):
+        print("# --- Table 1: real-world stand-ins ---")
+        table1_realworld.main([])
+    if want("energy"):
+        print("# --- Energy model (paper 4.3 claims) ---")
+        from benchmarks import energy_model
+        energy_model.main([])
+    if want("roofline"):
+        print("# --- Roofline (from dry-run artifacts) ---")
+        import os
+        from benchmarks.common import RESULTS
+        roofline.main(["--markdown", os.path.join(RESULTS, "roofline.md")])
+    print(f"# total bench wall time: {time.time() - t0:.1f}s")
+
+
+if __name__ == "__main__":
+    main()

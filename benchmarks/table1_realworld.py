@@ -1,0 +1,62 @@
+"""Table 1: TEPS across real-world graph stand-ins for Naive (no §3.4
+optimizations) / optimized 1-partition / hybrid 4-partition, x top-down vs
+direction-optimized. (Galois column is N/A offline; the Naive column plays
+the unoptimized-baseline role.)
+"""
+import argparse
+import json
+
+import numpy as np
+
+
+def _one(graph_name, nparts, heuristic, naive, roots):
+    from repro.core import graph as G
+    from repro.launch.bfs_run import run
+
+    g = G.real_world_standin(graph_name)
+    if naive:
+        g = G.Graph(g.num_vertices, g.indptr, g.indices.copy(), g.degrees)
+        # undo degree ordering: sort each row ascending by neighbour id
+        import numpy as _np
+        for v in range(g.num_vertices):
+            lo, hi = g.indptr[v], g.indptr[v + 1]
+            g.indices[lo:hi] = _np.sort(g.indices[lo:hi])
+    res = run(scale=0, nparts=nparts, strategy="specialized", roots=roots,
+              heuristic=heuristic, graph=g)
+    print("RESULT " + json.dumps(res), flush=True)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graph", default="")
+    ap.add_argument("--nparts", type=int, default=0)
+    ap.add_argument("--heuristic", default="paper")
+    ap.add_argument("--naive", action="store_true")
+    ap.add_argument("--roots", type=int, default=3)
+    args = ap.parse_args(argv)
+    if args.nparts:
+        return _one(args.graph, args.nparts, args.heuristic, args.naive,
+                    args.roots)
+
+    from benchmarks.common import emit, run_with_devices
+    from repro.core.graph import REAL_WORLD_STANDINS
+    for graph in REAL_WORLD_STANDINS:
+        rows = [("naive_1P_td", 1, "topdown", True),
+                ("naive_1P_do", 1, "paper", True),
+                ("opt_1P_td", 1, "topdown", False),
+                ("opt_1P_do", 1, "paper", False),
+                ("hybrid_4P_do", 4, "paper", False)]
+        for label, nparts, heuristic, naive in rows:
+            extra = ["--naive"] if naive else []
+            out = run_with_devices(
+                "benchmarks.table1_realworld", max(nparts, 1),
+                ["--graph", graph, "--nparts", nparts,
+                 "--heuristic", heuristic, "--roots", args.roots] + extra)
+            res = json.loads([l for l in out.splitlines()
+                              if l.startswith("RESULT ")][-1][7:])
+            emit(f"table1_{graph}_{label}", 1e6 / max(res["teps_hmean"], 1),
+                 f"mteps={res['teps_hmean'] / 1e6:.2f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Batched serving example: prefill + streaming greedy decode with the same
+serve_step the multi-pod dry-run lowers (brief requirement b).
+
+  PYTHONPATH=src python examples/serve_lm.py --arch gemma2-9b --smoke
+"""
+import sys
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    main(sys.argv[1:] or ["--arch", "gemma2-9b", "--smoke",
+                          "--batch", "2", "--prompt-len", "24", "--gen", "8"])

@@ -1,0 +1,125 @@
+"""Checkpointing: atomic step snapshots with keep-k GC and elastic restore.
+
+Layout:
+  <dir>/step_000123/arrays.npz     flattened 'path/to/leaf' -> array
+  <dir>/step_000123/manifest.json  step, tree paths, dtypes, metadata
+  <dir>/LATEST                     atomic pointer (rename) -> step_000123
+
+Restore re-`device_put`s into whatever shardings the *current* mesh dictates,
+so a 512-chip checkpoint restores onto a degraded 448-chip re-mesh unchanged
+(elastic restart path, see ft/elastic.py). On real multi-host pods arrays.npz
+becomes per-host shard files with the same manifest contract.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import shutil
+import time
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+try:
+    import ml_dtypes
+    _CUSTOM_DTYPES = {"bfloat16": ml_dtypes.bfloat16,
+                      "float8_e4m3fn": getattr(ml_dtypes, "float8_e4m3fn", None),
+                      "float8_e5m2": getattr(ml_dtypes, "float8_e5m2", None)}
+except ImportError:  # pragma: no cover
+    _CUSTOM_DTYPES = {}
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = {}
+    for kp, leaf in flat:
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        out[key] = np.asarray(leaf)
+    return out
+
+
+def save(ckpt_dir: str | pathlib.Path, step: int, tree,
+         metadata: Optional[dict] = None, keep: int = 3) -> pathlib.Path:
+    """Atomically write a checkpoint; GC to the newest `keep` steps."""
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ckpt_dir.mkdir(parents=True, exist_ok=True)
+    name = f"step_{step:09d}"
+    tmp = ckpt_dir / f".tmp_{name}_{int(time.time() * 1e6)}"
+    tmp.mkdir()
+    arrays = _flatten(tree)
+    np.savez(tmp / "arrays.npz", **arrays)
+    manifest = {"step": step, "keys": sorted(arrays),
+                "dtypes": {k: str(v.dtype) for k, v in arrays.items()},
+                "metadata": metadata or {},
+                "written_at": time.time()}
+    (tmp / "manifest.json").write_text(json.dumps(manifest, indent=1))
+    final = ckpt_dir / name
+    if final.exists():
+        shutil.rmtree(final)
+    tmp.rename(final)                                   # atomic publish
+    latest_tmp = ckpt_dir / f".LATEST_{int(time.time() * 1e6)}"
+    latest_tmp.write_text(name)
+    latest_tmp.rename(ckpt_dir / "LATEST")              # atomic pointer swap
+    _gc(ckpt_dir, keep)
+    return final
+
+
+def _gc(ckpt_dir: pathlib.Path, keep: int):
+    steps = sorted(p for p in ckpt_dir.glob("step_*") if p.is_dir())
+    for p in steps[:-keep] if keep > 0 else []:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest_step(ckpt_dir: str | pathlib.Path) -> Optional[int]:
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    ptr = ckpt_dir / "LATEST"
+    if not ptr.exists():
+        return None
+    name = ptr.read_text().strip()
+    if not (ckpt_dir / name / "manifest.json").exists():
+        # torn write of the pointed-to dir: fall back to newest complete
+        steps = sorted(p.name for p in ckpt_dir.glob("step_*")
+                       if (p / "manifest.json").exists())
+        if not steps:
+            return None
+        name = steps[-1]
+    return int(name.split("_")[1])
+
+
+def restore(ckpt_dir: str | pathlib.Path, tree_like,
+            step: Optional[int] = None, shardings=None):
+    """Load into the structure of `tree_like`; returns (tree, step, metadata).
+
+    `shardings`: optional matching pytree of NamedShardings for the *current*
+    mesh (elastic re-mesh restore).
+    """
+    ckpt_dir = pathlib.Path(ckpt_dir)
+    if step is None:
+        step = latest_step(ckpt_dir)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {ckpt_dir}")
+    d = ckpt_dir / f"step_{step:09d}"
+    manifest = json.loads((d / "manifest.json").read_text())
+    with np.load(d / "arrays.npz") as z:
+        arrays = {k: z[k] for k in z.files}
+
+    flat = jax.tree_util.tree_flatten_with_path(tree_like)
+    paths, treedef = flat[0], flat[1]
+    leaves = []
+    shard_flat = (jax.tree.leaves(shardings) if shardings is not None
+                  else [None] * len(paths))
+    for (kp, proto), sh in zip(paths, shard_flat):
+        key = "/".join(str(getattr(k, "key", getattr(k, "idx", k))) for k in kp)
+        if key not in arrays:
+            raise KeyError(f"checkpoint missing leaf {key!r}")
+        arr = arrays[key]
+        want_dtype = manifest["dtypes"].get(key, "")
+        if arr.dtype.kind == "V" and _CUSTOM_DTYPES.get(want_dtype) is not None:
+            # npz stores ml_dtypes (bfloat16, fp8) as raw void records.
+            arr = arr.view(_CUSTOM_DTYPES[want_dtype])
+        if tuple(arr.shape) != tuple(proto.shape):
+            raise ValueError(f"{key}: shape {arr.shape} != {proto.shape}")
+        leaves.append(jax.device_put(arr, sh) if sh is not None
+                      else jax.numpy.asarray(arr))
+    return jax.tree.unflatten(treedef, leaves), step, manifest["metadata"]

@@ -1,0 +1,16 @@
+"""seamless-m4t-medium [audio] — enc-dec, multimodal [arXiv:2308.11596;
+hf]. Transformer backbone only; the audio frontend is a STUB per the
+brief: input_specs() supplies precomputed frame embeddings for the
+encoder."""
+import dataclasses
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="seamless-m4t-medium", family="encdec", n_layers=12,
+    n_enc_layers=12, d_model=1024, n_heads=16, n_kv=16, d_ff=4096,
+    vocab=256206, frontend="audio",
+    source="[arXiv:2308.11596; hf]")
+
+SMOKE = dataclasses.replace(
+    CONFIG, name="seamless-m4t-smoke", n_layers=2, n_enc_layers=2,
+    d_model=64, n_heads=4, n_kv=4, d_ff=128, vocab=256)

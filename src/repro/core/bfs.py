@@ -1,0 +1,309 @@
+"""Single-partition direction-optimized BFS in JAX (jit-compatible).
+
+Faithful to Beamer et al. / the paper's Algorithm 1, formulated with static
+shapes so the whole search (or one level) is a compiled XLA program:
+
+* **Top-down (push)**: the frontier is compacted into a queue; a
+  `lax.while_loop` walks its *edge slots* in fixed-size chunks (work
+  proportional to frontier edge mass, the direction-optimization invariant).
+  Ownership of an edge slot is recovered with a vectorized `searchsorted`
+  over the queue's degree prefix sum — the TPU-native replacement for the
+  GPU's per-thread edge binning ("virtual warp" has no TPU analogue; see
+  DESIGN.md §Hardware-adaptation).
+* **Bottom-up (pull)**: unvisited vertices are scanned in row chunks; each
+  chunk walks its adjacency in width-`bu_slab` slabs with a while-loop that
+  exits as soon as every row in the chunk found a frontier parent —
+  block-granularity early exit, enabled by the descending-degree adjacency
+  ordering (paper §3.4).
+* Direction switching implements both the paper's heuristic (static fraction
+  of total edges + fixed number of bottom-up rounds, §3.3) and Beamer's
+  alpha/beta heuristic.
+
+All vertex/edge indices are int32 (per-partition E < 2**31; the multi-pod
+sharding in `hybrid_bfs.py` keeps per-device edge counts far below this).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import frontier as fr
+from repro.core.graph import Graph
+
+INT_MAX = np.iinfo(np.int32).max
+
+
+@dataclasses.dataclass(frozen=True)
+class BFSConfig:
+    """Tuning + heuristic knobs (defaults follow the paper / Beamer)."""
+    heuristic: str = "paper"      # "paper" | "beamer" | "topdown" | "bottomup"
+    alpha: float = 14.0           # beamer: switch down when mf > mu/alpha
+    beta: float = 24.0            # beamer: switch up when nf < V/beta
+    gamma: float = 0.06           # paper: switch down when mf > gamma * E
+    fixed_bu_steps: int = 3       # paper: return to top-down after N BU rounds
+    td_chunk: int = 4096          # edge slots per top-down chunk
+    bu_chunk: int = 512           # rows per bottom-up chunk
+    bu_slab: int = 32             # neighbour slots per bottom-up slab
+    max_levels: int = 0           # 0 = num_vertices (safe upper bound)
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class DeviceGraph:
+    """CSR graph as device arrays (+ one-slot padding for queue-fill gathers)."""
+    indptr: jax.Array    # int32[V+1]
+    indices: jax.Array   # int32[E]
+    deg_ext: jax.Array   # int32[V+1]; deg_ext[V] == 0 (fill-vertex degree)
+    num_vertices: int
+    num_directed_edges: int
+
+    def tree_flatten(self):
+        return ((self.indptr, self.indices, self.deg_ext),
+                (self.num_vertices, self.num_directed_edges))
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves, *aux)
+
+    @classmethod
+    def from_graph(cls, g: Graph) -> "DeviceGraph":
+        assert g.num_directed_edges < INT_MAX, "per-partition E must be < 2^31"
+        deg_ext = np.zeros(g.num_vertices + 1, dtype=np.int32)
+        deg_ext[:g.num_vertices] = g.degrees
+        return cls(
+            indptr=jnp.asarray(g.indptr, dtype=jnp.int32),
+            indices=jnp.asarray(g.indices, dtype=jnp.int32),
+            deg_ext=jnp.asarray(deg_ext),
+            num_vertices=g.num_vertices,
+            num_directed_edges=g.num_directed_edges,
+        )
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BFSState:
+    visited: jax.Array    # uint8[V]
+    frontier: jax.Array   # uint8[V]
+    parent: jax.Array     # int32[V], INT_MAX = undiscovered
+    level: jax.Array      # int32[V], INT_MAX = undiscovered
+    cur_level: jax.Array  # int32 scalar
+    bu_mode: jax.Array    # bool scalar: currently bottom-up
+    bu_steps: jax.Array   # int32: bottom-up rounds taken
+    mu: jax.Array         # int32: edge mass of unvisited vertices
+
+    def tree_flatten(self):
+        return ((self.visited, self.frontier, self.parent, self.level,
+                 self.cur_level, self.bu_mode, self.bu_steps, self.mu), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def init_state(dg: DeviceGraph, root) -> BFSState:
+    v = dg.num_vertices
+    visited = jnp.zeros(v, jnp.uint8).at[root].set(1)
+    frontier = jnp.zeros(v, jnp.uint8).at[root].set(1)
+    parent = jnp.full(v, INT_MAX, jnp.int32).at[root].set(root)
+    level = jnp.full(v, INT_MAX, jnp.int32).at[root].set(0)
+    total_e = dg.deg_ext.sum(dtype=jnp.int32)
+    mu = total_e - dg.deg_ext[root]
+    return BFSState(visited, frontier, parent, level,
+                    jnp.int32(0), jnp.bool_(False), jnp.int32(0), mu)
+
+
+# ---------------------------------------------------------------- top-down --
+
+def _top_down_step(dg: DeviceGraph, cfg: BFSConfig, st: BFSState):
+    """One push level: work ~ frontier edge mass, chunked."""
+    v = dg.num_vertices
+    c = cfg.td_chunk
+    queue, _n = fr.compact(st.frontier)          # fill entries == v
+    degq = dg.deg_ext[queue]                     # 0 for fill
+    cum = jnp.cumsum(degq, dtype=jnp.int32)
+    total = cum[-1] if v else jnp.int32(0)
+
+    def body(carry):
+        base, next_flags, pcand = carry
+        slots = base + jnp.arange(c, dtype=jnp.int32)
+        valid = slots < total
+        owner = jnp.searchsorted(cum, slots, side="right").astype(jnp.int32)
+        owner = jnp.minimum(owner, v - 1)
+        src = queue[owner]
+        src = jnp.minimum(src, v - 1)            # fill guard (valid==False)
+        start = cum[owner] - degq[owner]
+        eidx = dg.indptr[src] + (slots - start)
+        eidx = jnp.clip(eidx, 0, dg.num_directed_edges - 1)
+        dst = jnp.where(valid, dg.indices[eidx], 0)
+        fresh = valid & (st.visited[dst] == 0)
+        next_flags = next_flags.at[dst].max(fresh.astype(jnp.uint8))
+        pcand = pcand.at[dst].min(jnp.where(fresh, src, INT_MAX))
+        return base + c, next_flags, pcand
+
+    def cond(carry):
+        return carry[0] < total
+
+    init = (jnp.int32(0), jnp.zeros(v, jnp.uint8), jnp.full(v, INT_MAX, jnp.int32))
+    _, next_flags, pcand = jax.lax.while_loop(cond, body, init)
+    parent = jnp.where(next_flags > 0, jnp.minimum(st.parent, pcand), st.parent)
+    return next_flags, parent
+
+
+# --------------------------------------------------------------- bottom-up --
+
+def _bottom_up_step(dg: DeviceGraph, cfg: BFSConfig, st: BFSState):
+    """One pull level: row chunks x adjacency slabs with block early exit."""
+    v = dg.num_vertices
+    r, w = min(cfg.bu_chunk, dg.num_vertices), cfg.bu_slab
+    unvisited = (st.visited == 0).astype(jnp.uint8)
+    queue, m = fr.compact(unvisited)             # fill entries == v
+
+    def chunk_body(carry):
+        base, next_flags, parent = carry
+        rows = jax.lax.dynamic_slice(queue, (base,), (r,))   # may include fill
+        rows_safe = jnp.minimum(rows, v)          # deg_ext[v] == 0
+        rdeg = dg.deg_ext[rows_safe]
+        rptr = jnp.where(rows < v, dg.indptr[jnp.minimum(rows, v - 1)], 0)
+
+        def slab_cond(sc):
+            s, found, _ = sc
+            return jnp.any(~found & (rdeg > s * w))
+
+        def slab_body(sc):
+            s, found, par = sc
+            col = s * w + jnp.arange(w, dtype=jnp.int32)
+            nidx = rptr[:, None] + col[None, :]
+            nvalid = (col[None, :] < rdeg[:, None]) & ~found[:, None]
+            nidx = jnp.clip(nidx, 0, dg.num_directed_edges - 1)
+            nbr = jnp.where(nvalid, dg.indices[nidx], 0)
+            hit = nvalid & (st.frontier[nbr] > 0)
+            anyhit = jnp.any(hit, axis=1)
+            first = jnp.argmax(hit, axis=1)
+            pcand = nbr[jnp.arange(r), first]
+            par = jnp.where(~found & anyhit, pcand, par)
+            return s + 1, found | anyhit, par
+
+        found0 = jnp.zeros(r, bool)
+        par0 = jnp.full(r, INT_MAX, jnp.int32)
+        _, found, par = jax.lax.while_loop(
+            slab_cond, slab_body, (jnp.int32(0), found0, par0))
+        # rows may contain the fill id v -> mode="drop" discards those.
+        next_flags = next_flags.at[rows].max(found.astype(jnp.uint8), mode="drop")
+        parent = parent.at[rows].min(jnp.where(found, par, INT_MAX), mode="drop")
+        return base + r, next_flags, parent
+
+    def chunk_cond(carry):
+        return carry[0] < m
+
+    init = (jnp.int32(0), jnp.zeros(v, jnp.uint8), st.parent)
+    _, next_flags, parent = jax.lax.while_loop(chunk_cond, chunk_body, init)
+    return next_flags, parent
+
+
+# ------------------------------------------------------------------ levels --
+
+def _decide_direction(dg: DeviceGraph, cfg: BFSConfig, st: BFSState,
+                      mf: jax.Array, nf: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Next-level direction (True = bottom-up) + updated bu_steps counter."""
+    v = dg.num_vertices
+    e = dg.num_directed_edges
+    if cfg.heuristic == "topdown":
+        return jnp.bool_(False), st.bu_steps
+    if cfg.heuristic == "bottomup":
+        return jnp.bool_(True), st.bu_steps
+    if cfg.heuristic == "beamer":
+        go_down = ~st.bu_mode & (mf.astype(jnp.float32) > st.mu.astype(jnp.float32) / cfg.alpha)
+        go_up = st.bu_mode & (nf.astype(jnp.float32) < v / cfg.beta)
+        bu = (st.bu_mode | go_down) & ~go_up
+        return bu, jnp.where(bu, st.bu_steps + 1, 0)
+    # Paper §3.3: down when frontier edge mass exceeds a static fraction of
+    # all edges; back up after a fixed number of bottom-up rounds.
+    go_down = ~st.bu_mode & (mf.astype(jnp.float32) > cfg.gamma * e)
+    stay_down = st.bu_mode & (st.bu_steps < cfg.fixed_bu_steps)
+    bu = go_down | stay_down
+    return bu, jnp.where(bu, st.bu_steps + 1, 0)
+
+
+def _advance(dg: DeviceGraph, cfg: BFSConfig, st: BFSState) -> BFSState:
+    """Advance one BFS level (direction decision + step + state merge)."""
+    mf = fr.edge_count(st.frontier, dg.deg_ext[:-1])
+    nf = fr.count(st.frontier)
+    bu, bu_steps = _decide_direction(dg, cfg, st, mf, nf)
+    next_flags, parent = jax.lax.cond(
+        bu,
+        lambda s: _bottom_up_step(dg, cfg, s),
+        lambda s: _top_down_step(dg, cfg, s),
+        st)
+    visited = jnp.maximum(st.visited, next_flags)
+    level = jnp.where(next_flags > 0, st.cur_level + 1, st.level)
+    mu = st.mu - fr.edge_count(next_flags, dg.deg_ext[:-1])
+    return BFSState(visited, next_flags, parent, level,
+                    st.cur_level + 1, bu, bu_steps, mu)
+
+
+def make_level_step(dg: DeviceGraph, cfg: BFSConfig):
+    """Returns a jitted `state -> state` advancing one BFS level."""
+    return jax.jit(functools.partial(_advance, dg, cfg))
+
+
+@functools.partial(jax.jit, static_argnums=(2,))
+def _bfs_jit(dg: DeviceGraph, root, cfg: BFSConfig):
+    st = init_state(dg, root)
+    max_levels = cfg.max_levels or dg.num_vertices
+
+    def cond(st: BFSState):
+        return (fr.count(st.frontier) > 0) & (st.cur_level < max_levels)
+
+    return jax.lax.while_loop(cond, functools.partial(_advance, dg, cfg), st)
+
+
+def finalize(st: BFSState) -> tuple[np.ndarray, np.ndarray]:
+    """Sentinels -> Graph500 conventions (-1 for unreached)."""
+    parent = np.asarray(st.parent)
+    level = np.asarray(st.level)
+    parent = np.where(parent == INT_MAX, -1, parent)
+    level = np.where(level == INT_MAX, -1, level)
+    return parent.astype(np.int32), level.astype(np.int32)
+
+
+def bfs(g: Graph | DeviceGraph, root: int,
+        cfg: BFSConfig = BFSConfig()) -> tuple[np.ndarray, np.ndarray]:
+    """Run a full direction-optimized BFS; returns (parent, level)."""
+    dg = g if isinstance(g, DeviceGraph) else DeviceGraph.from_graph(g)
+    st = _bfs_jit(dg, jnp.int32(root), cfg)
+    return finalize(st)
+
+
+def bfs_instrumented(g: Graph | DeviceGraph, root: int,
+                     cfg: BFSConfig = BFSConfig()):
+    """Level-by-level driver (python loop over the jitted step).
+
+    Returns (parent, level, per_level_stats) where stats is a list of dicts
+    with keys: level, direction, frontier_size, frontier_edges, seconds.
+    Used by the Fig-1/Fig-4 benchmarks.
+    """
+    import time
+    dg = g if isinstance(g, DeviceGraph) else DeviceGraph.from_graph(g)
+    step = make_level_step(dg, cfg)
+    st = jax.jit(lambda r: init_state(dg, r))(jnp.int32(root))
+    jax.block_until_ready(st.frontier)
+    stats = []
+    while int(fr.count(st.frontier)) > 0:
+        nf = int(fr.count(st.frontier))
+        mf = int(fr.edge_count(st.frontier, dg.deg_ext[:-1]))
+        t0 = time.perf_counter()
+        st = step(st)
+        jax.block_until_ready(st.frontier)
+        dt = time.perf_counter() - t0
+        stats.append(dict(level=int(st.cur_level), seconds=dt,
+                          direction="bu" if bool(st.bu_mode) else "td",
+                          frontier_size=nf, frontier_edges=mf))
+        if int(st.cur_level) > dg.num_vertices:
+            raise RuntimeError("BFS failed to terminate")
+    parent, level = finalize(st)
+    return parent, level, stats

@@ -1,0 +1,70 @@
+"""Bitmap frontier representation and helpers.
+
+Compute kernels operate on byte flags (uint8[V], 0/1) — scatter-friendly on
+TPU/XLA — while the *wire format* for cross-partition push/pull exchange is a
+packed uint32 bitmap (8x smaller: the paper's "bitmap frontier representation"
+plus its communication-reduction optimization). `pack`/`unpack` convert.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def num_words(num_vertices: int) -> int:
+    return (num_vertices + 31) // 32
+
+
+def pack(flags: jax.Array) -> jax.Array:
+    """uint8[V] 0/1 -> uint32[ceil(V/32)] little-bit-endian bitmap."""
+    v = flags.shape[0]
+    pad = (-v) % 32
+    f = jnp.pad(flags.astype(jnp.uint32), (0, pad)).reshape(-1, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    return jnp.sum(f << shifts, axis=1, dtype=jnp.uint32)
+
+
+def unpack(bitmap: jax.Array, num_vertices: int) -> jax.Array:
+    """uint32[W] -> uint8[V] 0/1."""
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    bits = (bitmap[:, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(-1)[:num_vertices].astype(jnp.uint8)
+
+
+def popcount(bitmap: jax.Array) -> jax.Array:
+    """Total set bits of a uint32 bitmap (SWAR popcount, vectorized)."""
+    x = bitmap
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return jnp.sum((x * jnp.uint32(0x01010101)) >> 24, dtype=jnp.int32)
+
+
+def count(flags: jax.Array) -> jax.Array:
+    return jnp.sum(flags, dtype=jnp.int32)
+
+
+def edge_count(flags: jax.Array, degrees: jax.Array) -> jax.Array:
+    """Number of edges incident to flagged vertices (frontier edge mass)."""
+    return jnp.sum(jnp.where(flags > 0, degrees.astype(jnp.int32), 0))
+
+
+def compact(flags: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Compact flagged vertex ids into a fixed-capacity queue.
+
+    Returns (queue int32[V] with valid entries first and V-fill after, n).
+    O(V) cumsum-scatter; jit-safe (static shapes).
+    """
+    v = flags.shape[0]
+    on = flags > 0
+    pos = jnp.cumsum(on.astype(jnp.int32)) - 1
+    n = pos[-1] + 1 if v else jnp.int32(0)
+    queue = jnp.full(v, v, dtype=jnp.int32)  # fill = V (out of range sentinel)
+    idx = jnp.where(on, pos, v)  # dropped when == v
+    queue = queue.at[idx].set(jnp.arange(v, dtype=jnp.int32), mode="drop")
+    return queue, n.astype(jnp.int32)
+
+
+def to_numpy_indices(flags: np.ndarray) -> np.ndarray:
+    return np.flatnonzero(np.asarray(flags))

@@ -1,0 +1,406 @@
+"""Partitioned direction-optimized BFS under `shard_map` (paper Alg. 1–3).
+
+BSP structure, faithful to §3.1:
+
+* Every device owns a partition's rows (CSR block with *global* columns) and
+  keeps replicated `visited`/`frontier` flags over the global (padded) id
+  space. The once-per-round **push** (after top-down) and **pull** (before
+  bottom-up consumption) of Algorithms 2/3 are realized as a single bitwise
+  OR all-reduce of the next-frontier flags — fixed-size, batched, exactly one
+  collective per BSP round (the paper's batch-communication optimization).
+* **Deferred parent aggregation** (§3.1): during traversal each device only
+  scatters parent *candidates* into a device-local array; one min-all-reduce
+  after termination assembles the BFS tree. Only visited bits travel per
+  round.
+* **Direction switching** (§3.3): every device evaluates the switch statistic
+  locally. In `coordinator="hub"` mode the statistic uses only the hub slice
+  of the frontier (ids < hub_count) — the paper's trick that the hubs alone
+  predict frontier growth, so no extra collective or vote is ever issued; the
+  bottom-up→top-down return is a fixed step count, also communication-free.
+
+The per-level compute mirrors `bfs.py` (chunked push queue; slab pull with
+block early exit) but runs on the device's `local_row_gid` row set, which
+uniformly expresses owned leaves, the hub0 layout, and delegated hub slices
+(see `partition.py`).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core import frontier as fr
+from repro.core.bfs import BFSConfig, INT_MAX
+from repro.core.partition import PartitionedGraph, PartitionPlan, unpermute, unpermute_ids
+
+
+@dataclasses.dataclass(frozen=True)
+class HybridConfig:
+    bfs: BFSConfig = BFSConfig()
+    coordinator: str = "hub"      # "hub" (paper §3.3) | "global"
+    exchange: str = "psum"        # "psum" (uint8 flags) | "bitmap" (packed OR)
+    axis_name: str = "part"
+
+
+# ------------------------------------------------------------- collectives --
+
+def _or_exchange(flags: jax.Array, cfg: HybridConfig) -> jax.Array:
+    """Merge per-device next-frontier flags: the push/pull of Algs. 2/3."""
+    ax = cfg.axis_name
+    if cfg.exchange == "psum":
+        # Sum of 0/1 contributions then clamp. Wire: one V-byte ring reduce.
+        summed = jax.lax.psum(flags.astype(jnp.int32), ax)
+        return (summed > 0).astype(jnp.uint8)
+    # Packed-bitmap variant: V/8 bytes per hop, OR-folded after all-gather.
+    packed = fr.pack(flags)
+    gathered = jax.lax.all_gather(packed, ax)          # [P, W]
+    merged = jax.lax.reduce(gathered, np.uint32(0), jax.lax.bitwise_or, (0,))
+    return fr.unpack(merged, flags.shape[0])
+
+
+# ---------------------------------------------------------------- per-level --
+
+def _local_top_down(pg_shapes, cfg: BFSConfig, indptr, indices, row_gid,
+                    visited, frontier):
+    """Push step over this device's rows. Returns (next_flags, parent_cand)."""
+    v_pad, r, e_local = pg_shapes
+    c = cfg.td_chunk
+    # Local rows whose global id is in the frontier (phantoms map to fill 0).
+    frontier_ext = jnp.concatenate([frontier, jnp.zeros(1, jnp.uint8)])
+    row_active = frontier_ext[jnp.minimum(row_gid, v_pad)]
+    queue, _n = fr.compact(row_active)                 # local row indices; fill==r
+    ldeg = indptr[1:] - indptr[:-1]
+    ldeg_ext = jnp.concatenate([ldeg, jnp.zeros(1, jnp.int32)])
+    degq = ldeg_ext[jnp.minimum(queue, r)]
+    cum = jnp.cumsum(degq, dtype=jnp.int32)
+    total = cum[-1]
+
+    def body(carry):
+        base, next_flags, pcand = carry
+        slots = base + jnp.arange(c, dtype=jnp.int32)
+        valid = slots < total
+        owner = jnp.searchsorted(cum, slots, side="right").astype(jnp.int32)
+        owner = jnp.minimum(owner, r - 1)
+        lrow = jnp.minimum(queue[owner], r - 1)
+        start = cum[owner] - degq[owner]
+        eidx = jnp.clip(indptr[lrow] + (slots - start), 0, e_local - 1)
+        dst = jnp.where(valid, indices[eidx], 0)
+        fresh = valid & (visited[dst] == 0)
+        src_gid = row_gid[lrow]
+        next_flags = next_flags.at[dst].max(fresh.astype(jnp.uint8))
+        pcand = pcand.at[dst].min(jnp.where(fresh, src_gid, INT_MAX))
+        return base + c, next_flags, pcand
+
+    init = (jnp.int32(0), jnp.zeros(v_pad, jnp.uint8),
+            jnp.full(v_pad, INT_MAX, jnp.int32))
+    _, next_flags, pcand = jax.lax.while_loop(
+        lambda cy: cy[0] < total, body, init)
+    return next_flags, pcand
+
+
+def _local_bottom_up(pg_shapes, cfg: BFSConfig, indptr, indices, row_gid,
+                     visited, frontier):
+    """Pull step over this device's unvisited rows (slab early exit)."""
+    v_pad, r, e_local = pg_shapes
+    rc, w = min(cfg.bu_chunk, r), cfg.bu_slab
+    visited_ext = jnp.concatenate([visited, jnp.ones(1, jnp.uint8)])  # phantom=visited
+    row_unvisited = (visited_ext[jnp.minimum(row_gid, v_pad)] == 0).astype(jnp.uint8)
+    queue, m = fr.compact(row_unvisited)               # local row idx; fill==r
+    ldeg = indptr[1:] - indptr[:-1]
+    ldeg_ext = jnp.concatenate([ldeg, jnp.zeros(1, jnp.int32)])
+
+    def chunk_body(carry):
+        base, next_flags, pcand = carry
+        lrows = jax.lax.dynamic_slice(queue, (base,), (rc,))
+        rdeg = ldeg_ext[jnp.minimum(lrows, r)]
+        lrows_c = jnp.minimum(lrows, r - 1)
+        rptr = indptr[lrows_c]
+        gid = row_gid[lrows_c]                          # scatter target (global)
+
+        def slab_cond(sc):
+            s, found, _ = sc
+            return jnp.any(~found & (rdeg > s * w))
+
+        def slab_body(sc):
+            s, found, par = sc
+            col = s * w + jnp.arange(w, dtype=jnp.int32)
+            nvalid = (col[None, :] < rdeg[:, None]) & ~found[:, None]
+            nidx = jnp.clip(rptr[:, None] + col[None, :], 0, e_local - 1)
+            nbr = jnp.where(nvalid, indices[nidx], 0)
+            hit = nvalid & (frontier[nbr] > 0)
+            anyhit = jnp.any(hit, axis=1)
+            first = jnp.argmax(hit, axis=1)
+            pc = nbr[jnp.arange(rc), first]
+            par = jnp.where(~found & anyhit, pc, par)
+            return s + 1, found | anyhit, par
+
+        _, found, par = jax.lax.while_loop(
+            slab_cond, slab_body,
+            (jnp.int32(0), jnp.zeros(rc, bool), jnp.full(rc, INT_MAX, jnp.int32)))
+        found = found & (lrows < r)
+        tgt = jnp.where(lrows < r, gid, v_pad)          # drop fill rows
+        next_flags = next_flags.at[tgt].max(found.astype(jnp.uint8), mode="drop")
+        pcand = pcand.at[tgt].min(jnp.where(found, par, INT_MAX), mode="drop")
+        return base + rc, next_flags, pcand
+
+    init = (jnp.int32(0), jnp.zeros(v_pad, jnp.uint8),
+            jnp.full(v_pad, INT_MAX, jnp.int32))
+    _, next_flags, pcand = jax.lax.while_loop(
+        lambda cy: cy[0] < m, chunk_body, init)
+    return next_flags, pcand
+
+
+# -------------------------------------------------------------- level loop --
+
+def _decide(hcfg: HybridConfig, cfg: BFSConfig, v_pad, e_total, hub_count,
+            frontier, deg, bu_mode, bu_steps, mu):
+    """Direction decision; identical on every device (no collective)."""
+    if hcfg.coordinator == "hub" and hub_count > 0:
+        # §3.3: hubs alone predict growth. Statistic from hub slice only.
+        hub_mask = jnp.arange(v_pad) < hub_count
+        mf = jnp.sum(jnp.where((frontier > 0) & hub_mask, deg, 0))
+    else:
+        mf = fr.edge_count(frontier, deg)
+    nf = fr.count(frontier)
+    if cfg.heuristic == "topdown":
+        return jnp.bool_(False), bu_steps
+    if cfg.heuristic == "beamer":
+        go_down = ~bu_mode & (mf.astype(jnp.float32) > mu.astype(jnp.float32) / cfg.alpha)
+        go_up = bu_mode & (nf.astype(jnp.float32) < v_pad / cfg.beta)
+        bu = (bu_mode | go_down) & ~go_up
+        return bu, jnp.where(bu, bu_steps + 1, 0)
+    go_down = ~bu_mode & (mf.astype(jnp.float32) > cfg.gamma * e_total)
+    stay_down = bu_mode & (bu_steps < cfg.fixed_bu_steps)
+    bu = go_down | stay_down
+    return bu, jnp.where(bu, bu_steps + 1, 0)
+
+
+def _device_bfs(pg_shapes, e_total, hub_count, hcfg: HybridConfig,
+                indptr, indices, row_gid, deg_ext, root):
+    """Whole-search body run per device inside shard_map."""
+    v_pad, r, e_local = pg_shapes
+    cfg = hcfg.bfs
+    indptr = indptr.reshape(-1)
+    indices = indices.reshape(-1)
+    row_gid = row_gid.reshape(-1)
+    deg = deg_ext[:-1]
+
+    visited = jnp.zeros(v_pad, jnp.uint8).at[root].set(1)
+    frontier = visited
+    pcand = jnp.full(v_pad, INT_MAX, jnp.int32).at[root].set(root)
+    lcand = jnp.full(v_pad, INT_MAX, jnp.int32).at[root].set(0)
+    mu = deg.sum(dtype=jnp.int32) - deg_ext[root]
+
+    def level(carry):
+        visited, frontier, pcand, lcand, cur, bu_mode, bu_steps, mu = carry
+        bu, bu_steps = _decide(hcfg, cfg, v_pad, e_total, hub_count,
+                               frontier, deg, bu_mode, bu_steps, mu)
+        nxt_local, pc_local = jax.lax.cond(
+            bu,
+            lambda: _local_bottom_up(pg_shapes, cfg, indptr, indices, row_gid,
+                                     visited, frontier),
+            lambda: _local_top_down(pg_shapes, cfg, indptr, indices, row_gid,
+                                    visited, frontier))
+        # ---- the one collective per BSP round (Algorithms 2/3) ----
+        nxt = _or_exchange(nxt_local, hcfg)
+        newly = jnp.where(visited > 0, 0, nxt).astype(jnp.uint8)
+        pcand = jnp.where(newly > 0, jnp.minimum(pcand, pc_local), pcand)
+        lcand = jnp.where(newly > 0, jnp.minimum(lcand, cur + 1), lcand)
+        visited = jnp.maximum(visited, newly)
+        mu = mu - fr.edge_count(newly, deg)
+        return (visited, newly, pcand, lcand, cur + 1, bu, bu_steps, mu)
+
+    def cond(carry):
+        frontier, cur = carry[1], carry[4]
+        return (fr.count(frontier) > 0) & (cur < v_pad)
+
+    carry = (visited, frontier, pcand, lcand, jnp.int32(0),
+             jnp.bool_(False), jnp.int32(0), mu)
+    visited, _, pcand, lcand, levels, _, _, _ = jax.lax.while_loop(
+        cond, level, carry)
+    # ---- deferred parent aggregation (§3.1): one min-reduce at the end ----
+    parent = jax.lax.pmin(pcand, hcfg.axis_name)
+    level_arr = jax.lax.pmin(lcand, hcfg.axis_name)
+    return parent, level_arr, levels
+
+
+def hybrid_bfs(pg: PartitionedGraph, root_orig: int,
+               hcfg: HybridConfig = HybridConfig(),
+               mesh: Optional[Mesh] = None):
+    """Run the partitioned BFS on `pg.n_parts` devices; returns orig-id results.
+
+    `root_orig` is in original vertex ids; results are mapped back through the
+    plan's permutation (parents as original ids, -1 unreached).
+    """
+    plan = pg.plan
+    n = plan.n_parts
+    if mesh is None:
+        devs = jax.devices()
+        if len(devs) < n:
+            raise RuntimeError(
+                f"need {n} devices for {n} partitions, have {len(devs)} "
+                "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)")
+        mesh = Mesh(np.array(devs[:n]), (hcfg.axis_name,))
+
+    inv = np.full(plan.v_orig, -1, dtype=np.int64)
+    real = plan.perm_new_to_old >= 0
+    inv[plan.perm_new_to_old[real]] = np.flatnonzero(real)
+    root_new = int(inv[root_orig])
+    assert root_new >= 0
+
+    v_pad, r = plan.v_pad, pg.num_local_rows
+    e_local = pg.local_indices.shape[1]
+    pg_shapes = (v_pad, r, e_local)
+
+    fn = functools.partial(_device_bfs, pg_shapes, pg.total_directed_edges,
+                           plan.hub_count, hcfg)
+    ax = hcfg.axis_name
+    shmapped = jax.shard_map(
+        fn, mesh=mesh,
+        in_specs=(P(ax), P(ax), P(ax), P(), P()),
+        out_specs=(P(), P(), P()),
+        check_vma=False)
+    run = jax.jit(shmapped)
+    parent_new, level_new, levels = run(
+        jnp.asarray(pg.local_indptr), jnp.asarray(pg.local_indices),
+        jnp.asarray(pg.local_row_gid), jnp.asarray(pg.deg_ext),
+        jnp.int32(root_new))
+    parent_new = np.asarray(parent_new)
+    level_new = np.asarray(level_new)
+    parent_new = np.where(parent_new == INT_MAX, -1, parent_new)
+    level_new = np.where(level_new == INT_MAX, -1, level_new)
+    parent = unpermute_ids(plan, parent_new)
+    level = unpermute(plan, level_new.astype(np.int64)).astype(np.int32)
+    return parent.astype(np.int32), level, int(levels)
+
+
+# -------------------------------------------------- instrumented BSP loop --
+
+def make_hybrid_stepper(pg: PartitionedGraph, hcfg: HybridConfig,
+                        mesh: Optional[Mesh] = None):
+    """Level-by-level driver pieces for the Fig. 3/4 benchmarks.
+
+    Returns (init_fn, compute_fn, exchange_fn, finalize_fn, root_mapper):
+    `compute_fn` runs one level's local TD/BU work on every partition (no
+    communication); `exchange_fn` is exactly the per-round push/pull merge +
+    state update. Timing them separately reproduces the paper's
+    computation-vs-communication breakdown with real collectives.
+    """
+    plan = pg.plan
+    n = plan.n_parts
+    if mesh is None:
+        devs = jax.devices()
+        if len(devs) < n:
+            raise RuntimeError(f"need {n} devices, have {len(devs)}")
+        mesh = Mesh(np.array(devs[:n]), (hcfg.axis_name,))
+    v_pad, r = plan.v_pad, pg.num_local_rows
+    e_local = pg.local_indices.shape[1]
+    pg_shapes = (v_pad, r, e_local)
+    cfg = hcfg.bfs
+    ax = hcfg.axis_name
+
+    inv = np.full(plan.v_orig, -1, dtype=np.int64)
+    real = plan.perm_new_to_old >= 0
+    inv[plan.perm_new_to_old[real]] = np.flatnonzero(real)
+
+    gl_indptr = jnp.asarray(pg.local_indptr)
+    gl_indices = jnp.asarray(pg.local_indices)
+    gl_rowgid = jnp.asarray(pg.local_row_gid)
+    gl_degext = jnp.asarray(pg.deg_ext)
+
+    def init_fn(root):
+        visited = jnp.zeros(v_pad, jnp.uint8).at[root].set(1)
+        pcand = jnp.full((n, v_pad), INT_MAX, jnp.int32).at[:, root].set(root)
+        mu = gl_degext[:-1].sum(dtype=jnp.int32) - gl_degext[root]
+        return dict(visited=visited, frontier=visited, pcand=pcand,
+                    cur=jnp.int32(0), bu=jnp.bool_(False),
+                    bu_steps=jnp.int32(0), mu=mu)
+
+    def _compute(indptr, indices, row_gid, visited, frontier, bu):
+        indptr, indices, row_gid = (indptr.reshape(-1), indices.reshape(-1),
+                                    row_gid.reshape(-1))
+        nxt, pc = jax.lax.cond(
+            bu,
+            lambda: _local_bottom_up(pg_shapes, cfg, indptr, indices, row_gid,
+                                     visited, frontier),
+            lambda: _local_top_down(pg_shapes, cfg, indptr, indices, row_gid,
+                                    visited, frontier))
+        return nxt[None], pc[None]
+
+    shm = jax.shard_map(_compute, mesh=mesh,
+                        in_specs=(P(ax), P(ax), P(ax), P(), P(), P()),
+                        out_specs=(P(ax), P(ax)), check_vma=False)
+
+    @jax.jit
+    def compute_fn(state):
+        bu, bu_steps = _decide(hcfg, cfg, v_pad, pg.total_directed_edges,
+                               plan.hub_count, state["frontier"],
+                               gl_degext[:-1], state["bu"], state["bu_steps"],
+                               state["mu"])
+        nxt_stack, pc_stack = shm(gl_indptr, gl_indices, gl_rowgid,
+                                  state["visited"], state["frontier"], bu)
+        return nxt_stack, pc_stack, bu, bu_steps
+
+    @jax.jit
+    def exchange_fn(state, nxt_stack, pc_stack, bu, bu_steps):
+        merged = (jnp.sum(nxt_stack.astype(jnp.int32), axis=0) > 0)
+        newly = jnp.where(state["visited"] > 0, 0, merged).astype(jnp.uint8)
+        pcand = jnp.where(newly[None] > 0,
+                          jnp.minimum(state["pcand"], pc_stack),
+                          state["pcand"])
+        visited = jnp.maximum(state["visited"], newly)
+        mu = state["mu"] - fr.edge_count(newly, gl_degext[:-1])
+        return dict(visited=visited, frontier=newly, pcand=pcand,
+                    cur=state["cur"] + 1, bu=bu, bu_steps=bu_steps, mu=mu)
+
+    @jax.jit
+    def finalize_fn(state):
+        return jnp.min(state["pcand"], axis=0)
+
+    def root_mapper(root_orig: int) -> int:
+        root_new = int(inv[root_orig])
+        assert root_new >= 0
+        return root_new
+
+    return init_fn, compute_fn, exchange_fn, finalize_fn, root_mapper
+
+
+def hybrid_bfs_instrumented(pg: PartitionedGraph, root_orig: int,
+                            hcfg: HybridConfig = HybridConfig(),
+                            mesh: Optional[Mesh] = None):
+    """Python-level BSP loop with per-level (compute, exchange) timing.
+
+    Returns (parent_orig, stats) where stats rows carry: level, direction,
+    frontier_size, compute_s, exchange_s.
+    """
+    import time as _time
+
+    init_fn, compute_fn, exchange_fn, finalize_fn, root_mapper = \
+        make_hybrid_stepper(pg, hcfg, mesh)
+    state = init_fn(root_mapper(root_orig))
+    jax.block_until_ready(state["frontier"])
+    stats = []
+    while int(jnp.sum(state["frontier"])) > 0:
+        nf = int(jnp.sum(state["frontier"]))
+        t0 = _time.perf_counter()
+        nxt_stack, pc_stack, bu, bu_steps = compute_fn(state)
+        jax.block_until_ready(nxt_stack)
+        t1 = _time.perf_counter()
+        state = exchange_fn(state, nxt_stack, pc_stack, bu, bu_steps)
+        jax.block_until_ready(state["frontier"])
+        t2 = _time.perf_counter()
+        stats.append(dict(level=int(state["cur"]),
+                          direction="bu" if bool(bu) else "td",
+                          frontier_size=nf,
+                          compute_s=t1 - t0, exchange_s=t2 - t1))
+        if int(state["cur"]) > pg.plan.v_pad:
+            raise RuntimeError("no termination")
+    parent_new = np.asarray(finalize_fn(state))
+    parent_new = np.where(parent_new == INT_MAX, -1, parent_new)
+    parent = unpermute_ids(pg.plan, parent_new)
+    return parent.astype(np.int32), stats

@@ -1,0 +1,104 @@
+"""Pallas TPU kernel: bottom-up BFS slab scan with block-level early exit.
+
+This is the paper's performance bottleneck (§3.2: "processing the low-degree
+vertices during the bottom-up steps is the main bottleneck") and therefore the
+compute hot-spot we hand-tile. The GPU implementation relies on the virtual-
+warp trick; the TPU-native formulation (DESIGN.md §Hardware-adaptation) is:
+
+* Rows (unvisited vertices) tiled into blocks of ``rblk`` VPU lanes; their
+  adjacency is ELL-packed ``[rblk, wmax]`` (degree-sorted per §3.4, so
+  frontier parents concentrate in the first slab).
+* The kernel walks the ELL tile ``slab`` columns at a time under a
+  `lax.while_loop` and exits as soon as every lane in the block has found a
+  frontier parent — early exit at *block* granularity, the TPU analogue of
+  the per-thread adjacency-scan break.
+* The frontier byte array lives in VMEM (one block). For graphs whose
+  frontier exceeds VMEM, the ops wrapper shards the id space first (the
+  hybrid partitioner already bounds per-device V).
+
+Grid: one program per row block. BlockSpecs put the row tile + outputs in
+VMEM; the frontier block is mapped whole (index_map -> block 0) so every
+program reuses the same resident copy.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bottomup_kernel(deg_ref, nbrs_ref, frontier_ref, found_ref, parent_ref,
+                     *, slab: int, int_max: int):
+    deg = deg_ref[...]                      # [rblk]
+    frontier = frontier_ref[...]            # [v]
+    rblk, wmax = nbrs_ref.shape
+    v = frontier.shape[0]
+    nslabs = wmax // slab
+
+    def cond(c):
+        s, found, _ = c
+        # Early exit: stop once no lane still needs neighbours >= s*slab.
+        return jnp.any(jnp.logical_not(found) & (deg > s * slab)) & (s < nslabs)
+
+    def body(c):
+        s, found, par = c
+        nbr = jax.lax.dynamic_slice(nbrs_ref[...], (0, s * slab), (rblk, slab))
+        cols = s * slab + jax.lax.broadcasted_iota(jnp.int32, (rblk, slab), 1)
+        valid = (cols < deg[:, None]) & jnp.logical_not(found)[:, None]
+        safe = jnp.clip(nbr, 0, v - 1)
+        fbits = jnp.take(frontier, safe.reshape(-1), axis=0).reshape(rblk, slab)
+        hit = valid & (fbits > 0)
+        anyhit = jnp.any(hit, axis=1)
+        first = jnp.argmax(hit, axis=1)
+        pcand = jnp.take_along_axis(safe, first[:, None], axis=1)[:, 0]
+        par = jnp.where(jnp.logical_not(found) & anyhit, pcand, par)
+        return s + 1, found | anyhit, par
+
+    found0 = jnp.zeros((rblk,), jnp.bool_)
+    par0 = jnp.full((rblk,), int_max, jnp.int32)
+    _, found, par = jax.lax.while_loop(cond, body, (jnp.int32(0), found0, par0))
+    found_ref[...] = found.astype(jnp.uint8)
+    parent_ref[...] = par
+
+
+def bottomup_pallas(deg: jax.Array, nbrs: jax.Array, frontier: jax.Array,
+                    *, slab: int = 32, rblk: int = 128,
+                    int_max: int = 2**31 - 1,
+                    interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Scan ELL rows against the frontier; returns (found uint8[R], parent int32[R]).
+
+    Args:
+      deg: int32[R] row degrees (0 rows are skipped).
+      nbrs: int32[R, W] ELL-packed neighbour ids (junk beyond deg is masked).
+      frontier: uint8[V] 0/1 frontier flags.
+      slab: neighbour slots scanned per early-exit check (VPU-lane multiple).
+      rblk: rows per grid program (8x128-friendly).
+    """
+    r, w = nbrs.shape
+    assert r % rblk == 0, f"rows {r} must pad to a multiple of rblk {rblk}"
+    wpad = (-w) % slab
+    if wpad:
+        nbrs = jnp.pad(nbrs, ((0, 0), (0, wpad)))
+    v = frontier.shape[0]
+    grid = (r // rblk,)
+    kernel = functools.partial(_bottomup_kernel, slab=slab, int_max=int_max)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((rblk,), lambda i: (i,)),
+            pl.BlockSpec((rblk, nbrs.shape[1]), lambda i: (i, 0)),
+            pl.BlockSpec((v,), lambda i: (0,)),      # frontier: VMEM-resident
+        ],
+        out_specs=[
+            pl.BlockSpec((rblk,), lambda i: (i,)),
+            pl.BlockSpec((rblk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r,), jnp.uint8),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(deg, nbrs, frontier)

@@ -1,0 +1,108 @@
+"""Pallas TPU kernel: fused flash-decode attention (one token vs KV cache).
+
+The roofline table shows every decode cell is memory-bound: the step cost is
+reading the KV cache once. The unfused path materializes the [B, H, S] score
+tensor and re-reads it across softmax/weighted-sum; this kernel streams the
+cache in S-blocks with running (max, sum, acc) statistics so HBM traffic is
+exactly one pass over K and V — the flash-decode schedule (beyond-paper
+optimization for the decode_32k / long_500k cells; EXPERIMENTS §Perf).
+
+Grid: (B, S/blk). TPU executes the S-blocks of a batch row sequentially, so
+the running stats live in revisited output refs (same idiom as
+frontier_fused); the last block normalizes. GQA is handled by folding query
+heads into [K, g] groups.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(q_ref, k_ref, v_ref, len_ref, out_ref, m_ref, l_ref,
+                   acc_ref, *, blk: int, logit_cap: float):
+    b = pl.program_id(0)
+    si = pl.program_id(1)
+    ns = pl.num_programs(1)
+
+    q = q_ref[...]                    # [1, K, g, h]
+    k = k_ref[...]                    # [1, blk, K, h]
+    v = v_ref[...]
+    clen = len_ref[0]
+    kk, g, h = q.shape[1], q.shape[2], q.shape[3]
+
+    @pl.when(si == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    s = jnp.einsum("kgh,skh->kgs", q[0].astype(jnp.float32),
+                   k[0].astype(jnp.float32)) * h ** -0.5
+    if logit_cap:
+        s = logit_cap * jnp.tanh(s / logit_cap)
+    pos = si * blk + jax.lax.broadcasted_iota(jnp.int32, (1, 1, blk), 2)
+    valid = pos < clen
+    s = jnp.where(valid, s, NEG_INF)
+
+    m_prev = m_ref[...]               # [1, K, g]
+    l_prev = l_ref[...]
+    acc_prev = acc_ref[...]           # [1, K, g, h]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1)[None])
+    p = jnp.where(valid, jnp.exp(s - m_new[0][..., None]), 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1)[None]
+    pv = jnp.einsum("kgs,skh->kgh", p, v[0].astype(jnp.float32))
+    acc_new = acc_prev * corr[..., None] + pv[None]
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+    acc_ref[...] = acc_new
+
+    @pl.when(si == ns - 1)
+    def _finalize():
+        out_ref[...] = (acc_new / jnp.maximum(l_new, 1e-30)[..., None]
+                        ).astype(out_ref.dtype)
+
+
+def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
+                            v_cache: jax.Array, cache_len: jax.Array, *,
+                            blk: int = 512, logit_cap: float = 0.0,
+                            interpret: bool = True) -> jax.Array:
+    """q: [B, K, g, h]; caches: [B, S, K, h]; cache_len: int32[B].
+
+    Returns [B, K, g, h] attention output (fp32 accumulation, q dtype out).
+    S must be a multiple of blk (ops wrapper pads with masked slots).
+    """
+    b, kk, g, h = q.shape
+    _, s, _, _ = k_cache.shape
+    assert s % blk == 0, f"S={s} must be a multiple of blk={blk}"
+    ns = s // blk
+    kernel = functools.partial(_decode_kernel, blk=blk, logit_cap=logit_cap)
+    out, _, _, _ = pl.pallas_call(
+        kernel,
+        grid=(b, ns),
+        in_specs=[
+            pl.BlockSpec((1, kk, g, h), lambda b_, s_: (b_, 0, 0, 0)),
+            pl.BlockSpec((1, blk, kk, h), lambda b_, s_: (b_, s_, 0, 0)),
+            pl.BlockSpec((1, blk, kk, h), lambda b_, s_: (b_, s_, 0, 0)),
+            pl.BlockSpec((1,), lambda b_, s_: (b_,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, kk, g, h), lambda b_, s_: (b_, 0, 0, 0)),
+            pl.BlockSpec((1, kk, g), lambda b_, s_: (b_, 0, 0)),
+            pl.BlockSpec((1, kk, g), lambda b_, s_: (b_, 0, 0)),
+            pl.BlockSpec((1, kk, g, h), lambda b_, s_: (b_, 0, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, kk, g, h), q.dtype),
+            jax.ShapeDtypeStruct((b, kk, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kk, g), jnp.float32),
+            jax.ShapeDtypeStruct((b, kk, g, h), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k_cache, v_cache, cache_len)
+    return out

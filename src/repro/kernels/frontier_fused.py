@@ -1,0 +1,75 @@
+"""Pallas TPU kernel: fused frontier pack + statistics.
+
+Every BSP round needs (a) the packed uint32 bitmap of the next frontier (the
+wire format for the push/pull exchange), (b) the frontier size ``nf`` and
+(c) its edge mass ``mf`` (the §3.3 switch statistic). Fusing the three into
+one VMEM pass removes two extra traversals of the V-byte flag array — on TPU
+these are bandwidth-bound, so the fusion is a straight 3x->1x HBM-traffic
+win for the frontier bookkeeping.
+
+Pure vector ops (shifts, masks, reductions): no gathers, Mosaic-clean.
+Grid tiles the flag array in 32*lanes-sized chunks; scalar stats accumulate
+into SMEM-like (1,)-shaped outputs via the revisiting-output idiom.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _fused_kernel(flags_ref, deg_ref, packed_ref, nf_ref, mf_ref):
+    i = pl.program_id(0)
+    flags = flags_ref[...].astype(jnp.uint32)        # [blk*32]
+    deg = deg_ref[...]                                # [blk*32]
+    blk32 = flags.shape[0]
+    # Pack: 32 consecutive flags -> one uint32 word.
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (blk32 // 32, 32), 1)
+    words = jnp.sum(flags.reshape(-1, 32) << shifts, axis=1, dtype=jnp.uint32)
+    packed_ref[...] = words
+    on = flags > 0
+    nf = jnp.sum(on.astype(jnp.int32))
+    mf = jnp.sum(jnp.where(on, deg, 0), dtype=jnp.int32)
+
+    @pl.when(i == 0)
+    def _init():
+        nf_ref[...] = jnp.zeros_like(nf_ref)
+        mf_ref[...] = jnp.zeros_like(mf_ref)
+
+    nf_ref[...] += nf
+    mf_ref[...] += mf
+
+
+def frontier_fused_pallas(flags: jax.Array, deg: jax.Array, *,
+                          blk_words: int = 256,
+                          interpret: bool = True):
+    """Returns (packed uint32[V/32], nf int32, mf int32) in one pass.
+
+    V must be a multiple of 32*blk_words (ops wrapper pads).
+    """
+    v = flags.shape[0]
+    blk = blk_words * 32
+    assert v % blk == 0, f"V={v} must be a multiple of {blk}"
+    grid = (v // blk,)
+    packed, nf, mf = pl.pallas_call(
+        _fused_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((blk,), lambda i: (i,)),
+            pl.BlockSpec((blk,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((blk_words,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (0,)),       # revisited accumulator
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((v // 32,), jnp.uint32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+            jax.ShapeDtypeStruct((1,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(flags, deg)
+    return packed, nf[0], mf[0]

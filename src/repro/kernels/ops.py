@@ -1,0 +1,87 @@
+"""Jitted public wrappers for the Pallas kernels (padding + dispatch).
+
+`interpret` defaults to auto: real Mosaic lowering on TPU backends,
+interpret mode elsewhere (this container is CPU-only; TPU is the target).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import bottomup as _bu
+from repro.kernels import decode_attn as _da
+from repro.kernels import frontier_fused as _ff
+from repro.kernels import topdown as _td
+
+
+def _auto_interpret(interpret):
+    if interpret is None:
+        return jax.default_backend() != "tpu"
+    return interpret
+
+
+def _pad_rows(x, mult, fill=0):
+    pad = (-x.shape[0]) % mult
+    if pad:
+        cfg = [(0, pad)] + [(0, 0)] * (x.ndim - 1)
+        x = jnp.pad(x, cfg, constant_values=fill)
+    return x, pad
+
+
+@functools.partial(jax.jit, static_argnames=("slab", "rblk", "interpret"))
+def bottomup(deg, nbrs, frontier, *, slab=32, rblk=128, interpret=None):
+    """Bottom-up slab scan: (found uint8[R], parent int32[R]). Pads rows."""
+    r = nbrs.shape[0]
+    deg_p, _ = _pad_rows(deg, rblk)
+    nbrs_p, _ = _pad_rows(nbrs, rblk)
+    found, parent = _bu.bottomup_pallas(
+        deg_p, nbrs_p, frontier, slab=slab, rblk=rblk,
+        interpret=_auto_interpret(interpret))
+    return found[:r], parent[:r]
+
+
+@functools.partial(jax.jit, static_argnames=("blk_words", "interpret"))
+def frontier_fused(flags, deg, *, blk_words=256, interpret=None):
+    """Fused pack+count+edge-mass: (packed uint32[ceil(V/32)], nf, mf)."""
+    v = flags.shape[0]
+    blk = blk_words * 32
+    flags_p, _ = _pad_rows(flags, blk)
+    deg_p, _ = _pad_rows(deg, blk)
+    packed, nf, mf = _ff.frontier_fused_pallas(
+        flags_p, deg_p, blk_words=blk_words,
+        interpret=_auto_interpret(interpret))
+    return packed[: (v + 31) // 32], nf, mf
+
+
+@functools.partial(jax.jit, static_argnames=("cblk", "interpret"))
+def topdown(deg, nbrs, visited, *, cblk=128, interpret=None):
+    """Top-down expansion check: (fresh uint8[C,W], dst int32[C,W])."""
+    c = nbrs.shape[0]
+    deg_p, _ = _pad_rows(deg, cblk)
+    nbrs_p, _ = _pad_rows(nbrs, cblk)
+    fresh, dst = _td.topdown_pallas(
+        deg_p, nbrs_p, visited, cblk=cblk,
+        interpret=_auto_interpret(interpret))
+    return fresh[:c], dst[:c]
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "logit_cap", "interpret"))
+def decode_attention(q, k_cache, v_cache, cache_len, *, blk=512,
+                     logit_cap=0.0, interpret=None):
+    """Flash-decode attention: q [B,K,g,h] x caches [B,S,K,h] -> [B,K,g,h].
+
+    Pads the cache sequence to a block multiple (padded slots are masked by
+    cache_len, which is never larger than the true S).
+    """
+    b, s = k_cache.shape[0], k_cache.shape[1]
+    blk = min(blk, max(s, 1))
+    pad = (-s) % blk
+    if pad:
+        cfgp = ((0, 0), (0, pad), (0, 0), (0, 0))
+        k_cache = jnp.pad(k_cache, cfgp)
+        v_cache = jnp.pad(v_cache, cfgp)
+    return _da.decode_attention_pallas(
+        q, k_cache, v_cache, cache_len, blk=blk, logit_cap=logit_cap,
+        interpret=_auto_interpret(interpret))

@@ -1,0 +1,58 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+INT_MAX = 2**31 - 1
+
+
+def bottomup_ref(deg: jax.Array, nbrs: jax.Array, frontier: jax.Array,
+                 *, int_max: int = INT_MAX) -> tuple[jax.Array, jax.Array]:
+    """Oracle for `bottomup.bottomup_pallas` (no early exit: full scan).
+
+    Semantics contract: for each row, `found` iff some valid neighbour slot
+    is in the frontier; `parent` is the neighbour at the FIRST such slot
+    (matching the kernel's slab-ordered first hit), else int_max.
+    """
+    r, w = nbrs.shape
+    v = frontier.shape[0]
+    cols = jnp.arange(w, dtype=jnp.int32)[None, :]
+    valid = cols < deg[:, None]
+    safe = jnp.clip(nbrs, 0, v - 1)
+    hit = valid & (frontier[safe] > 0)
+    found = jnp.any(hit, axis=1)
+    first = jnp.argmax(hit, axis=1)
+    parent = jnp.take_along_axis(safe, first[:, None], axis=1)[:, 0]
+    parent = jnp.where(found, parent, int_max)
+    return found.astype(jnp.uint8), parent
+
+
+def frontier_fused_ref(flags: jax.Array, deg: jax.Array):
+    """Oracle for `frontier_fused.frontier_fused_pallas`."""
+    from repro.core import frontier as fr
+    packed = fr.pack(flags)
+    nf = fr.count(flags)
+    mf = fr.edge_count(flags, deg)
+    return packed, nf, mf
+
+
+def topdown_ref(deg: jax.Array, nbrs: jax.Array, visited: jax.Array):
+    """Oracle for `topdown.topdown_pallas`."""
+    c, w = nbrs.shape
+    v = visited.shape[0]
+    cols = jnp.arange(w, dtype=jnp.int32)[None, :]
+    valid = cols < deg[:, None]
+    safe = jnp.clip(nbrs, 0, v - 1)
+    fresh = valid & (visited[safe] == 0)
+    return fresh.astype(jnp.uint8), safe
+
+
+def decode_attention_ref(q, k_cache, v_cache, cache_len, *, logit_cap=0.0):
+    """Oracle for `decode_attn.decode_attention_pallas` (reuses the
+    production jnp path in models/layers.py)."""
+    from repro.models.layers import decode_attention
+    b, kk, g, h = q.shape
+    out = decode_attention(q.reshape(b, 1, kk * g, h), k_cache, v_cache,
+                           cache_len, logit_cap=logit_cap)
+    return out.reshape(b, kk, g, h)

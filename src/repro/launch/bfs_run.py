@@ -1,0 +1,109 @@
+"""The paper's workload driver: graph -> partition -> hybrid BFS -> TEPS.
+
+Graph500-style methodology: N search roots sampled from non-isolated
+vertices, harmonic-mean TEPS (undirected edges / time), parent-tree
+validation per run.
+
+  PYTHONPATH=src python -m repro.launch.bfs_run --scale 14 --nparts 4 \
+      --strategy specialized     # needs XLA_FLAGS device_count >= nparts
+"""
+from __future__ import annotations
+
+import argparse
+import statistics
+import time
+
+import numpy as np
+
+
+def run(scale: int, nparts: int, strategy: str, roots: int = 8,
+        heuristic: str = "paper", edgefactor: int = 16, seed: int = 0,
+        validate: bool = True, graph=None):
+    import jax
+
+    from repro.core import graph as G
+    from repro.core import partition as PT
+    from repro.core import ref
+    from repro.core.bfs import BFSConfig
+    from repro.core.hybrid_bfs import HybridConfig, hybrid_bfs
+
+    g = graph if graph is not None else G.rmat(scale, edgefactor=edgefactor,
+                                               seed=seed)
+    rng = np.random.default_rng(seed)
+    candidates = np.flatnonzero(g.degrees > 0)
+    root_list = rng.choice(candidates, size=roots, replace=False)
+    bcfg = BFSConfig(heuristic=heuristic)
+
+    if nparts == 1:
+        # Fast path: one partition needs no shard_map/BSP machinery — the
+        # whole search is a single fused XLA program (the paper's "2S"
+        # column analogue).
+        from repro.core import bfs as BFS
+        import jax
+        import jax.numpy as jnp
+        dg = BFS.DeviceGraph.from_graph(g)
+        st = BFS._bfs_jit(dg, jnp.int32(int(root_list[0])), bcfg)
+        jax.block_until_ready(st.frontier)             # compile+warm
+        teps_list, times = [], []
+        for root in root_list:
+            t0 = time.perf_counter()
+            st = BFS._bfs_jit(dg, jnp.int32(int(root)), bcfg)
+            jax.block_until_ready(st.frontier)
+            dt = time.perf_counter() - t0
+            parent, level = BFS.finalize(st)
+            if validate:
+                ref.validate_parents(g, int(root), parent, level)
+            times.append(dt)
+            teps_list.append(g.num_undirected_edges / dt)
+        hmean = statistics.harmonic_mean(teps_list)
+        return {"scale": scale, "nparts": nparts, "strategy": strategy,
+                "heuristic": heuristic, "teps_hmean": hmean,
+                "teps_min": min(teps_list), "teps_max": max(teps_list),
+                "mean_s": sum(times) / len(times),
+                "V": g.num_vertices, "E_undirected": g.num_undirected_edges}
+
+    plan = PT.make_plan(g, nparts, strategy)
+    pg = PT.apply_plan(g, plan)
+    hcfg = HybridConfig(bfs=bcfg)
+
+    # warmup/compile
+    hybrid_bfs(pg, int(root_list[0]), hcfg)
+    teps_list, times = [], []
+    for root in root_list:
+        t0 = time.perf_counter()
+        parent, level, nlevels = hybrid_bfs(pg, int(root), hcfg)
+        dt = time.perf_counter() - t0
+        if validate:
+            ref.validate_parents(g, int(root), parent, level)
+        times.append(dt)
+        teps_list.append(g.num_undirected_edges / dt)
+    hmean = statistics.harmonic_mean(teps_list)
+    return {"scale": scale, "nparts": nparts, "strategy": strategy,
+            "heuristic": heuristic, "teps_hmean": hmean,
+            "teps_min": min(teps_list), "teps_max": max(teps_list),
+            "mean_s": sum(times) / len(times),
+            "V": g.num_vertices, "E_undirected": g.num_undirected_edges}
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--scale", type=int, default=14)
+    ap.add_argument("--edgefactor", type=int, default=16)
+    ap.add_argument("--nparts", type=int, default=1)
+    ap.add_argument("--strategy", default="specialized",
+                    choices=("random", "hub0", "specialized"))
+    ap.add_argument("--heuristic", default="paper",
+                    choices=("paper", "beamer", "topdown", "bottomup"))
+    ap.add_argument("--roots", type=int, default=8)
+    ap.add_argument("--no-validate", action="store_true")
+    args = ap.parse_args(argv)
+    res = run(args.scale, args.nparts, args.strategy, args.roots,
+              args.heuristic, args.edgefactor, validate=not args.no_validate)
+    print(f"[bfs] scale={res['scale']} V={res['V']} E={res['E_undirected']} "
+          f"P={res['nparts']} {res['strategy']}/{res['heuristic']}: "
+          f"{res['teps_hmean'] / 1e6:.2f} MTEPS (hmean over {args.roots} roots)")
+    return res
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,333 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this proves the sharding config is coherent at production
+scale (SPMD partitioning succeeds, no unsupported collective, memory fits)
+and extracts the roofline inputs:
+
+  * compiled.memory_analysis()  -> bytes/device
+  * compiled.cost_analysis()    -> HLO FLOPs + HBM bytes
+  * compiled.as_text() parse    -> per-device collective bytes by op kind
+
+Results append to benchmarks/results/dryrun.json (one record per cell) which
+benchmarks/roofline.py turns into EXPERIMENTS.md §Roofline.
+
+Usage:
+  python -m repro.launch.dryrun --arch yi-9b --shape train_4k [--multi-pod]
+  python -m repro.launch.dryrun --all [--multi-pod] [--skip-done]
+"""
+import argparse
+import dataclasses
+import json
+import pathlib
+import re
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ARCHS, get_config
+from repro.configs.shapes import SHAPES, cell_applicable, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import decode as D
+from repro.models import model as MODEL
+from repro.parallel import sharding as SH
+from repro.train.optimizer import OptConfig, init_opt_state
+from repro.train.serve_step import make_decode_step, make_prefill_step
+from repro.train.train_step import make_train_step
+
+RESULTS = pathlib.Path(__file__).resolve().parents[3] / "benchmarks" / "results"
+
+# Giant-MoE memory recipe: FSDP over (pod,data) + bf16 moments (DESIGN §6).
+GIANT = {"qwen3-moe-235b-a22b", "llama4-maverick-400b-a17b"}
+
+_COLL_RE = re.compile(
+    r"(\w[\w\.\-]*)\s*=\s*(\([^)]*\)|\S+)\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)")
+_SHAPE_RE = re.compile(r"(f64|f32|f16|bf16|s64|s32|s16|s8|u64|u32|u16|u8|pred)"
+                       r"\[([0-9,]*)\]")
+_BYTES = {"f64": 8, "s64": 8, "u64": 8, "f32": 4, "s32": 4, "u32": 4,
+          "f16": 2, "bf16": 2, "s16": 2, "u16": 2, "s8": 1, "u8": 1, "pred": 1}
+
+
+def _shape_bytes(txt: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(txt):
+        n = 1
+        for d in dims.split(","):
+            if d.strip():
+                n *= int(d)
+        total += n * _BYTES[dt]
+    return total
+
+
+def collective_bytes(hlo_text: str) -> dict[str, int]:
+    """Per-device collective traffic by op kind, from partitioned HLO."""
+    out: dict[str, int] = {}
+    for line in hlo_text.splitlines():
+        m = _COLL_RE.search(line)
+        if not m or "-start" in line and "-done" in line:
+            continue
+        kind = m.group(3)
+        if f" {kind}-done" in line:
+            continue  # avoid double counting async pairs
+        out[kind] = out.get(kind, 0) + _shape_bytes(m.group(2))
+    return out
+
+
+# ------------------------------------------------------- analytic model flops
+
+def count_params(tree) -> int:
+    return sum(int(np.prod(l.shape)) for l in jax.tree.leaves(tree))
+
+
+def active_params(cfg, params_shapes) -> int:
+    """Active params/token (MoE discounts inactive experts)."""
+    total = count_params(params_shapes)
+    if cfg.n_experts and cfg.top_k:
+        expert = 3 * cfg.d_model * cfg.moe_d_ff
+        n_moe_layers = cfg.n_layers // (2 if cfg.alt_dense_moe else 1)
+        inactive = n_moe_layers * (cfg.n_experts - cfg.top_k) * expert
+        total -= inactive
+    return total
+
+
+def model_flops(cfg, params_shapes, shape_name: str) -> float:
+    """6*N_active*D for train; 2*N_active*D for prefill; 2*N_active*B + KV
+    read-dominated for decode (FLOPs side only)."""
+    cell = SHAPES[shape_name]
+    n_act = active_params(cfg, params_shapes)
+    tokens = cell.global_batch * cell.seq_len
+    if cell.kind == "train":
+        return 6.0 * n_act * tokens
+    if cell.kind == "prefill":
+        return 2.0 * n_act * tokens
+    # decode: one token per sequence + attention over the cache
+    attn = 0.0
+    if cfg.n_heads:
+        attn = (4.0 * cfg.n_layers * cfg.n_heads * cfg.head_dim
+                * cell.seq_len * cell.global_batch)
+    return 2.0 * n_act * cell.global_batch + attn
+
+
+# ------------------------------------------------------------- cell lowering
+
+def lower_cell(arch: str, shape: str, multi_pod: bool, cfg_override=None):
+    cfg = cfg_override or get_config(arch)
+    cell = SHAPES[shape]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    fsdp = ("pod", "data") if (arch in GIANT and multi_pod) else ("data",)
+    rules = SH.AxisRules(fsdp_axes=fsdp)
+    ocfg = OptConfig(moment_dtype="bfloat16" if arch in GIANT else "float32")
+
+    params_sh = MODEL.param_shapes(cfg)
+    pspecs = SH.param_specs(cfg, params_sh, mesh, rules)
+    p_shard = SH.to_shardings(pspecs, mesh)
+    inputs = input_specs(cfg, shape)
+    in_shard_inputs = SH.to_shardings(SH.batch_specs(inputs, mesh, rules), mesh)
+
+    ctx = SH.activate(mesh, rules)
+    if cell.kind == "train":
+        opt_sh = jax.eval_shape(lambda p: init_opt_state(p, ocfg), params_sh)
+        o_shard = {"m": p_shard, "v": p_shard,
+                   "step": SH.to_shardings(P(), mesh)}
+        fn = make_train_step(cfg, ocfg)
+        jfn = jax.jit(fn,
+                      in_shardings=(p_shard, o_shard, in_shard_inputs),
+                      out_shardings=(p_shard, o_shard, None),
+                      donate_argnums=(0, 1))
+        with ctx:
+            lowered = jfn.lower(params_sh, opt_sh, inputs)
+    elif cell.kind == "prefill":
+        fn = make_prefill_step(cfg, ctx_len=cell.seq_len)
+        jfn = jax.jit(fn, in_shardings=(p_shard, in_shard_inputs))
+        with ctx:
+            lowered = jfn.lower(params_sh, inputs)
+    else:  # decode
+        cache_sh = D.cache_shapes(cfg, cell.global_batch, cell.seq_len,
+                                  enc_len=min(cell.seq_len, 32768))
+        cspecs = SH.cache_specs(cache_sh, mesh, rules)
+        c_shard = SH.to_shardings(cspecs, mesh)
+        fn = make_decode_step(cfg)
+        jfn = jax.jit(fn,
+                      in_shardings=(p_shard, c_shard, in_shard_inputs["tokens"],
+                                    in_shard_inputs["positions"]),
+                      out_shardings=(None, c_shard),
+                      donate_argnums=(1,))
+        with ctx:
+            lowered = jfn.lower(params_sh, cache_sh, inputs["tokens"],
+                                inputs["positions"])
+    return cfg, mesh, params_sh, lowered
+
+
+def n_bodies(cfg) -> int:
+    if cfg.alt_local_global or cfg.alt_dense_moe:
+        return cfg.n_layers // 2
+    return cfg.n_layers
+
+
+def probe_cfg(cfg, bodies: int):
+    per = 2 if (cfg.alt_local_global or cfg.alt_dense_moe) else 1
+    lyr = bodies * per
+    rep = {"n_layers": lyr}
+    if cfg.n_enc_layers:
+        rep["n_enc_layers"] = lyr
+    return dataclasses.replace(cfg, **rep)
+
+
+def probe_cell(arch: str, shape: str, multi_pod: bool) -> dict:
+    """Two unrolled reduced-depth lowerings -> scan-corrected totals.
+
+    XLA cost analysis counts while bodies once (see models/flags.py); the
+    probes give per-body costs to extrapolate: total = base + n * per_body.
+    """
+    from repro.models import flags
+    cfg = get_config(arch)
+    res = {}
+    flags.UNROLL_SCANS, flags.FLASH_ONE_BLOCK = True, True
+    try:
+        for b in (1, 2):
+            pc = probe_cfg(cfg, b)
+            _, _, _, lowered = lower_cell(arch, shape, multi_pod,
+                                          cfg_override=pc)
+            comp = lowered.compile()
+            cost = comp.cost_analysis()
+            cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+            coll = collective_bytes(comp.as_text())
+            res[b] = {"flops": float(cost.get("flops", 0.0)),
+                      "bytes": float(cost.get("bytes accessed", 0.0)),
+                      "coll": coll}
+    finally:
+        flags.UNROLL_SCANS, flags.FLASH_ONE_BLOCK = False, False
+    n = n_bodies(cfg)
+    out = {"probe_bodies": res}
+    for key in ("flops", "bytes"):
+        per = res[2][key] - res[1][key]
+        out[f"{key}_est"] = max(res[1][key] + (n - 1) * per, res[1][key])
+    kinds = set(res[1]["coll"]) | set(res[2]["coll"])
+    coll_est = {}
+    for k in kinds:
+        c1, c2 = res[1]["coll"].get(k, 0), res[2]["coll"].get(k, 0)
+        coll_est[k] = max(c1 + (n - 1) * (c2 - c1), c1)
+    out["collective_bytes_est"] = coll_est
+    return out
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool) -> dict:
+    rec = {"arch": arch, "shape": shape,
+           "mesh": "2x16x16" if multi_pod else "16x16",
+           "status": "ok"}
+    cfg = get_config(arch)
+    ok, reason = cell_applicable(cfg, shape)
+    if not ok:
+        rec.update(status="skipped", reason=reason)
+        return rec
+    t0 = time.time()
+    cfg, mesh, params_sh, lowered = lower_cell(arch, shape, multi_pod)
+    rec["lower_s"] = round(time.time() - t0, 1)
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 1)
+
+    try:
+        mem = compiled.memory_analysis()
+        rec["bytes_per_device"] = int(getattr(mem, "temp_size_in_bytes", 0) +
+                                      getattr(mem, "argument_size_in_bytes", 0) +
+                                      getattr(mem, "output_size_in_bytes", 0) -
+                                      getattr(mem, "alias_size_in_bytes", 0))
+        rec["temp_bytes"] = int(getattr(mem, "temp_size_in_bytes", 0))
+        rec["arg_bytes"] = int(getattr(mem, "argument_size_in_bytes", 0))
+    except Exception as e:  # pragma: no cover
+        rec["memory_analysis_error"] = str(e)
+    try:
+        cost = compiled.cost_analysis()
+        cost = cost[0] if isinstance(cost, (list, tuple)) else cost
+        rec["hlo_flops"] = float(cost.get("flops", 0.0))
+        rec["hlo_bytes"] = float(cost.get("bytes accessed", 0.0))
+        rec["hlo_transcendentals"] = float(cost.get("transcendentals", 0.0))
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis_error"] = str(e)
+    try:
+        txt = compiled.as_text()
+        rec["collective_bytes"] = collective_bytes(txt)
+        rec["hlo_collective_ops"] = sum(
+            txt.count(f" {k}") for k in
+            ("all-gather(", "all-reduce(", "reduce-scatter(",
+             "all-to-all(", "collective-permute("))
+    except Exception as e:  # pragma: no cover
+        rec["hlo_parse_error"] = str(e)
+
+    try:
+        rec.update(probe_cell(arch, shape, multi_pod))
+    except Exception as e:  # pragma: no cover
+        rec["probe_error"] = f"{type(e).__name__}: {e}"
+
+    rec["params_total"] = count_params(params_sh)
+    rec["params_active"] = active_params(cfg, params_sh)
+    rec["model_flops"] = model_flops(cfg, params_sh, shape)
+    rec["n_devices"] = mesh.devices.size
+    return rec
+
+
+def append_result(rec: dict, out: pathlib.Path):
+    out.parent.mkdir(parents=True, exist_ok=True)
+    rows = []
+    if out.exists():
+        rows = json.loads(out.read_text())
+    rows = [r for r in rows if not (r["arch"] == rec["arch"] and
+                                    r["shape"] == rec["shape"] and
+                                    r["mesh"] == rec["mesh"])]
+    rows.append(rec)
+    out.write_text(json.dumps(rows, indent=1))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=[a.replace("_", "-") for a in ARCHS])
+    ap.add_argument("--shape", choices=list(SHAPES))
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--out", default=str(RESULTS / "dryrun.json"))
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+
+    cells = []
+    if args.all:
+        for a in ARCHS:
+            for s in SHAPES:
+                cells.append((a.replace("_", "-"), s))
+    else:
+        cells = [(args.arch, args.shape)]
+
+    done = set()
+    if args.skip_done and out.exists():
+        mesh_name = "2x16x16" if args.multi_pod else "16x16"
+        done = {(r["arch"], r["shape"]) for r in json.loads(out.read_text())
+                if r["mesh"] == mesh_name and r["status"] in ("ok", "skipped")}
+
+    for arch, shape in cells:
+        if (arch, shape) in done:
+            print(f"[dryrun] {arch} x {shape}: already done, skipping")
+            continue
+        print(f"[dryrun] {arch} x {shape} multi_pod={args.multi_pod} ...",
+              flush=True)
+        try:
+            rec = run_cell(arch, shape, args.multi_pod)
+        except Exception as e:
+            rec = {"arch": arch, "shape": shape,
+                   "mesh": "2x16x16" if args.multi_pod else "16x16",
+                   "status": "error", "error": f"{type(e).__name__}: {e}",
+                   "traceback": traceback.format_exc()[-2000:]}
+        append_result(rec, out)
+        msg = {k: v for k, v in rec.items() if k not in ("traceback",)}
+        print(f"[dryrun] -> {json.dumps(msg)[:400]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

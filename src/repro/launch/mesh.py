@@ -1,0 +1,40 @@
+"""Production mesh construction. A FUNCTION (not module-level constant):
+importing this module never touches jax device state."""
+from __future__ import annotations
+
+import numpy as np
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """16x16 single-pod (256 chips) or 2x16x16 multi-pod (512 chips) mesh.
+
+    Axes: `pod` crosses the inter-pod (DCN/ICI-bridge) boundary and carries
+    pure data parallelism; `data` carries DP+FSDP; `model` carries TP/EP/SP.
+    Requires enough (placeholder) devices — the dry-run sets
+    XLA_FLAGS=--xla_force_host_platform_device_count=512 before any import.
+    """
+    import jax  # local import: keep module import side-effect free
+
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devs = jax.devices()
+    if len(devs) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}, have {len(devs)}; set "
+            "XLA_FLAGS=--xla_force_host_platform_device_count=512 before "
+            "importing jax (launch/dryrun.py does this)")
+    try:
+        return jax.make_mesh(shape, axes, devices=devs[:n])
+    except TypeError:
+        from jax.sharding import Mesh
+        return Mesh(np.array(devs[:n]).reshape(shape), axes)
+
+
+def make_debug_mesh(n_data: int = 1, n_model: int = 1):
+    """Small mesh over whatever devices exist (tests / CPU examples)."""
+    import jax
+    from jax.sharding import Mesh
+
+    devs = jax.devices()[: n_data * n_model]
+    return Mesh(np.array(devs).reshape(n_data, n_model), ("data", "model"))

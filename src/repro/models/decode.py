@@ -1,0 +1,291 @@
+"""Serving path: KV/SSM cache construction, prefill, and one-token decode.
+
+Cache geometry (leading axis = layer, scanned):
+  dense/moe:  k,v              [L,  B, S,  K, h]
+  gemma2:     k/v_local (ring) [L/2,B, Wc, K, h] + k/v_global [L/2,B,S,K,h]
+  ssm:        state            [L,  B, H,  P, N] + conv tail [L,B,Wconv-1,ch]
+  hybrid:     ring k,v + state + conv
+  encdec:     self k,v [L,B,S,K,h] + frozen cross k,v [L,B,Senc,K,h]
+
+Ring buffers: slot = position % Wc; RoPE is applied at write time with the
+absolute position, so storage order is irrelevant to attention. This is what
+bounds `long_500k` memory for the windowed/SSM families.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import flags
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import model as MODEL
+from repro.models.moe import moe_ffn
+
+Cache = dict
+
+
+def _dt(cfg):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+def _kv_shape(cfg, b, s):
+    return (b, s, cfg.n_kv, cfg.head_dim)
+
+
+def init_cache(cfg: ModelConfig, batch: int, ctx_len: int,
+               enc_len: int = 0) -> Cache:
+    """Zero cache sized for a `ctx_len` context (static)."""
+    dt = _dt(cfg)
+    fam = cfg.family
+    lyr = cfg.n_layers
+    w = cfg.sliding_window
+    wc = min(ctx_len, w) if w else ctx_len
+
+    def kv(n_l, s):
+        return (jnp.zeros((n_l, *_kv_shape(cfg, batch, s)), dt),
+                jnp.zeros((n_l, *_kv_shape(cfg, batch, s)), dt))
+
+    if fam == "ssm":
+        di, h, p, n, ch = M._dims(cfg)
+        return {"state": jnp.zeros((lyr, batch, h, p, n), jnp.float32),
+                "conv": jnp.zeros((lyr, batch, cfg.conv_width - 1, ch), dt)}
+    if fam == "hybrid":
+        di, h, p, n, ch = M._dims(cfg)
+        k, v = kv(lyr, wc)
+        return {"k": k, "v": v,
+                "state": jnp.zeros((lyr, batch, h, p, n), jnp.float32),
+                "conv": jnp.zeros((lyr, batch, cfg.conv_width - 1, ch), dt)}
+    if fam == "encdec":
+        ks, vs = kv(lyr, ctx_len)
+        kc, vc = kv(lyr, enc_len or ctx_len)
+        return {"k_self": ks, "v_self": vs, "k_cross": kc, "v_cross": vc}
+    if cfg.alt_local_global:
+        kl, vl = kv(lyr // 2, wc)
+        kg, vg = kv(lyr // 2, ctx_len)
+        return {"k_local": kl, "v_local": vl, "k_global": kg, "v_global": vg}
+    if fam == "moe" and cfg.alt_dense_moe:
+        kd, vd = kv(lyr // 2, ctx_len)
+        km, vm = kv(lyr // 2, ctx_len)
+        return {"k_dense": kd, "v_dense": vd, "k_moe": km, "v_moe": vm}
+    k, v = kv(lyr, ctx_len)
+    return {"k": k, "v": v}
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, ctx_len: int,
+                 enc_len: int = 0):
+    """ShapeDtypeStructs of the cache (dry-run input stand-in)."""
+    return jax.eval_shape(lambda: init_cache(cfg, batch, ctx_len, enc_len))
+
+
+# ---------------------------------------------------------------- per-step --
+
+def _attn_decode(cfg: ModelConfig, lp_attn, x, positions, ck, cv, *,
+                 window: int):
+    """x: [B,1,D]; ck/cv: [B, Wc|S, K, h]; positions: int32[B]."""
+    b = x.shape[0]
+    pos2 = positions[:, None]                                  # [B,1]
+    q = jnp.einsum("bsd,dnh->bsnh", x, lp_attn["wq"])
+    k_new = jnp.einsum("bsd,dnh->bsnh", x, lp_attn["wk"])
+    v_new = jnp.einsum("bsd,dnh->bsnh", x, lp_attn["wv"])
+    q = L.rope(q, pos2, cfg.rope_theta)
+    k_new = L.rope(k_new, pos2, cfg.rope_theta)
+    wc = ck.shape[1]
+    slot = positions % wc if window else jnp.minimum(positions, wc - 1)
+    ck = ck.at[jnp.arange(b), slot].set(k_new[:, 0])
+    cv = cv.at[jnp.arange(b), slot].set(v_new[:, 0])
+    clen = jnp.minimum(positions + 1, wc)
+    out = L.decode_attention(q, ck, cv, clen, logit_cap=cfg.attn_logit_softcap)
+    return jnp.einsum("bsnh,nhd->bsd", out, lp_attn["wo"]), ck, cv
+
+
+def _dense_decode_layer(cfg, lp, x, positions, ck, cv, *, window):
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, ck, cv = _attn_decode(cfg, lp["attn"], h, positions, ck, cv,
+                             window=window)
+    x = x + a
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + L.mlp(lp["mlp"], h)
+    return x, ck, cv
+
+
+def _moe_decode_layer(cfg, lp, x, positions, ck, cv):
+    h = L.rms_norm(x, lp["ln1"], cfg.norm_eps)
+    a, ck, cv = _attn_decode(cfg, lp["attn"], h, positions, ck, cv, window=0)
+    x = x + a
+    h = L.rms_norm(x, lp["ln2"], cfg.norm_eps)
+    x = x + moe_ffn(lp["moe"], h, cfg)
+    return x, ck, cv
+
+
+def decode_step(cfg: ModelConfig, params, cache: Cache, tokens, positions):
+    """One decode step. tokens [B,1] int32, positions [B] -> (logits [B,V], cache)."""
+    x = L.embed(params["embed"], tokens)
+    fam = cfg.family
+
+    if fam == "ssm":
+        def step(h, xs):
+            lp, st, cv = xs
+            hn = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            y, nc = M.ssm_decode_step(lp["ssm"], hn, {"state": st, "conv": cv}, cfg)
+            return h + y, (nc["state"], nc["conv"])
+        x, (st, cv) = jax.lax.scan(
+            step, x,  (params["layers"], cache["state"], cache["conv"]),
+            unroll=flags.scan_unroll())
+        new_cache = {"state": st, "conv": cv}
+
+    elif fam == "hybrid":
+        def step(h, xs):
+            lp, ck, cvv, st, cnv = xs
+            hn = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            a, ck, cvv = _attn_decode(cfg, lp["attn"], hn, positions, ck, cvv,
+                                      window=cfg.sliding_window)
+            y, nc = M.ssm_decode_step(lp["ssm"], hn, {"state": st, "conv": cnv}, cfg)
+            h = h + 0.5 * (a + y)
+            hm = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            h = h + L.mlp(lp["mlp"], hm)
+            return h, (ck, cvv, nc["state"], nc["conv"])
+        x, (ck, cvv, st, cnv) = jax.lax.scan(
+            step, x,  (params["layers"], cache["k"], cache["v"],
+                      cache["state"], cache["conv"]),
+            unroll=flags.scan_unroll())
+        new_cache = {"k": ck, "v": cvv, "state": st, "conv": cnv}
+
+    elif fam == "encdec":
+        def step(h, xs):
+            lp, ck, cv, kx, vx = xs
+            hn = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            a, ck, cv = _attn_decode(cfg, lp["attn"], hn, positions, ck, cv,
+                                     window=0)
+            h = h + a
+            hx = L.rms_norm(h, lp["lnx"], cfg.norm_eps)
+            q = jnp.einsum("bsd,dnh->bsnh", hx, lp["xattn"]["wq"])
+            enc_len = jnp.full((h.shape[0],), kx.shape[1], jnp.int32)
+            ca = L.decode_attention(q, kx, vx, enc_len)
+            h = h + jnp.einsum("bsnh,nhd->bsd", ca, lp["xattn"]["wo"])
+            hm = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            h = h + L.mlp(lp["mlp"], hm)
+            return h, (ck, cv)
+        x, (ck, cv) = jax.lax.scan(
+            step, x,  (params["dec"], cache["k_self"], cache["v_self"],
+                      cache["k_cross"], cache["v_cross"]),
+            unroll=flags.scan_unroll())
+        new_cache = {"k_self": ck, "v_self": cv,
+                     "k_cross": cache["k_cross"], "v_cross": cache["v_cross"]}
+
+    elif fam == "moe" and cfg.alt_dense_moe:
+        def step(h, xs):
+            lpd, lpm, kd, vd, km, vm = xs
+            h, kd, vd = _dense_decode_layer(cfg, lpd, h, positions, kd, vd,
+                                            window=0)
+            h, km, vm = _moe_decode_layer(cfg, lpm, h, positions, km, vm)
+            return h, (kd, vd, km, vm)
+        x, (kd, vd, km, vm) = jax.lax.scan(
+            step, x,  (params["layers_dense"], params["layers_moe"],
+                      cache["k_dense"], cache["v_dense"],
+                      cache["k_moe"], cache["v_moe"]),
+            unroll=flags.scan_unroll())
+        new_cache = {"k_dense": kd, "v_dense": vd, "k_moe": km, "v_moe": vm}
+
+    elif fam == "moe":
+        def step(h, xs):
+            lp, ck, cv = xs
+            h, ck, cv = _moe_decode_layer(cfg, lp, h, positions, ck, cv)
+            return h, (ck, cv)
+        x, (ck, cv) = jax.lax.scan(
+            step, x,  (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": ck, "v": cv}
+
+    elif cfg.alt_local_global:
+        def step(h, xs):
+            lp, kl, vl, kg, vg = xs
+            lp0 = jax.tree.map(lambda a: a[0], lp)
+            lp1 = jax.tree.map(lambda a: a[1], lp)
+            h, kl, vl = _dense_decode_layer(cfg, lp0, h, positions, kl, vl,
+                                            window=cfg.sliding_window)
+            h, kg, vg = _dense_decode_layer(cfg, lp1, h, positions, kg, vg,
+                                            window=0)
+            return h, (kl, vl, kg, vg)
+        lp_pairs = jax.tree.map(
+            lambda a: a.reshape(a.shape[0] // 2, 2, *a.shape[1:]),
+            params["layers"])
+        x, (kl, vl, kg, vg) = jax.lax.scan(
+            step, x,  (lp_pairs, cache["k_local"], cache["v_local"],
+                      cache["k_global"], cache["v_global"]))
+        new_cache = {"k_local": kl, "v_local": vl, "k_global": kg, "v_global": vg}
+
+    else:
+        def step(h, xs):
+            lp, ck, cv = xs
+            h, ck, cv = _dense_decode_layer(cfg, lp, h, positions, ck, cv,
+                                            window=0)
+            return h, (ck, cv)
+        x, (ck, cv) = jax.lax.scan(
+            step, x,  (params["layers"], cache["k"], cache["v"]))
+        new_cache = {"k": ck, "v": cv}
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg)[:, 0]
+    return logits, new_cache
+
+
+# ----------------------------------------------------------------- prefill --
+
+def _ring_pack(k: jax.Array, wc: int) -> jax.Array:
+    """Last `wc` positions of k [L?,B,S,K,h], rolled to ring order."""
+    s = k.shape[-3]
+    if s <= wc:
+        pad = wc - s
+        return jnp.pad(k, [(0, 0)] * (k.ndim - 3) + [(0, pad), (0, 0), (0, 0)])
+    sl = k[..., s - wc:, :, :]
+    return jnp.roll(sl, shift=(s - wc) % wc, axis=-3)
+
+
+def prefill(cfg: ModelConfig, params, inputs: dict, ctx_len: int):
+    """Run the full prompt; returns (last-token logits [B,V], cache).
+
+    `ctx_len` sizes the cache (>= prompt length) for subsequent decode.
+    Only the last position is unembedded (never materializes [B, S, V]).
+    """
+    hidden, caches = MODEL.forward_hidden(cfg, params, inputs,
+                                          collect_cache=True)
+    logits = L.unembed(params["embed"], hidden[:, -1:], cfg)
+    fam = cfg.family
+    w = cfg.sliding_window
+    wc = min(ctx_len, w) if w else ctx_len
+
+    def fit(k, s_alloc):
+        # grow cache to s_alloc along seq axis
+        s = k.shape[-3]
+        if s < s_alloc:
+            return jnp.pad(k, [(0, 0)] * (k.ndim - 3) +
+                           [(0, s_alloc - s), (0, 0), (0, 0)])
+        return k[..., :s_alloc, :, :]
+
+    if fam == "ssm":
+        st = caches
+        cache = {"state": st[0], "conv": st[1]}
+    elif fam == "hybrid":
+        kv, st = caches
+        cache = {"k": _ring_pack(kv[0], wc), "v": _ring_pack(kv[1], wc),
+                 "state": st[0], "conv": st[1]}
+    elif fam == "encdec":
+        kv, cross = caches
+        cache = {"k_self": fit(kv[0], ctx_len), "v_self": fit(kv[1], ctx_len),
+                 "k_cross": cross[0], "v_cross": cross[1]}
+    elif fam == "moe" and cfg.alt_dense_moe:
+        kv_d, kv_m = caches
+        cache = {"k_dense": fit(kv_d[0], ctx_len), "v_dense": fit(kv_d[1], ctx_len),
+                 "k_moe": fit(kv_m[0], ctx_len), "v_moe": fit(kv_m[1], ctx_len)}
+    elif cfg.alt_local_global:
+        kv_l, kv_g = caches
+        cache = {"k_local": _ring_pack(kv_l[0], wc), "v_local": _ring_pack(kv_l[1], wc),
+                 "k_global": fit(kv_g[0], ctx_len), "v_global": fit(kv_g[1], ctx_len)}
+    else:
+        kv = caches
+        cache = {"k": fit(kv[0], ctx_len), "v": fit(kv[1], ctx_len)}
+    return logits[:, -1], cache

@@ -1,0 +1,45 @@
+"""Trace-time flags for the dry-run's cost-probe lowerings.
+
+XLA's HloCostAnalysis counts a while-loop body ONCE regardless of trip
+count (verified experimentally — see EXPERIMENTS.md §Dry-run methodology).
+The production modules keep layers under `lax.scan` for flat compile times;
+to recover true per-step FLOPs/bytes/collectives the dry-run lowers two
+extra *probe* modules with scans unrolled at reduced depth (bodies=1 and
+bodies=2) and extrapolates: total = base + n_bodies * per_body.
+
+UNROLL_SCANS: unroll every model scan (layers, SSD chunks, CE chunks).
+FLASH_ONE_BLOCK: flash attention as a single (q_chunk=k_chunk=S) block —
+FLOP-identical to the chunked production form (no causal block skipping in
+either), but free of inner scans.
+"""
+UNROLL_SCANS = False
+FLASH_ONE_BLOCK = False
+
+
+def scan_unroll() -> bool | int:
+    return True if UNROLL_SCANS else 1
+
+
+# Remat policy for the layer-stack scan: "full" recomputes everything in
+# backward (min memory); "dots" saves matmul outputs (jax
+# dots_with_no_batch_dims_saveable) trading memory for ~25-30% less
+# recompute. Hillclimbed in EXPERIMENTS SSPerf.
+REMAT_POLICY = "full"
+
+
+def remat_policy():
+    if REMAT_POLICY == "dots":
+        import jax
+        return jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    return None
+
+
+# Optional overrides hillclimbed in EXPERIMENTS SSPerf (None = module default).
+FLASH_CHUNK = None   # flash attention q/k block size (default 512 in layers)
+LOSS_CHUNK = None    # CE chunk length (default 512 in model.loss_fn)
+
+
+# MoE dispatch implementation: "a2a" = explicit shard_map all-to-all
+# (production schedule, perf hillclimb (b)); "gspmd" = auto-partitioned
+# sort-dispatch (baseline). a2a falls back to gspmd off-mesh / for decode.
+MOE_IMPL = "a2a"

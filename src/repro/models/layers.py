@@ -1,0 +1,225 @@
+"""Core transformer layers: norms, RoPE, flash attention, GLU MLP.
+
+Pure JAX with explicit param pytrees (no flax). Attention is a two-level
+chunked ("flash") implementation — lax.scan over query blocks with running
+(max, sum, acc) over key blocks — so prefill at 32k/500k never materializes
+an S x S score tensor. Sliding windows and logit soft-capping (gemma2) are
+masks/transforms on the block scores.
+
+Shape glossary: B batch, S seq, D d_model, H q heads, K kv heads, h head dim,
+F d_ff, V vocab.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import flags
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    return ((x * jax.lax.rsqrt(var + eps)) * (1.0 + scale.astype(jnp.float32))).astype(dt)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x: [B, S, N, h]; positions: [B, S] or [S]."""
+    h = x.shape[-1]
+    half = h // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # [B, S, half]
+    cos = jnp.cos(angles)[..., None, :]
+    sin = jnp.sin(angles)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ------------------------------------------------------------- flash attn --
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True,
+                    window: int = 0,
+                    logit_cap: float = 0.0,
+                    q_chunk: int = 512,
+                    k_chunk: int = 512,
+                    q_offset: int = 0) -> jax.Array:
+    """Chunked attention with running softmax stats (no S x S buffer).
+
+    q: [B, Sq, H, h]; k, v: [B, Sk, K, h] with H % K == 0 (GQA).
+    `window` > 0 restricts to keys within `window` positions (local layers).
+    `q_offset` is the absolute position of q[0] (prefill chunks / decode).
+    """
+    b, sq, hq, hd = q.shape
+    _, sk, hk, _ = k.shape
+    g = hq // hk
+    scale = hd ** -0.5
+    if flags.FLASH_CHUNK:
+        q_chunk = k_chunk = flags.FLASH_CHUNK
+    if flags.FLASH_ONE_BLOCK:
+        q_chunk, k_chunk = sq, sk
+    qpad = (-sq) % q_chunk
+    kpad = (-sk) % k_chunk
+    qp = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0)))
+    kp = jnp.pad(k, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    vp = jnp.pad(v, ((0, 0), (0, kpad), (0, 0), (0, 0)))
+    nq, nk = qp.shape[1] // q_chunk, kp.shape[1] // k_chunk
+    qb = qp.reshape(b, nq, q_chunk, hk, g, hd)
+    kb = kp.reshape(b, nk, k_chunk, hk, hd)
+    vb = vp.reshape(b, nk, k_chunk, hk, hd)
+
+    q_pos = q_offset + jnp.arange(nq * q_chunk).reshape(nq, q_chunk)
+    k_pos = jnp.arange(nk * k_chunk).reshape(nk, k_chunk)
+    k_valid = (jnp.arange(nk * k_chunk) < sk).reshape(nk, k_chunk)
+
+    def q_block(qi, q_i):
+        # q_i: [B, q_chunk, K, g, h]
+        def k_block(carry, ki):
+            m, l, acc = carry
+            k_i, v_i = kb[:, ki], vb[:, ki]
+            s = jnp.einsum("bqkgh,bskh->bkgqs", q_i, k_i,
+                           preferred_element_type=jnp.float32) * scale
+            s = softcap(s, logit_cap)
+            mask = k_valid[ki][None, :]
+            if causal:
+                mask = mask & (k_pos[ki][None, :] <= q_pos[qi][:, None])
+            if window:
+                mask = mask & (k_pos[ki][None, :] > q_pos[qi][:, None] - window)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.where(mask[None, None, None], jnp.exp(s - m_new[..., None]), 0.0)
+            corr = jnp.exp(m - m_new)
+            l = l * corr + p.sum(axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bkgqs,bskh->bkgqh", p, v_i.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((b, hk, g, q_chunk), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hk, g, q_chunk), jnp.float32)
+        a0 = jnp.zeros((b, hk, g, q_chunk, hd), jnp.float32)
+        # Nested remat: without it, backward saves the [q_chunk, k_chunk]
+        # probabilities of EVERY block pair = the full S^2 attention matrix
+        # (perf iteration #4, EXPERIMENTS SSPerf).
+        (m, l, acc), _ = jax.lax.scan(jax.checkpoint(k_block),
+                                      (m0, l0, a0), jnp.arange(nk),
+                                      unroll=flags.scan_unroll())
+        out = acc / jnp.maximum(l, 1e-30)[..., None]
+        return out.transpose(0, 3, 1, 2, 4)  # [B, q_chunk, K, g, h]
+
+    q_block_r = jax.checkpoint(q_block)
+    _, out = jax.lax.scan(
+        lambda _, qi: (None, q_block_r(qi, qb[:, qi])), None, jnp.arange(nq),
+        unroll=flags.scan_unroll())
+    out = out.transpose(1, 0, 2, 3, 4, 5).reshape(b, nq * q_chunk, hq, hd)
+    return out[:, :sq].astype(q.dtype)
+
+
+def decode_attention(q: jax.Array, k_cache: jax.Array, v_cache: jax.Array,
+                     cache_len, *,
+                     logit_cap: float = 0.0) -> jax.Array:
+    """Single-token attention against a cache.
+
+    q: [B, 1, H, h]; caches: [B, S, K, h]; cache_len: int32[B] valid lengths
+    (ring-buffer local layers pass the full window). Memory-bound by design.
+    """
+    b, _, hq, hd = q.shape
+    _, s, hk, _ = k_cache.shape
+    g = hq // hk
+    qr = q.reshape(b, hk, g, hd)
+    scores = jnp.einsum("bkgh,bskh->bkgs", qr.astype(jnp.float32),
+                        k_cache.astype(jnp.float32)) * hd ** -0.5
+    scores = softcap(scores, logit_cap)
+    valid = jnp.arange(s)[None] < cache_len[:, None]          # [B, S]
+    scores = jnp.where(valid[:, None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bkgs,bskh->bkgh", p, v_cache.astype(jnp.float32))
+    return out.reshape(b, 1, hq, hd).astype(q.dtype)
+
+
+# -------------------------------------------------------------- attention --
+
+def init_attention(key, cfg: ModelConfig, dtype) -> dict:
+    d, hq, hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv, cfg.head_dim
+    k1, k2, k3, k4 = jax.random.split(key, 4)
+    s = d ** -0.5
+    return {
+        "wq": (jax.random.normal(k1, (d, hq, hd)) * s).astype(dtype),
+        "wk": (jax.random.normal(k2, (d, hk, hd)) * s).astype(dtype),
+        "wv": (jax.random.normal(k3, (d, hk, hd)) * s).astype(dtype),
+        "wo": (jax.random.normal(k4, (hq, hd, d)) * (hq * hd) ** -0.5).astype(dtype),
+    }
+
+
+def attention(params: dict, x: jax.Array, positions: jax.Array,
+              cfg: ModelConfig, *, causal: bool = True, window: int = 0,
+              q_offset: int = 0,
+              kv_override: Optional[tuple] = None):
+    """Full-sequence attention. Returns (out [B,S,D], (k, v) for caching)."""
+    q = jnp.einsum("bsd,dnh->bsnh", x, params["wq"])
+    if kv_override is None:
+        k = jnp.einsum("bsd,dnh->bsnh", x, params["wk"])
+        v = jnp.einsum("bsd,dnh->bsnh", x, params["wv"])
+        k = rope(k, positions, cfg.rope_theta)
+    else:
+        k, v = kv_override
+    q = rope(q, positions, cfg.rope_theta)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          logit_cap=cfg.attn_logit_softcap)
+    return jnp.einsum("bsnh,nhd->bsd", out, params["wo"]), (k, v)
+
+
+# -------------------------------------------------------------------- mlp --
+
+def init_mlp(key, d: int, f: int, dtype) -> dict:
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "wg": (jax.random.normal(k1, (d, f)) * d ** -0.5).astype(dtype),
+        "wi": (jax.random.normal(k2, (d, f)) * d ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(k3, (f, d)) * f ** -0.5).astype(dtype),
+    }
+
+
+def mlp(params: dict, x: jax.Array) -> jax.Array:
+    """SwiGLU feed-forward."""
+    gate = jax.nn.silu(jnp.einsum("bsd,df->bsf", x, params["wg"]))
+    up = jnp.einsum("bsd,df->bsf", x, params["wi"])
+    return jnp.einsum("bsf,fd->bsd", gate * up, params["wo"])
+
+
+# ------------------------------------------------------------- embeddings --
+
+def init_embed(key, cfg: ModelConfig, dtype) -> dict:
+    p = {"table": (jax.random.normal(key, (cfg.vocab, cfg.d_model)) * 0.02
+                   ).astype(dtype)}
+    if not cfg.tie_embeddings:
+        p["unembed"] = (jax.random.normal(
+            jax.random.fold_in(key, 1), (cfg.d_model, cfg.vocab)) *
+            cfg.d_model ** -0.5).astype(dtype)
+    return p
+
+
+def embed(params: dict, tokens: jax.Array) -> jax.Array:
+    return params["table"][tokens]
+
+
+def unembed(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    if cfg.tie_embeddings:
+        logits = jnp.einsum("bsd,vd->bsv", x, params["table"])
+    else:
+        logits = jnp.einsum("bsd,dv->bsv", x, params["unembed"])
+    return softcap(logits.astype(jnp.float32), cfg.final_logit_softcap)

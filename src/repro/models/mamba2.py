@@ -1,0 +1,186 @@
+"""Mamba-2 SSD (state-space duality) mixer [arXiv:2405.21060].
+
+Chunked SSD: within-chunk outputs via the dual (attention-like) quadratic
+form over `ssd_chunk`-sized blocks; across chunks a sequential `lax.scan`
+carries the [B, H, P, N] recurrent state. Decode is the O(1)/token recurrent
+update — which is what makes the `long_500k` cell tractable for this family.
+
+Shapes: B batch, S seq, D d_model, di = expand*D inner, H = di/head_dim
+heads, P head_dim, N ssm_state, G(=1) state groups, W conv width.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import flags
+
+
+def _dims(cfg: ModelConfig):
+    di = cfg.d_inner
+    h = cfg.ssm_heads
+    p = cfg.ssm_head_dim
+    n = cfg.ssm_state
+    conv_ch = di + 2 * n           # channels that pass through the conv (x,B,C)
+    return di, h, p, n, conv_ch
+
+
+def init_ssm(key, cfg: ModelConfig, dtype) -> dict:
+    d = cfg.d_model
+    di, h, p, n, conv_ch = _dims(cfg)
+    ks = jax.random.split(key, 4)
+    in_dim = 2 * di + 2 * n + h    # z, x, B, C, dt
+    return {
+        "in_proj": (jax.random.normal(ks[0], (d, in_dim)) * d ** -0.5).astype(dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_ch)) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "a_log": jnp.zeros((h,), jnp.float32),
+        "d_skip": jnp.ones((h,), jnp.float32),
+        "dt_bias": jnp.zeros((h,), jnp.float32),
+        "norm": jnp.zeros((di,), dtype),
+        "out_proj": (jax.random.normal(ks[2], (di, d)) * di ** -0.5).astype(dtype),
+    }
+
+
+def _split(cfg, zxbcdt):
+    di, h, p, n, _ = _dims(cfg)
+    z = zxbcdt[..., :di]
+    xc = zxbcdt[..., di:di + di + 2 * n]      # conv channels: x | B | C
+    dt = zxbcdt[..., di + di + 2 * n:]
+    return z, xc, dt
+
+
+def _causal_conv(xc, w, b):
+    """Depthwise causal conv, width W (unrolled: W is 4)."""
+    wdt = xc.dtype
+    out = jnp.zeros_like(xc, dtype=jnp.float32)
+    width = w.shape[0]
+    for i in range(width):
+        shift = width - 1 - i
+        shifted = jnp.pad(xc, ((0, 0), (shift, 0), (0, 0)))[:, :xc.shape[1]]
+        out = out + shifted.astype(jnp.float32) * w[i].astype(jnp.float32)
+    return jax.nn.silu(out + b.astype(jnp.float32)).astype(wdt)
+
+
+def _gated_norm(y, z, scale, eps):
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    var = jnp.mean(y * y, axis=-1, keepdims=True)
+    return y * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+
+
+def ssm_forward(params: dict, x: jax.Array, cfg: ModelConfig,
+                return_final_state: bool = False):
+    """Full-sequence SSD. x: [B, S, D] -> [B, S, D].
+
+    If `return_final_state`, also returns (state [B,H,P,N], conv tail
+    [B, W-1, conv_ch]) for handing off to decode.
+    """
+    b, s, d = x.shape
+    di, h, p, n, conv_ch = _dims(cfg)
+    q = cfg.ssd_chunk
+    spad = (-s) % q
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])
+    z, xc_raw, dt_raw = _split(cfg, zxbcdt)
+    xc = _causal_conv(xc_raw, params["conv_w"], params["conv_b"])
+    if spad:
+        xc = jnp.pad(xc, ((0, 0), (0, spad), (0, 0)))
+        dt_raw = jnp.pad(dt_raw, ((0, 0), (0, spad), (0, 0)))
+    sp = s + spad
+    nc = sp // q
+    xs = xc[..., :di].reshape(b, nc, q, h, p).astype(jnp.float32)
+    bmat = xc[..., di:di + n].reshape(b, nc, q, n).astype(jnp.float32)
+    cmat = xc[..., di + n:].reshape(b, nc, q, n).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) +
+                         params["dt_bias"]).reshape(b, nc, q, h)
+    # Padded tail: dt=0 -> exp decay 1, no state contribution.
+    if spad:
+        tmask = (jnp.arange(sp) < s).reshape(1, nc, q, 1)
+        dt = dt * tmask
+    a = -jnp.exp(params["a_log"])                       # [h]
+    da = dt * a                                          # [b,nc,q,h]
+    cum = jnp.cumsum(da, axis=2)                         # within-chunk cumsum
+
+    # ---- intra-chunk (dual/quadratic form) ----
+    scores = jnp.einsum("bcqn,bckn->bcqk", cmat, bmat)
+    li = cum[:, :, :, None, :]                           # [b,c,q,1,h]
+    lj = cum[:, :, None, :, :]                           # [b,c,1,k,h]
+    decay = jnp.exp(jnp.clip(li - lj, -60.0, 0.0))
+    causal = jnp.tril(jnp.ones((q, q), bool))
+    m = scores[..., None] * decay * causal[None, None, :, :, None]
+    y_intra = jnp.einsum("bcqkh,bckh,bckhp->bcqhp", m, dt, xs)
+
+    # ---- inter-chunk state recurrence ----
+    chunk_decay = jnp.exp(jnp.clip(cum[:, :, -1:, :] - cum, -60.0, 0.0))  # [b,c,q,h]
+    # state contribution of chunk c: sum_j decay_to_end * dt_j * B_j x_j
+    contrib = jnp.einsum("bcqh,bcqh,bcqn,bcqhp->bchpn",
+                         chunk_decay, dt, bmat, xs)
+    total_decay = jnp.exp(jnp.clip(cum[:, :, -1, :], -60.0, 0.0))         # [b,c,h]
+
+    def scan_fn(state, inp):
+        contrib_c, tdec_c = inp
+        new_state = state * tdec_c[:, :, None, None] + contrib_c
+        return new_state, state                          # emit state BEFORE chunk
+
+    state0 = jnp.zeros((b, h, p, n), jnp.float32)
+    final_state, prev_states = jax.lax.scan(
+        scan_fn, state0,
+        (contrib.transpose(1, 0, 2, 3, 4), total_decay.transpose(1, 0, 2)),
+        unroll=flags.scan_unroll())
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)   # [b,c,h,p,n]
+
+    in_decay = jnp.exp(jnp.clip(cum, -60.0, 0.0))        # decay from chunk start
+    y_inter = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", cmat, in_decay, prev_states)
+
+    y = (y_intra + y_inter).reshape(b, sp, h, p)[:, :s]
+    y = y + xs.reshape(b, sp, h, p)[:, :s] * params["d_skip"][None, None, :, None]
+    y = _gated_norm(y.reshape(b, s, di), z, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("bse,ed->bsd", y.astype(x.dtype), params["out_proj"])
+    if return_final_state:
+        tail = _conv_tail(xc_raw, cfg)
+        return out, (final_state, tail)
+    return out
+
+
+def _conv_tail(xc_raw, cfg):
+    w = cfg.conv_width
+    return xc_raw[:, -(w - 1):, :] if w > 1 else xc_raw[:, :0, :]
+
+
+def init_ssm_cache(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    di, h, p, n, conv_ch = _dims(cfg)
+    return {
+        "state": jnp.zeros((batch, h, p, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+    }
+
+
+def ssm_decode_step(params: dict, x: jax.Array, cache: dict,
+                    cfg: ModelConfig):
+    """One-token recurrent update. x: [B, 1, D] -> ([B, 1, D], cache)."""
+    b = x.shape[0]
+    di, h, p, n, conv_ch = _dims(cfg)
+    zxbcdt = jnp.einsum("bsd,de->bse", x, params["in_proj"])[:, 0]
+    z = zxbcdt[:, :di]
+    xc_new = zxbcdt[:, di:di + di + 2 * n]
+    dt_raw = zxbcdt[:, di + di + 2 * n:]
+    # conv over ring of last W-1 inputs + current
+    hist = jnp.concatenate([cache["conv"], xc_new[:, None]], axis=1)  # [B,W,ch]
+    w = params["conv_w"]
+    conv = jnp.einsum("bwc,wc->bc", hist.astype(jnp.float32),
+                      w.astype(jnp.float32)) + params["conv_b"].astype(jnp.float32)
+    xc = jax.nn.silu(conv)
+    xs = xc[:, :di].reshape(b, h, p)
+    bmat = xc[:, di:di + n]
+    cmat = xc[:, di + n:]
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + params["dt_bias"])  # [b,h]
+    a = -jnp.exp(params["a_log"])
+    decay = jnp.exp(dt * a)                                    # [b,h]
+    state = cache["state"] * decay[:, :, None, None] + jnp.einsum(
+        "bh,bn,bhp->bhpn", dt, bmat, xs)
+    y = jnp.einsum("bn,bhpn->bhp", cmat, state)
+    y = y + xs * params["d_skip"][None, :, None]
+    y = _gated_norm(y.reshape(b, di), z, params["norm"], cfg.norm_eps)
+    out = jnp.einsum("be,ed->bd", y.astype(x.dtype), params["out_proj"])
+    new_cache = {"state": state, "conv": hist[:, 1:]}
+    return out[:, None], new_cache

@@ -1,0 +1,304 @@
+"""Model assembly: init / train-forward / prefill / decode for every family.
+
+Families: dense (incl. gemma2 local-global alternation + vlm stub front),
+moe (uniform or llama4 dense/moe alternation), ssm (mamba2), hybrid (hymba
+parallel attn+SSM), encdec (seamless).
+
+Layer parameters are stacked on a leading L axis and applied with `lax.scan`
+(+ `jax.checkpoint` remat per layer) so HLO size and compile time stay flat
+in depth — required for the 94-layer MoE dry-runs. Alternating-structure
+archs scan over *pairs* so the alternation is static in the HLO (no traced
+`cond` double-counting FLOPs in the roofline).
+
+Caches: decode uses global KV caches [L, B, S, K, h]; sliding-window layers
+use ring buffers [L, B, min(S, W), K, h] (absolute-position RoPE is applied
+at write time, so ring storage order never affects attention). SSM caches
+are the O(1) recurrent state. `long_500k` relies on these: windowed/SSM
+archs never materialize 500k of *local* cache.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models import mamba2 as M
+from repro.models import flags
+from repro.models import moe as MOE
+from repro.parallel import sharding as SH
+
+Params = dict
+Cache = dict
+
+
+def _dtype(cfg: ModelConfig):
+    return jnp.bfloat16 if cfg.dtype == "bfloat16" else jnp.float32
+
+
+# ------------------------------------------------------------------- init --
+
+def _init_layer(cfg: ModelConfig, key, kind: str) -> dict:
+    dt = _dtype(cfg)
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+    p: dict = {"ln1": jnp.zeros((d,), dt)}
+    if kind == "ssm":
+        p["ssm"] = M.init_ssm(ks[0], cfg, dt)
+        return p
+    p["attn"] = L.init_attention(ks[0], cfg, dt)
+    p["ln2"] = jnp.zeros((d,), dt)
+    if kind == "hybrid":
+        p["ssm"] = M.init_ssm(ks[1], cfg, dt)
+        p["mlp"] = L.init_mlp(ks[2], d, cfg.d_ff, dt)
+    elif kind == "moe":
+        p["moe"] = MOE.init_moe(ks[1], cfg, dt)
+    elif kind == "dec":
+        p["lnx"] = jnp.zeros((d,), dt)
+        p["xattn"] = L.init_attention(ks[1], cfg, dt)
+        p["mlp"] = L.init_mlp(ks[2], d, cfg.d_ff, dt)
+    else:  # dense / enc
+        p["mlp"] = L.init_mlp(ks[1], d, cfg.d_ff, dt)
+    return p
+
+
+def _init_stack(cfg: ModelConfig, key, kind: str, n: int) -> dict:
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: _init_layer(cfg, k, kind))(keys)
+
+
+def init_params(cfg: ModelConfig, key) -> Params:
+    dt = _dtype(cfg)
+    k_embed, k_stack, k_stack2 = jax.random.split(key, 3)
+    p: Params = {"embed": L.init_embed(k_embed, cfg, dt),
+                 "final_norm": jnp.zeros((cfg.d_model,), dt)}
+    fam = cfg.family
+    if fam == "encdec":
+        p["enc"] = _init_stack(cfg, k_stack, "enc", cfg.n_enc_layers)
+        p["enc_norm"] = jnp.zeros((cfg.d_model,), dt)
+        p["dec"] = _init_stack(cfg, k_stack2, "dec", cfg.n_layers)
+    elif fam == "moe" and cfg.alt_dense_moe:
+        p["layers_dense"] = _init_stack(cfg, k_stack, "dense", cfg.n_layers // 2)
+        p["layers_moe"] = _init_stack(cfg, k_stack2, "moe", cfg.n_layers // 2)
+    elif fam == "moe":
+        p["layers"] = _init_stack(cfg, k_stack, "moe", cfg.n_layers)
+    elif fam == "ssm":
+        p["layers"] = _init_stack(cfg, k_stack, "ssm", cfg.n_layers)
+    elif fam == "hybrid":
+        p["layers"] = _init_stack(cfg, k_stack, "hybrid", cfg.n_layers)
+    else:
+        p["layers"] = _init_stack(cfg, k_stack, "dense", cfg.n_layers)
+    return p
+
+
+def param_shapes(cfg: ModelConfig) -> Params:
+    """Abstract init (no allocation) — feeds the dry-run's ShapeDtypeStructs."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# --------------------------------------------------------- layer functions --
+
+def _dense_layer(cfg: ModelConfig, params, x, positions, *, window: int,
+                 causal: bool = True):
+    h = L.rms_norm(x, params["ln1"], cfg.norm_eps)
+    a, kv = L.attention(params["attn"], h, positions, cfg,
+                        causal=causal, window=window)
+    x = x + a
+    h = L.rms_norm(x, params["ln2"], cfg.norm_eps)
+    x = x + L.mlp(params["mlp"], h)
+    return x, kv
+
+
+def _moe_layer(cfg: ModelConfig, params, x, positions):
+    h = L.rms_norm(x, params["ln1"], cfg.norm_eps)
+    a, kv = L.attention(params["attn"], h, positions, cfg)
+    x = x + a
+    h = L.rms_norm(x, params["ln2"], cfg.norm_eps)
+    ffn = MOE.moe_ffn_a2a if flags.MOE_IMPL == "a2a" else MOE.moe_ffn
+    x = x + ffn(params["moe"], h, cfg)
+    return x, kv
+
+
+def _ssm_layer(cfg: ModelConfig, params, x, with_state: bool = False):
+    h = L.rms_norm(x, params["ln1"], cfg.norm_eps)
+    if with_state:
+        y, st = M.ssm_forward(params["ssm"], h, cfg, return_final_state=True)
+        return x + y, st
+    return x + M.ssm_forward(params["ssm"], h, cfg), None
+
+
+def _hybrid_layer(cfg: ModelConfig, params, x, positions,
+                  with_state: bool = False):
+    h = L.rms_norm(x, params["ln1"], cfg.norm_eps)
+    a, kv = L.attention(params["attn"], h, positions, cfg,
+                        window=cfg.sliding_window)
+    if with_state:
+        y, st = M.ssm_forward(params["ssm"], h, cfg, return_final_state=True)
+    else:
+        y, st = M.ssm_forward(params["ssm"], h, cfg), None
+    x = x + 0.5 * (a + y)
+    h = L.rms_norm(x, params["ln2"], cfg.norm_eps)
+    x = x + L.mlp(params["mlp"], h)
+    return x, (kv, st)
+
+
+# ------------------------------------------------------------ full forward --
+
+def _scan_layers(fn, x, stacked, remat: bool = True):
+    body = jax.checkpoint(fn, policy=flags.remat_policy()) if remat else fn
+
+    def step(carry, layer_params):
+        out, aux = body(carry, layer_params)
+        # Activation sharding rules: batch on (pod, data) AND sequence on
+        # `model` between layers (Megatron-style sequence parallelism) —
+        # the remat-saved [L, B, S, D] residual stack is the dominant
+        # activation memory and would otherwise be replicated across the
+        # model axis (perf iteration #5, EXPERIMENTS SSPerf).
+        return SH.constrain_spec(out, "batch", "seq", None), aux
+
+    return jax.lax.scan(step, x, stacked, unroll=flags.scan_unroll())
+
+
+def forward_hidden(cfg: ModelConfig, params: Params, inputs: dict, *,
+                   collect_cache: bool = False, remat: bool = True):
+    """Full-sequence forward up to the final norm (pre-unembed).
+
+    Returns (hidden [B,S,D], caches-or-None). inputs: tokens [B,S] or embeds
+    [B,S,D] (frontend stub); encdec also takes enc_embeds [B,S,D].
+    """
+    if "embeds" in inputs:
+        x = inputs["embeds"]
+        b, s, _ = x.shape
+    else:
+        x = L.embed(params["embed"], inputs["tokens"])
+        b, s = inputs["tokens"].shape
+    # Activation rule: batch on (pod, data) from the very first tensor — an
+    # embedding gather otherwise inherits the table's FSDP sharding and
+    # leaves batch unsharded downstream (perf iteration #2, §Perf).
+    x = SH.constrain_batch(x)
+    positions = jnp.arange(s, dtype=jnp.int32)[None, :]
+    fam = cfg.family
+
+    if fam == "encdec":
+        enc_x = inputs["enc_embeds"]
+        enc_pos = jnp.arange(enc_x.shape[1], dtype=jnp.int32)[None, :]
+
+        def enc_fn(h, lp):
+            out, _ = _dense_layer(cfg, lp, h, enc_pos, window=0, causal=False)
+            return out, None
+        memory, _ = _scan_layers(enc_fn, enc_x, params["enc"], remat)
+        memory = L.rms_norm(memory, params["enc_norm"], cfg.norm_eps)
+
+        def dec_fn(h, lp):
+            hn = L.rms_norm(h, lp["ln1"], cfg.norm_eps)
+            a, kv = L.attention(lp["attn"], hn, positions, cfg, causal=True)
+            h = h + a
+            hx = L.rms_norm(h, lp["lnx"], cfg.norm_eps)
+            mk = jnp.einsum("bsd,dnh->bsnh", memory, lp["xattn"]["wk"])
+            mv = jnp.einsum("bsd,dnh->bsnh", memory, lp["xattn"]["wv"])
+            ca, _ = L.attention(lp["xattn"], hx, positions, cfg, causal=False,
+                                kv_override=(mk, mv))
+            h = h + ca
+            hm = L.rms_norm(h, lp["ln2"], cfg.norm_eps)
+            h = h + L.mlp(lp["mlp"], hm)
+            aux = (kv, (mk, mv)) if collect_cache else None
+            return h, aux
+        x, caches = _scan_layers(dec_fn, x, params["dec"], remat)
+
+    elif fam == "moe" and cfg.alt_dense_moe:
+        pairs = (params["layers_dense"], params["layers_moe"])
+
+        def pair_fn(h, lp):
+            lpd, lpm = lp
+            h, kv1 = _dense_layer(cfg, lpd, h, positions, window=0)
+            h, kv2 = _moe_layer(cfg, lpm, h, positions)
+            return h, (kv1, kv2) if collect_cache else None
+        x, caches = _scan_layers(pair_fn, x, pairs, remat)
+
+    elif fam == "moe":
+        def moe_fn(h, lp):
+            h, kv = _moe_layer(cfg, lp, h, positions)
+            return h, kv if collect_cache else None
+        x, caches = _scan_layers(moe_fn, x, params["layers"], remat)
+
+    elif fam == "ssm":
+        def ssm_fn(h, lp):
+            h, st = _ssm_layer(cfg, lp, h, with_state=collect_cache)
+            return h, st
+        x, caches = _scan_layers(ssm_fn, x, params["layers"], remat)
+
+    elif fam == "hybrid":
+        def hy_fn(h, lp):
+            h, aux = _hybrid_layer(cfg, lp, h, positions,
+                                   with_state=collect_cache)
+            return h, aux if collect_cache else None
+        x, caches = _scan_layers(hy_fn, x, params["layers"], remat)
+
+    elif cfg.alt_local_global:
+        lp_pairs = jax.tree.map(
+            lambda a: a.reshape(a.shape[0] // 2, 2, *a.shape[1:]),
+            params["layers"])
+
+        def pair_fn(h, lp):
+            lp0 = jax.tree.map(lambda a: a[0], lp)
+            lp1 = jax.tree.map(lambda a: a[1], lp)
+            h, kv0 = _dense_layer(cfg, lp0, h, positions,
+                                  window=cfg.sliding_window)
+            h, kv1 = _dense_layer(cfg, lp1, h, positions, window=0)
+            return h, (kv0, kv1) if collect_cache else None
+        x, caches = _scan_layers(pair_fn, x, lp_pairs, remat)
+
+    else:
+        def dense_fn(h, lp):
+            h, kv = _dense_layer(cfg, lp, h, positions, window=0)
+            return h, kv if collect_cache else None
+        x, caches = _scan_layers(dense_fn, x, params["layers"], remat)
+
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return x, caches
+
+
+def forward(cfg: ModelConfig, params: Params, inputs: dict, *,
+            collect_cache: bool = False, remat: bool = True):
+    """Full logits forward (tests / small-scale use). Production paths use
+    `forward_hidden` + chunked unembed (see `loss_fn` / decode.prefill) to
+    avoid materializing [B, S, V]."""
+    x, caches = forward_hidden(cfg, params, inputs,
+                               collect_cache=collect_cache, remat=remat)
+    return L.unembed(params["embed"], x, cfg), caches
+
+
+def loss_fn(cfg: ModelConfig, params: Params, batch: dict,
+            loss_chunk: int = 512) -> jax.Array:
+    """Mean next-token cross-entropy (labels are pre-shifted).
+
+    The unembed + softmax-CE runs in `loss_chunk`-sized sequence chunks
+    under remat, so the [B, S, V] logits tensor is never materialized —
+    peak loss memory is [B, chunk, V] (perf iteration #1, EXPERIMENTS §Perf).
+    """
+    x, _ = forward_hidden(cfg, params, batch)
+    labels = batch["labels"]
+    b, s, d = x.shape
+    c = min(flags.LOSS_CHUNK or loss_chunk, s)
+    nc = s // c if s % c == 0 else 1
+    if s % c != 0:
+        c = s
+    xc = x.reshape(b, nc, c, d).transpose(1, 0, 2, 3)
+    yc = labels.reshape(b, nc, c).transpose(1, 0, 2)
+
+    @jax.checkpoint
+    def chunk_nll(carry, xy):
+        xi, yi = xy
+        logits = SH.constrain_ce(
+            L.unembed(params["embed"], xi, cfg))       # [B, c, V] fp32
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(logits, yi[..., None], axis=-1)[..., 0]
+        return carry + jnp.sum(lse - gold), None
+
+    total, _ = jax.lax.scan(chunk_nll, jnp.float32(0), (xc, yc),
+                            unroll=flags.scan_unroll())
+    return total / (b * s)

@@ -1,0 +1,181 @@
+"""Mixture-of-Experts FFN with sort-based capacity dispatch (EP-shardable).
+
+Dispatch is the production (MaxText/GShard-style) formulation with static
+shapes: top-k assignments are sorted by expert id, ranked within expert, and
+scattered into a dense [E, C, D] buffer (capacity C from `capacity_factor`;
+overflow tokens drop, standard for capacity-factor MoE). Expert weights carry
+a leading E axis which the sharding rules place on the `model` mesh axis
+(expert parallelism); the token->expert scatter/gather is where XLA inserts
+the all-to-all traffic the roofline's collective term measures.
+
+Beyond-paper tie-in (DESIGN.md §Arch-applicability): expert load under top-k
+routing is skewed the way scale-free vertex degree is, and the paper's
+skew-aware treatment shows up here in two measured forms: (a) the dispatch
+path keeps the token-sorted gather sharded on tokens while experts shard on
+`model` (EP) — the BFS hub-delegation argument applied to experts (perf
+iteration #7); (b) the capacity factor plays the hub-threshold role and is
+hillclimbed in §Perf. Full hot-expert weight replication (serving hot
+experts without all-to-all) needs an explicit shard_map dispatch to be
+expressible and is left as the documented next step of this insight.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.parallel import sharding as SH
+
+
+def init_moe(key, cfg: ModelConfig, dtype) -> dict:
+    d, f, e = cfg.d_model, cfg.moe_d_ff, cfg.n_experts
+    k0, k1, k2, k3 = jax.random.split(key, 4)
+    return {
+        "router": (jax.random.normal(k0, (d, e)) * d ** -0.5).astype(jnp.float32),
+        "wg": (jax.random.normal(k1, (e, d, f)) * d ** -0.5).astype(dtype),
+        "wi": (jax.random.normal(k2, (e, d, f)) * d ** -0.5).astype(dtype),
+        "wo": (jax.random.normal(k3, (e, f, d)) * f ** -0.5).astype(dtype),
+    }
+
+
+def capacity(cfg: ModelConfig, num_tokens: int) -> int:
+    c = int(cfg.capacity_factor * num_tokens * cfg.top_k / cfg.n_experts) + 1
+    return max(c, 1)
+
+
+def moe_ffn(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """x: [B, S, D] -> [B, S, D]."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.n_experts, cfg.top_k
+    c = capacity(cfg, t)
+    xf = x.reshape(t, d)
+
+    logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), params["router"])
+    probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, k)                    # [t, k]
+    gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+
+    e_flat = idx.reshape(-1)                                # [t*k]
+    tok_flat = jnp.arange(t * k, dtype=jnp.int32) // k
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    tok_sorted = tok_flat[order]
+    starts = jnp.searchsorted(e_sorted, jnp.arange(e), side="left")
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[e_sorted]
+    keep = rank < c
+    slot = jnp.where(keep, e_sorted * c + rank, e * c)      # sentinel drops
+
+    # Keep the [t*k, D] dispatch gather sharded on tokens: the global sort
+    # otherwise leaves it (and its grad) fully replicated — 68 GB/device for
+    # qwen3 train_4k (perf iteration #7, EXPERIMENTS §Perf).
+    dispatched = SH.constrain_spec(xf[tok_sorted], "batch", None)
+    buf = jnp.zeros((e * c, d), x.dtype)
+    buf = buf.at[slot].set(dispatched, mode="drop").reshape(e, c, d)
+    buf = SH.constrain_spec(buf, "tp", None, None)   # experts on model axis (EP)
+
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, params["wg"]))
+    up = jnp.einsum("ecd,edf->ecf", buf, params["wi"])
+    out = jnp.einsum("ecf,efd->ecd", gate * up, params["wo"]).reshape(e * c, d)
+
+    safe_slot = jnp.minimum(slot, e * c - 1)
+    contrib = jnp.where(keep[:, None], out[safe_slot], 0)
+    contrib = SH.constrain_spec(contrib, "batch", None)
+    g_sorted = gates.reshape(-1)[order]
+    contrib = contrib * g_sorted[:, None].astype(contrib.dtype)
+    y = jnp.zeros((t, d), x.dtype).at[tok_sorted].add(contrib)
+    y = SH.constrain_spec(y, "batch", None)
+    return y.reshape(b, s, d)
+
+
+# ---------------------------------------------------- explicit-a2a dispatch --
+
+def moe_ffn_a2a(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Expert-parallel MoE with an explicit shard_map all-to-all schedule.
+
+    GSPMD auto-partitioning of the sort-based dispatch all-gathers the
+    [t*k, D] token buffer across the model axis (measured 27.7 TB/device for
+    qwen3 train_4k — EXPERIMENTS §Perf hillclimb (b)). The production
+    schedule is explicit: tokens are disjoint per device (batch over
+    (pod,data), sequence over model), each device buckets its local tokens
+    by destination expert, one all_to_all over `model` delivers them to the
+    expert owners, expert FFNs run densely on [e_loc, P*cap, D], and a
+    second all_to_all returns contributions to the token's home device — so
+    the only cross-device traffic is the dispatched tokens themselves, plus
+    the explicit FSDP weight all-gather over `data`.
+
+    Falls back to the GSPMD path off-mesh or when seq % model_size != 0
+    (decode).
+    """
+    amb = SH._ambient()
+    mesh, rules = amb
+    b, s, d = x.shape
+    if mesh is None or rules.tp_axis is None:
+        return moe_ffn(params, x, cfg)
+    ax_m = rules.tp_axis
+    p_model = mesh.shape[ax_m]
+    e, k = cfg.n_experts, cfg.top_k
+    if s % p_model != 0 or e % p_model != 0:
+        return moe_ffn(params, x, cfg)
+    e_loc = e // p_model
+    bat = rules.batch_axes
+    fsdp = rules.fsdp_axes
+
+    from jax.sharding import PartitionSpec as P
+
+    def body(x_loc, router, wg, wi, wo):
+        bl, sl, _ = x_loc.shape
+        t = bl * sl
+        cap = int(cfg.capacity_factor * t * k / e) + 1
+        xf = x_loc.reshape(t, d)
+        # FSDP: explicit weight all-gather over the fsdp axes (D dim).
+        for axn in (fsdp or ()):
+            wg = jax.lax.all_gather(wg, axn, axis=1, tiled=True)
+            wi = jax.lax.all_gather(wi, axn, axis=1, tiled=True)
+            wo = jax.lax.all_gather(wo, axn, axis=2, tiled=True)
+
+        logits = jnp.einsum("td,de->te", xf.astype(jnp.float32), router)
+        gates, idx = jax.lax.top_k(jax.nn.softmax(logits, axis=-1), k)
+        gates = gates / jnp.maximum(gates.sum(-1, keepdims=True), 1e-9)
+        e_flat = idx.reshape(-1)
+        tok_flat = jnp.arange(t * k, dtype=jnp.int32) // k
+        order = jnp.argsort(e_flat, stable=True)
+        e_sorted = e_flat[order]
+        tok_sorted = tok_flat[order]
+        starts = jnp.searchsorted(e_sorted, jnp.arange(e), side="left")
+        rank = jnp.arange(t * k, dtype=jnp.int32) - starts[e_sorted]
+        keep = rank < cap
+        slot = jnp.where(keep, e_sorted * cap + rank, e * cap)
+
+        send = jnp.zeros((e * cap, d), x.dtype)
+        send = send.at[slot].set(xf[tok_sorted], mode="drop")
+        send = send.reshape(p_model, e_loc * cap, d)
+        # dispatch: block p -> model-rank p (each rank owns e_loc experts)
+        recv = jax.lax.all_to_all(send, ax_m, split_axis=0, concat_axis=0,
+                                  tiled=True)                 # [P*e_loc*cap, d]
+        buf = recv.reshape(p_model, e_loc, cap, d).transpose(1, 0, 2, 3)
+        buf = buf.reshape(e_loc, p_model * cap, d)
+
+        gate_h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", buf, wg))
+        up_h = jnp.einsum("ecd,edf->ecf", buf, wi)
+        out = jnp.einsum("ecf,efd->ecd", gate_h * up_h, wo)
+
+        out = out.reshape(e_loc, p_model, cap, d).transpose(1, 0, 2, 3)
+        out = out.reshape(p_model, e_loc * cap, d)
+        back = jax.lax.all_to_all(out, ax_m, split_axis=0, concat_axis=0,
+                                  tiled=True).reshape(e * cap, d)
+
+        safe_slot = jnp.minimum(slot, e * cap - 1)
+        contrib = jnp.where(keep[:, None], back[safe_slot], 0)
+        contrib = contrib * gates.reshape(-1)[order][:, None].astype(contrib.dtype)
+        y = jnp.zeros((t, d), x.dtype).at[tok_sorted].add(contrib)
+        return y.reshape(bl, sl, d)
+
+    bat_spec = bat if bat else None
+    shm = jax.shard_map(
+        body, mesh=mesh,
+        in_specs=(P(bat_spec, ax_m, None), P(), P(ax_m, fsdp, None),
+                  P(ax_m, fsdp, None), P(ax_m, None, fsdp)),
+        out_specs=P(bat_spec, ax_m, None),
+        check_vma=False)
+    return shm(x, params["router"], params["wg"], params["wi"], params["wo"])

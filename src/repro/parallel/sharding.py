@@ -1,0 +1,270 @@
+"""Sharding policy: logical-axis rules -> PartitionSpecs for every leaf.
+
+Mesh: (pod, data, model). Policy (see EXPERIMENTS.md §Perf for measured
+effects):
+
+* **FSDP/ZeRO-3** — parameters + optimizer moments sharded over `fsdp_axes`
+  (default `("data",)`; the giant MoEs extend to `("pod","data")` so 400B of
+  optimizer state fits 16 GB/chip — cross-pod traffic is the measured cost).
+* **TP** over `model`: MLP d_ff, MoE experts (EP), vocab, and attention heads
+  *when divisible*; falls back to head_dim, then to replicated, for the
+  awkward head counts (yi-34b 56H, internvl 14H, hymba 25H, llama4 40H).
+  Replicated-attention archs additionally get **sequence parallelism**: the
+  model axis shards the sequence during attention (constraint applied in
+  train_step), so no compute is duplicated across `model` ranks.
+* **Batch** over (pod, data). `long_500k` (batch=1) shards the KV cache over
+  `data` along *sequence* instead — flash-decode style; the softmax
+  reductions over the sharded axis become the collective term.
+
+Divisibility is always checked; a rule that does not divide falls back to
+replication on that axis (never an error at lowering time).
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class AxisRules:
+    batch_axes: tuple = ("pod", "data")
+    fsdp_axes: tuple = ("data",)
+    tp_axis: str = "model"
+    seq_axis: str = "model"     # sequence parallelism axis (attention)
+
+    def present(self, mesh: Mesh) -> "AxisRules":
+        names = mesh.axis_names
+        return AxisRules(
+            batch_axes=tuple(a for a in self.batch_axes if a in names),
+            fsdp_axes=tuple(a for a in self.fsdp_axes if a in names),
+            tp_axis=self.tp_axis if self.tp_axis in names else None,
+            seq_axis=self.seq_axis if self.seq_axis in names else None,
+        )
+
+
+def _size(mesh: Mesh, axes) -> int:
+    if axes is None:
+        return 1
+    if isinstance(axes, str):
+        axes = (axes,)
+    return int(np.prod([mesh.shape[a] for a in axes])) if axes else 1
+
+
+def _fit(dim: int, mesh: Mesh, axes):
+    """axes if they divide dim, else None (replicate)."""
+    if axes is None:
+        return None
+    n = _size(mesh, axes)
+    if n > 1 and dim % n == 0:
+        return axes if isinstance(axes, str) else tuple(axes)
+    return None
+
+
+def param_specs(cfg, shapes, mesh: Mesh, rules: AxisRules) -> dict:
+    """PartitionSpec tree matching `model.param_shapes(cfg)`.
+
+    Every layer-stacked leaf gets a leading None for the scan axis.
+    """
+    r = rules.present(mesh)
+    tp, fsdp = r.tp_axis, (r.fsdp_axes or None)
+
+    def spec_for(path: str, shape: tuple) -> P:
+        stacked = any(s in path for s in
+                      ("layers", "enc/", "dec/", "layers_dense", "layers_moe"))
+        dims = shape[1:] if stacked else shape
+        leaf = path.rsplit("/", 1)[-1]
+
+        def mk(*entries):
+            out = [None] * len(dims)
+            for i, ax in enumerate(entries):
+                if i < len(dims):
+                    out[i] = _fit(dims[i], mesh, ax)
+            return P(*([None] + out if stacked else out))
+
+        if leaf == "table":                       # [V, D]
+            return mk(tp, fsdp)
+        if leaf == "unembed":                     # [D, V]
+            return mk(fsdp, tp)
+        if leaf in ("wq", "wk", "wv"):            # [D, N, h]
+            n = dims[1]
+            if _fit(n, mesh, tp):
+                return mk(fsdp, tp, None)
+            # Awkward head counts (yi-34b 56H, internvl 14H, hymba 25H,
+            # llama4 40H): REPLICATE over model rather than sharding
+            # head_dim — dh-sharding makes flash attention contract over a
+            # sharded dim (one psum of the S^2 scores per block pair:
+            # 6.7 TB/dev for hymba prefill_32k, perf iteration #9).
+            # Sequence parallelism shards the attention compute instead.
+            return mk(fsdp, None, None)
+        if leaf == "wo" and len(dims) == 3 and "attn" in path:  # [N, h, D]
+            n = dims[0]
+            if _fit(n, mesh, tp):
+                return mk(tp, None, fsdp)
+            return mk(None, None, fsdp)
+        if leaf == "router":                      # [D, E]
+            return mk(fsdp, None)
+        if leaf in ("wg", "wi") and len(dims) == 3:   # moe [E, D, F]
+            return mk(tp, fsdp, None)
+        if leaf == "wo" and len(dims) == 3:           # moe [E, F, D]
+            return mk(tp, None, fsdp)
+        if leaf in ("wg", "wi"):                  # mlp [D, F]
+            return mk(fsdp, tp)
+        if leaf == "wo":                          # mlp [F, D]
+            return mk(tp, fsdp)
+        if leaf == "in_proj":                     # [D, X]
+            return mk(fsdp, tp)
+        if leaf == "out_proj":                    # [di, D]
+            return mk(tp, fsdp)
+        if leaf in ("conv_w", "conv_b"):          # [W, ch] / [ch]
+            return mk(None, tp) if len(dims) == 2 else mk(tp)
+        if leaf == "norm" and len(dims) == 1 and dims[0] > 8192:
+            return mk(tp)
+        return mk(*([None] * len(dims)))          # scalars / norms: replicate
+
+    out = jax.tree_util.tree_map_with_path(
+        lambda kp, leaf: spec_for(
+            "/".join(str(getattr(k, "key", k)) for k in kp), leaf.shape),
+        shapes)
+    return out
+
+
+def batch_specs(inputs: dict, mesh: Mesh, rules: AxisRules) -> dict:
+    """Shard every input on its batch dim (dim 0), when divisible."""
+    r = rules.present(mesh)
+
+    def spec(leaf):
+        ax = _fit(leaf.shape[0], mesh, r.batch_axes)
+        if ax is None and len(r.batch_axes) == 1:
+            ax = _fit(leaf.shape[0], mesh, r.batch_axes[0])
+        return P(*([ax] + [None] * (len(leaf.shape) - 1)))
+
+    return jax.tree.map(spec, inputs)
+
+
+def cache_specs(cache_shapes, mesh: Mesh, rules: AxisRules,
+                seq_shard_axis: str = "data") -> dict:
+    """KV cache specs: batch over batch_axes when divisible, else sequence
+    over `seq_shard_axis` (long_500k flash-decode mode). Layout:
+    [L, B, S, K, h] / ssm [L, B, ...]."""
+    r = rules.present(mesh)
+
+    def spec(leaf):
+        dims = leaf.shape
+        out = [None] * len(dims)
+        b = dims[1]
+        bx = _fit(b, mesh, r.batch_axes) or _fit(b, mesh, r.batch_axes[-1:] if r.batch_axes else None)
+        if bx is not None:
+            out[1] = bx
+        elif len(dims) >= 5:  # batch=1 kv cache: shard sequence instead
+            out[2] = _fit(dims[2], mesh, seq_shard_axis)
+        # Also spread the cache over the model axis (perf iteration #6): a
+        # batch-only-sharded 32k cache leaves `model` ranks holding full
+        # replicas (e.g. stablelm decode_32k: 172 GB/device). Prefer KV
+        # heads, then head_dim, then sequence.
+        if len(dims) >= 5 and r.tp_axis:
+            for dim in (3, 4, 2):
+                if out[dim] is None and _fit(dims[dim], mesh, r.tp_axis):
+                    out[dim] = r.tp_axis
+                    break
+        return P(*out)
+
+    return jax.tree.map(spec, cache_shapes)
+
+
+def to_shardings(specs, mesh: Mesh):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        specs, is_leaf=lambda x: isinstance(x, P))
+
+
+def constrain(x, mesh_or_none, spec: P):
+    """with_sharding_constraint that degrades to no-op off-mesh (smoke tests)."""
+    if mesh_or_none is None:
+        return x
+    try:
+        return jax.lax.with_sharding_constraint(
+            x, NamedSharding(mesh_or_none, spec))
+    except (ValueError, TypeError):
+        return x
+
+
+# ----------------------------------------------- ambient activation sharding
+
+_ACTIVE: list = []   # stack of (mesh, AxisRules)
+
+
+class activate:
+    """Context manager making a mesh ambient for model-code constraints.
+
+    Model code stays mesh-agnostic: it calls `constrain_batch` etc., which
+    are no-ops unless lowering happens inside `with sharding.activate(mesh,
+    rules):` (as launch/dryrun.py and launch/train.py do). This is how the
+    activation-sharding rules (batch over (pod,data)) are enforced against
+    adverse GSPMD propagation — e.g. an embedding gather inheriting the
+    table's FSDP sharding and leaving batch unsharded (perf iteration #2,
+    EXPERIMENTS §Perf).
+    """
+
+    def __init__(self, mesh: Mesh, rules: AxisRules):
+        self.mesh, self.rules = mesh, rules.present(mesh)
+
+    def __enter__(self):
+        _ACTIVE.append((self.mesh, self.rules))
+        return self
+
+    def __exit__(self, *exc):
+        _ACTIVE.pop()
+        return False
+
+
+def _ambient():
+    return _ACTIVE[-1] if _ACTIVE else (None, None)
+
+
+def constrain_batch(x, batch_dim: int = 0):
+    """Constrain dim `batch_dim` to the batch axes (rest unconstrained)."""
+    mesh, r = _ambient()
+    if mesh is None:
+        return x
+    ax = _fit(x.shape[batch_dim], mesh, r.batch_axes)
+    if ax is None:
+        return x
+    spec = [None] * x.ndim
+    spec[batch_dim] = ax
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))
+
+
+def constrain_ce(logits):
+    """CE-chunk logits [B, c, V]: V on `model` when divisible, else the
+    chunk/sequence dim on `model` — either way no model-rank replicates the
+    unembed matmul (perf iteration #3, §Perf; bites when vocab % 16 != 0:
+    seamless 256206, internvl 151655, mamba2 50280, hymba 32001)."""
+    mesh, r = _ambient()
+    if mesh is None:
+        return logits
+    b, c, v = logits.shape
+    bx = _fit(b, mesh, r.batch_axes)
+    if _fit(v, mesh, r.tp_axis):
+        spec = P(bx, None, r.tp_axis)
+    else:
+        spec = P(bx, _fit(c, mesh, r.seq_axis), None)
+    return jax.lax.with_sharding_constraint(logits, NamedSharding(mesh, spec))
+
+
+def constrain_spec(x, *logical):
+    """Constrain with logical names: 'batch'|'fsdp'|'tp'|'seq'|None per dim."""
+    mesh, r = _ambient()
+    if mesh is None:
+        return x
+    name_map = {"batch": r.batch_axes, "fsdp": r.fsdp_axes,
+                "tp": r.tp_axis, "seq": r.seq_axis}
+    spec = []
+    for dim, l in enumerate(logical):
+        ax = name_map.get(l) if l else None
+        spec.append(_fit(x.shape[dim], mesh, ax))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, P(*spec)))

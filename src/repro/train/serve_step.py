@@ -1,0 +1,39 @@
+"""Serving steps: prefill and one-token decode (the dry-run's serve_step)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import decode as D
+
+
+def make_prefill_step(cfg: ModelConfig, ctx_len: int):
+    def prefill_step(params, inputs):
+        return D.prefill(cfg, params, inputs, ctx_len)
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig):
+    """(params, cache, tokens [B,1], positions [B]) -> (logits [B,V], cache)."""
+    def serve_step(params, cache, tokens, positions):
+        return D.decode_step(cfg, params, cache, tokens, positions)
+    return serve_step
+
+
+def greedy_generate(cfg: ModelConfig, params, prompt_tokens, steps: int,
+                    ctx_len: int):
+    """Reference generation loop (examples/serving integration tests)."""
+    logits, cache = D.prefill(cfg, params, {"tokens": prompt_tokens}, ctx_len)
+    b, s = prompt_tokens.shape
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+    out = [tok]
+    step_fn = jax.jit(make_decode_step(cfg))
+    for i in range(steps - 1):
+        positions = jnp.full((b,), s + i, jnp.int32)
+        logits, cache = step_fn(params, cache, tok, positions)
+        tok = jnp.argmax(logits, -1).astype(jnp.int32)[:, None]
+        out.append(tok)
+    return jnp.concatenate(out, axis=1)

@@ -1,0 +1,51 @@
+"""Training step: loss + grad + AdamW, with grad accumulation and the
+sequence-parallel attention constraint for replicated-attention archs.
+
+`make_train_step(cfg, opt)` returns a pure function
+`(params, opt_state, batch) -> (params, opt_state, metrics)` suitable for
+`jax.jit(..., in_shardings=..., donate_argnums=(0, 1))`. The dry-run lowers
+exactly this function.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.model import loss_fn
+from repro.train.optimizer import OptConfig, apply_updates
+
+
+def make_train_step(cfg: ModelConfig, opt: OptConfig,
+                    accum_steps: int = 1):
+    """Build the jit-able train step (grad-accumulation aware)."""
+
+    def loss(params, batch):
+        return loss_fn(cfg, params, batch)
+
+    def train_step(params, opt_state, batch):
+        if accum_steps == 1:
+            l, grads = jax.value_and_grad(loss)(params, batch)
+        else:
+            def micro(carry, mb):
+                acc_l, acc_g = carry
+                l, g = jax.value_and_grad(loss)(params, mb)
+                return (acc_l + l, jax.tree.map(jnp.add, acc_g, g)), None
+
+            micro_batch = jax.tree.map(
+                lambda x: x.reshape(accum_steps, x.shape[0] // accum_steps,
+                                    *x.shape[1:]), batch)
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (l, grads), _ = jax.lax.scan(micro, (jnp.float32(0), zeros),
+                                         micro_batch)
+            l = l / accum_steps
+            grads = jax.tree.map(lambda g: g / accum_steps, grads)
+        params, opt_state, metrics = apply_updates(params, grads, opt_state, opt)
+        metrics["loss"] = l
+        return params, opt_state, metrics
+
+    return train_step

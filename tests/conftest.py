@@ -1,0 +1,39 @@
+"""Shared fixtures. NOTE: no XLA_FLAGS here by design — smoke tests and
+benches must see 1 device; multi-device tests spawn subprocesses."""
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+for _p in (SRC, REPO):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def run_in_devices(code: str, n_devices: int, timeout: int = 420):
+    """Run python `code` in a subprocess with N fake host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    res = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True, timeout=timeout)
+    if res.returncode != 0:
+        raise AssertionError(
+            f"subprocess failed (rc={res.returncode}):\n{res.stdout}\n{res.stderr}")
+    return res.stdout
+
+
+@pytest.fixture(scope="session")
+def small_graph():
+    from repro.core import graph as G
+    return G.rmat(9, seed=7)
+
+
+@pytest.fixture(scope="session")
+def medium_graph():
+    from repro.core import graph as G
+    return G.rmat(11, seed=3)

@@ -1,0 +1,40 @@
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import checkpoint as CKPT
+
+
+def _tree(x=1.0):
+    return {"a": jnp.full((3, 2), x), "b": {"c": jnp.arange(5)}}
+
+
+def test_roundtrip(tmp_path):
+    t = _tree(2.5)
+    CKPT.save(tmp_path, 7, t, metadata={"note": "hi"})
+    restored, step, meta = CKPT.restore(tmp_path, _tree())
+    assert step == 7 and meta["note"] == "hi"
+    np.testing.assert_array_equal(np.asarray(restored["a"]), np.asarray(t["a"]))
+
+
+def test_latest_pointer_and_gc(tmp_path):
+    for s in (1, 2, 3, 4):
+        CKPT.save(tmp_path, s, _tree(float(s)), keep=2)
+    assert CKPT.latest_step(tmp_path) == 4
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert len(steps) == 2  # keep-k GC
+    restored, step, _ = CKPT.restore(tmp_path, _tree())
+    assert step == 4
+    assert float(np.asarray(restored["a"])[0, 0]) == 4.0
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    CKPT.save(tmp_path, 1, _tree())
+    bad = {"a": jnp.zeros((9, 9)), "b": {"c": jnp.arange(5)}}
+    with pytest.raises(ValueError):
+        CKPT.restore(tmp_path, bad)
+
+
+def test_missing_dir(tmp_path):
+    with pytest.raises(FileNotFoundError):
+        CKPT.restore(tmp_path / "nope", _tree())

