@@ -2,7 +2,9 @@
 
 Sweeps one knob at a time around the current best configuration (coordinate
 ascent), reporting harmonic-mean TEPS on a scale-S RMAT graph across 4
-partitions. Run under fake devices:
+partitions. One `GraphSession` carries the whole sweep: each (strategy,
+hub_fraction) pair partitions the graph once and each config compiles once,
+so the sweep only measures execution. Run under fake devices:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
       python -m benchmarks.bfs_hillclimb --scale 13
@@ -18,32 +20,21 @@ def main(argv=None):
     ap.add_argument("--roots", type=int, default=5)
     args = ap.parse_args(argv)
 
-    import numpy as np
-
     from repro.core import graph as G
-    from repro.core import partition as PT
     from repro.core.bfs import BFSConfig
-    from repro.core.hybrid_bfs import HybridConfig, hybrid_bfs
-    from repro.core import ref
-    import statistics, time
+    from repro.core.hybrid_bfs import HybridConfig
+    from repro.engine import Engine
+    from repro.launch.bfs_run import sample_roots
 
     g = G.rmat(args.scale, seed=0)
-    rng = np.random.default_rng(0)
-    cand = np.flatnonzero(g.degrees > 0)
-    roots = rng.choice(cand, args.roots, replace=False)
+    roots = sample_roots(g, args.roots)
+    engine = Engine(g)
 
     def measure(label, strategy, hub_frac, hcfg):
-        plan = PT.make_plan(g, args.nparts, strategy,
-                            hub_edge_fraction=hub_frac)
-        pg = PT.apply_plan(g, plan)
-        hybrid_bfs(pg, int(roots[0]), hcfg)   # warm/compile
-        teps = []
-        for root in roots:
-            t0 = time.perf_counter()
-            parent, level, _ = hybrid_bfs(pg, int(root), hcfg)
-            teps.append(g.num_undirected_edges / (time.perf_counter() - t0))
-        ref.validate_parents(g, int(roots[-1]), parent, level)
-        hm = statistics.harmonic_mean(teps)
+        res = engine.bfs(roots, hcfg, n_parts=args.nparts, strategy=strategy,
+                         hub_edge_fraction=hub_frac, batched=False)
+        res.validate(g, sample=1)
+        hm = res.teps_hmean
         print(f"{label:58s} {hm / 1e6:8.2f} MTEPS", flush=True)
         return hm
 

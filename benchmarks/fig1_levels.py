@@ -17,16 +17,21 @@ def main(argv=None):
     ap.add_argument("--graph", default="rmat", choices=("rmat", "twitter_x256"))
     args = ap.parse_args(argv)
 
-    from repro.core import graph as G, ref
-    from repro.core.bfs import BFSConfig, bfs_instrumented
+    from repro.core import graph as G
+    from repro.core.bfs import BFSConfig
+    from repro.engine import Engine
 
     g = (G.rmat(args.scale, seed=0) if args.graph == "rmat"
          else G.real_world_standin(args.graph))
     root = int(np.argmax(g.degrees))
-    parent, level, stats = bfs_instrumented(g, root, BFSConfig())
-    ref.validate_parents(g, root, parent, level)
-    # warm second run for timing (first pays compile)
-    _, _, stats = bfs_instrumented(g, root, BFSConfig())
+    engine = Engine(g)
+    # The engine warms the stepper executables on the first query, so this
+    # run's level times are already compile-free.
+    # n_parts=1: Fig. 1 is the single-device story; don't let auto-selection
+    # switch to BSP when fake devices are configured.
+    res = engine.bfs(root, BFSConfig(), backend="stepper", n_parts=1,
+                     validate=True)
+    stats = res.per_level_stats[0]
 
     print("# level,direction,frontier_size,avg_frontier_degree,ms")
     for s in stats:

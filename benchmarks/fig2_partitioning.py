@@ -38,7 +38,7 @@ def main(argv=None):
 
     from benchmarks.common import emit, run_with_devices
     from repro.core import graph as G
-    from repro.core import partition as PT
+    from repro.engine import GraphSession
     if args.scales:
         for scale in (10, 11, 12, 13):
             out = run_with_devices("benchmarks.fig2_partitioning", 1,
@@ -51,6 +51,7 @@ def main(argv=None):
         return
 
     g = G.rmat(args.scale, seed=0)
+    session = GraphSession(g)   # partition plans built once, shared below
     for strategy in ("random", "hub0", "specialized"):
         for nparts in (1, 2, 4):
             out = run_with_devices("benchmarks.fig2_partitioning",
@@ -64,7 +65,7 @@ def main(argv=None):
             # the per-device edge-balance ratio (deterministic; wall time on
             # this 1-core container is emulation-overhead-bound, see
             # EXPERIMENTS SSReproduction note).
-            pg = PT.apply_plan(g, PT.make_plan(g, nparts, strategy))
+            _, pg = session.partitioned(nparts, strategy)
             per_dev = pg.local_indptr[:, -1].astype(float)
             bal = float(per_dev.max() / max(per_dev.mean(), 1.0))
             emit(f"fig2_{strategy}_P{nparts}",

@@ -1,49 +1,30 @@
 """Fig. 3: runtime breakdown — init / compute / exchange (push+pull) /
 final parent aggregation — for the partitioned direction-optimized BFS.
-Uses the instrumented BSP stepper (real collectives, timed separately).
+Uses the engine's instrumented stepper backend (real collectives, each BSP
+phase timed separately; init/aggregation come from `result.timings`).
 """
 import argparse
 import json
-import time
-
-import numpy as np
 
 
 def _inproc(scale, nparts, roots):
     from repro.core import graph as G
-    from repro.core import partition as PT
-    from repro.core.hybrid_bfs import (HybridConfig, hybrid_bfs_instrumented,
-                                       make_hybrid_stepper)
+    from repro.engine import Engine
+    from repro.launch.bfs_run import sample_roots
 
     g = G.rmat(scale, seed=0)
-    plan = PT.make_plan(g, nparts, "specialized")
-    pg = PT.apply_plan(g, plan)
-    rng = np.random.default_rng(0)
-    cand = np.flatnonzero(g.degrees > 0)
-    out = {"init_s": 0.0, "compute_s": 0.0, "exchange_s": 0.0, "agg_s": 0.0}
-    hcfg = HybridConfig()
-    # warm
-    hybrid_bfs_instrumented(pg, int(cand[0]), hcfg)
-    init_fn, compute_fn, exchange_fn, finalize_fn, rootmap =         make_hybrid_stepper(pg, hcfg)
-    import jax
-    for root in rng.choice(cand, roots, replace=False):
-        t0 = time.perf_counter()
-        state = init_fn(rootmap(int(root)))
-        jax.block_until_ready(state["frontier"])
-        out["init_s"] += time.perf_counter() - t0
-        while int(np.asarray(state["frontier"]).sum()) > 0:
-            t0 = time.perf_counter()
-            nxt, pc, bu, bs = compute_fn(state)
-            jax.block_until_ready(nxt)
-            out["compute_s"] += time.perf_counter() - t0
-            t0 = time.perf_counter()
-            state = exchange_fn(state, nxt, pc, bu, bs)
-            jax.block_until_ready(state["frontier"])
-            out["exchange_s"] += time.perf_counter() - t0
-        t0 = time.perf_counter()
-        jax.block_until_ready(finalize_fn(state))
-        out["agg_s"] += time.perf_counter() - t0
-    out = {k: v / roots for k, v in out.items()}
+    engine = Engine(g)
+    res = engine.bfs(sample_roots(g, roots), backend="stepper",
+                     n_parts=nparts)
+    n = res.batch_size
+    out = {
+        "init_s": sum(t["init_s"] for t in res.timings) / n,
+        "compute_s": sum(s["compute_s"] for st in res.per_level_stats
+                         for s in st) / n,
+        "exchange_s": sum(s["exchange_s"] for st in res.per_level_stats
+                          for s in st) / n,
+        "agg_s": sum(t["agg_s"] for t in res.timings) / n,
+    }
     print("RESULT " + json.dumps(out), flush=True)
     return out
 

@@ -1,5 +1,9 @@
 """Fig. 4: per-level runtime, classic top-down vs direction-optimized,
 single partition ("2S") vs hybrid 4 partitions ("2S2G" analogue).
+
+Both partition counts go through the engine's instrumented stepper backend,
+which emits uniform per-level rows (compute_s/exchange_s; exchange is 0 on
+the single-partition path).
 """
 import argparse
 import json
@@ -9,28 +13,18 @@ import numpy as np
 
 def _inproc(scale, nparts, heuristic):
     from repro.core import graph as G
-    from repro.core import partition as PT
-    from repro.core.bfs import BFSConfig, bfs_instrumented
-    from repro.core.hybrid_bfs import HybridConfig, hybrid_bfs_instrumented
+    from repro.core.bfs import BFSConfig
+    from repro.engine import Engine
 
     g = G.rmat(scale, seed=0)
     root = int(np.argmax(g.degrees))
-    cfg = BFSConfig(heuristic=heuristic)
-    if nparts == 1:
-        # single-device fast path: honest per-level times without the
-        # BSP emulation overhead (see EXPERIMENTS SSReproduction note)
-        bfs_instrumented(g, root, cfg)               # warm
-        _, _, st = bfs_instrumented(g, root, cfg)
-        stats = [dict(level=x["level"], direction=x["direction"],
-                      frontier_size=x["frontier_size"],
-                      compute_s=x["seconds"], exchange_s=0.0) for x in st]
-        print("RESULT " + json.dumps(stats), flush=True)
-        return stats
-    plan = PT.make_plan(g, nparts, "specialized")
-    pg = PT.apply_plan(g, plan)
-    hcfg = HybridConfig(bfs=cfg)
-    hybrid_bfs_instrumented(pg, root, hcfg)          # warm
-    _, stats = hybrid_bfs_instrumented(pg, root, hcfg)
+    engine = Engine(g)
+    res = engine.bfs(root, BFSConfig(heuristic=heuristic), backend="stepper",
+                     n_parts=nparts)
+    stats = [dict(level=s["level"], direction=s["direction"],
+                  frontier_size=s["frontier_size"],
+                  compute_s=s["compute_s"], exchange_s=s["exchange_s"])
+             for s in res.per_level_stats[0]]
     print("RESULT " + json.dumps(stats), flush=True)
     return stats
 

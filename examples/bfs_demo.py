@@ -1,7 +1,9 @@
 """Hybrid partitioned BFS demo: the paper's Fig. 2 contrast in one run.
 
-Runs specialized vs random vs hub0 partitioning on 4 partitions and prints
-TEPS for each (needs 4+ fake devices):
+Runs specialized vs random vs hub0 partitioning on 4 partitions through ONE
+`GraphSession` (the graph is preprocessed once; each strategy adds a cached
+partition plan + executable) and prints TEPS for each (needs 4+ fake
+devices):
 
   XLA_FLAGS=--xla_force_host_platform_device_count=4 \
       PYTHONPATH=src python examples/bfs_demo.py
@@ -15,17 +17,24 @@ def main(scale: int = 12, nparts: int = 4):
         raise SystemExit(
             f"need {nparts} devices; run with XLA_FLAGS="
             f"--xla_force_host_platform_device_count={nparts}")
-    from repro.launch.bfs_run import run
+    from repro.core import graph as G
+    from repro.engine import Engine
+    from repro.launch.bfs_run import sample_roots
+
+    g = G.rmat(scale, seed=0)
+    engine = Engine(g)
+    roots = sample_roots(g, 4)
 
     print(f"{'strategy':>12} {'MTEPS':>8}  note")
     results = {}
     for strategy in ("random", "hub0", "specialized"):
-        res = run(scale=scale, nparts=nparts, strategy=strategy, roots=4)
-        results[strategy] = res["teps_hmean"]
+        res = engine.bfs(roots, n_parts=nparts, strategy=strategy,
+                         batched=False, validate=True)
+        results[strategy] = res.teps_hmean
         note = {"random": "paper baseline",
                 "hub0": "paper-faithful hub placement",
                 "specialized": "TPU-adapted (delegated hubs)"}[strategy]
-        print(f"{strategy:>12} {res['teps_hmean'] / 1e6:8.2f}  {note}")
+        print(f"{strategy:>12} {res.teps_hmean / 1e6:8.2f}  {note}")
     return results
 
 

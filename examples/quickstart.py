@@ -1,8 +1,9 @@
 """Quickstart: the paper's algorithm end to end in ~40 lines.
 
-Generates a Graph500-style RMAT graph, runs direction-optimized BFS,
-validates the parent tree, and prints per-level direction decisions —
-the Fig. 1 story at laptop scale.
+Generates a Graph500-style RMAT graph, runs a direction-optimized BFS
+through the traversal engine's instrumented backend, validates the parent
+tree, and prints per-level direction decisions — the Fig. 1 story at laptop
+scale.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -10,8 +11,9 @@ import numpy as np
 
 
 def main(tiny: bool = False):
-    from repro.core import graph as G, ref
-    from repro.core.bfs import BFSConfig, bfs_instrumented
+    from repro.core import graph as G
+    from repro.core.bfs import BFSConfig
+    from repro.engine import Engine
 
     scale = 10 if tiny else 14
     g = G.rmat(scale, seed=0)
@@ -19,10 +21,12 @@ def main(tiny: bool = False):
     print(f"RMAT scale {scale}: V={g.num_vertices:,} "
           f"E={g.num_undirected_edges:,} max_deg={g.max_degree}")
 
-    parent, level, stats = bfs_instrumented(g, root, BFSConfig(heuristic="paper"))
-    ref.validate_parents(g, root, parent, level)
+    engine = Engine(g)
+    res = engine.bfs(root, BFSConfig(heuristic="paper"), backend="stepper",
+                     n_parts=1, validate=True)
+    stats = res.per_level_stats[0]
     print(f"BFS from hub {root}: {len(stats)} levels, "
-          f"{(level >= 0).sum():,} reached, parent tree VALID")
+          f"{len(res.reached()):,} reached, parent tree VALID")
     for s in stats:
         bar = "#" * max(1, int(40 * s["frontier_size"] / g.num_vertices))
         print(f"  L{s['level']:<2} {s['direction']:>2} "

@@ -75,9 +75,12 @@ class DeviceGraph:
         assert g.num_directed_edges < INT_MAX, "per-partition E must be < 2^31"
         deg_ext = np.zeros(g.num_vertices + 1, dtype=np.int32)
         deg_ext[:g.num_vertices] = g.degrees
+        # Edgeless graphs keep one dummy slot so gathers stay well-formed
+        # (never addressed: every edge-slot predicate is False when E == 0).
+        indices = g.indices if g.num_directed_edges else np.zeros(1, np.int32)
         return cls(
             indptr=jnp.asarray(g.indptr, dtype=jnp.int32),
-            indices=jnp.asarray(g.indices, dtype=jnp.int32),
+            indices=jnp.asarray(indices, dtype=jnp.int32),
             deg_ext=jnp.asarray(deg_ext),
             num_vertices=g.num_vertices,
             num_directed_edges=g.num_directed_edges,
@@ -138,7 +141,7 @@ def _top_down_step(dg: DeviceGraph, cfg: BFSConfig, st: BFSState):
         src = jnp.minimum(src, v - 1)            # fill guard (valid==False)
         start = cum[owner] - degq[owner]
         eidx = dg.indptr[src] + (slots - start)
-        eidx = jnp.clip(eidx, 0, dg.num_directed_edges - 1)
+        eidx = jnp.clip(eidx, 0, max(dg.num_directed_edges - 1, 0))
         dst = jnp.where(valid, dg.indices[eidx], 0)
         fresh = valid & (st.visited[dst] == 0)
         next_flags = next_flags.at[dst].max(fresh.astype(jnp.uint8))
@@ -179,7 +182,7 @@ def _bottom_up_step(dg: DeviceGraph, cfg: BFSConfig, st: BFSState):
             col = s * w + jnp.arange(w, dtype=jnp.int32)
             nidx = rptr[:, None] + col[None, :]
             nvalid = (col[None, :] < rdeg[:, None]) & ~found[:, None]
-            nidx = jnp.clip(nidx, 0, dg.num_directed_edges - 1)
+            nidx = jnp.clip(nidx, 0, max(dg.num_directed_edges - 1, 0))
             nbr = jnp.where(nvalid, dg.indices[nidx], 0)
             hit = nvalid & (st.frontier[nbr] > 0)
             anyhit = jnp.any(hit, axis=1)
@@ -251,8 +254,16 @@ def make_level_step(dg: DeviceGraph, cfg: BFSConfig):
     return jax.jit(functools.partial(_advance, dg, cfg))
 
 
-@functools.partial(jax.jit, static_argnums=(2,))
-def _bfs_jit(dg: DeviceGraph, root, cfg: BFSConfig):
+def search_state(dg: DeviceGraph, root, cfg: BFSConfig) -> BFSState:
+    """Whole-search body: init + level loop, as a pure traceable function.
+
+    This is the public building block for compiled search plans: wrap it in
+    `jax.jit` (cfg static) for a one-root executable, or `jax.vmap` over
+    `root` for a batched multi-root executable (`repro.engine` does both and
+    caches the result). Under vmap the per-level `lax.cond` lowers to a
+    select, so every level pays both directions' work — correct, and still a
+    single fused program for the whole batch.
+    """
     st = init_state(dg, root)
     max_levels = cfg.max_levels or dg.num_vertices
 
@@ -260,6 +271,9 @@ def _bfs_jit(dg: DeviceGraph, root, cfg: BFSConfig):
         return (fr.count(st.frontier) > 0) & (st.cur_level < max_levels)
 
     return jax.lax.while_loop(cond, functools.partial(_advance, dg, cfg), st)
+
+
+_bfs_jit = jax.jit(search_state, static_argnums=(2,))
 
 
 def finalize(st: BFSState) -> tuple[np.ndarray, np.ndarray]:

@@ -37,6 +37,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 from repro.core import frontier as fr
 from repro.core.bfs import BFSConfig, INT_MAX
 from repro.core.partition import PartitionedGraph, PartitionPlan, unpermute, unpermute_ids
+from repro.parallel.collectives import shard_map_compat
 
 
 @dataclasses.dataclass(frozen=True)
@@ -229,30 +230,46 @@ def _device_bfs(pg_shapes, e_total, hub_count, hcfg: HybridConfig,
     return parent, level_arr, levels
 
 
-def hybrid_bfs(pg: PartitionedGraph, root_orig: int,
-               hcfg: HybridConfig = HybridConfig(),
-               mesh: Optional[Mesh] = None):
-    """Run the partitioned BFS on `pg.n_parts` devices; returns orig-id results.
+def default_mesh(n_parts: int, axis_name: str = "part") -> Mesh:
+    """1-D mesh over the first `n_parts` devices (helpful error otherwise)."""
+    devs = jax.devices()
+    if len(devs) < n_parts:
+        raise RuntimeError(
+            f"need {n_parts} devices for {n_parts} partitions, have "
+            f"{len(devs)} (set XLA_FLAGS=--xla_force_host_platform_"
+            f"device_count={n_parts})")
+    return Mesh(np.array(devs[:n_parts]), (axis_name,))
 
-    `root_orig` is in original vertex ids; results are mapped back through the
-    plan's permutation (parents as original ids, -1 unreached).
-    """
-    plan = pg.plan
-    n = plan.n_parts
-    if mesh is None:
-        devs = jax.devices()
-        if len(devs) < n:
-            raise RuntimeError(
-                f"need {n} devices for {n} partitions, have {len(devs)} "
-                "(set XLA_FLAGS=--xla_force_host_platform_device_count=N)")
-        mesh = Mesh(np.array(devs[:n]), (hcfg.axis_name,))
 
+def make_root_mapper(plan: PartitionPlan):
+    """Returns orig-id -> new-id root translation for a partition plan."""
     inv = np.full(plan.v_orig, -1, dtype=np.int64)
     real = plan.perm_new_to_old >= 0
     inv[plan.perm_new_to_old[real]] = np.flatnonzero(real)
-    root_new = int(inv[root_orig])
-    assert root_new >= 0
 
+    def root_mapper(root_orig: int) -> int:
+        root_new = int(inv[root_orig])
+        assert root_new >= 0, f"root {root_orig} not in plan"
+        return root_new
+
+    return root_mapper
+
+
+def make_hybrid_search(pg: PartitionedGraph,
+                       hcfg: HybridConfig = HybridConfig(),
+                       mesh: Optional[Mesh] = None):
+    """Build the partitioned whole-search callable (public compile target).
+
+    Returns `(search_fn, root_mapper)`. `search_fn(root_new)` is a pure
+    traceable function (graph arrays closed over) mapping a *new-id* root to
+    `(parent_new, level_new, levels)` in the padded id space; wrap it in
+    `jax.jit` once and reuse it across roots — `repro.engine` caches exactly
+    that executable per (graph, plan, config). `root_mapper` translates
+    original ids; `finalize_hybrid` maps results back.
+    """
+    plan = pg.plan
+    if mesh is None:
+        mesh = default_mesh(plan.n_parts, hcfg.axis_name)
     v_pad, r = plan.v_pad, pg.num_local_rows
     e_local = pg.local_indices.shape[1]
     pg_shapes = (v_pad, r, e_local)
@@ -260,23 +277,48 @@ def hybrid_bfs(pg: PartitionedGraph, root_orig: int,
     fn = functools.partial(_device_bfs, pg_shapes, pg.total_directed_edges,
                            plan.hub_count, hcfg)
     ax = hcfg.axis_name
-    shmapped = jax.shard_map(
+    shmapped = shard_map_compat(
         fn, mesh=mesh,
         in_specs=(P(ax), P(ax), P(ax), P(), P()),
-        out_specs=(P(), P(), P()),
-        check_vma=False)
-    run = jax.jit(shmapped)
-    parent_new, level_new, levels = run(
-        jnp.asarray(pg.local_indptr), jnp.asarray(pg.local_indices),
-        jnp.asarray(pg.local_row_gid), jnp.asarray(pg.deg_ext),
-        jnp.int32(root_new))
+        out_specs=(P(), P(), P()))
+    gl_indptr = jnp.asarray(pg.local_indptr)
+    gl_indices = jnp.asarray(pg.local_indices)
+    gl_rowgid = jnp.asarray(pg.local_row_gid)
+    gl_degext = jnp.asarray(pg.deg_ext)
+
+    def search_fn(root_new):
+        return shmapped(gl_indptr, gl_indices, gl_rowgid, gl_degext,
+                        jnp.asarray(root_new, jnp.int32))
+
+    return search_fn, make_root_mapper(plan)
+
+
+def finalize_hybrid(plan: PartitionPlan, parent_new, level_new):
+    """Padded new-id results -> original ids, Graph500 conventions (-1)."""
     parent_new = np.asarray(parent_new)
     level_new = np.asarray(level_new)
     parent_new = np.where(parent_new == INT_MAX, -1, parent_new)
     level_new = np.where(level_new == INT_MAX, -1, level_new)
     parent = unpermute_ids(plan, parent_new)
     level = unpermute(plan, level_new.astype(np.int64)).astype(np.int32)
-    return parent.astype(np.int32), level, int(levels)
+    return parent.astype(np.int32), level
+
+
+def hybrid_bfs(pg: PartitionedGraph, root_orig: int,
+               hcfg: HybridConfig = HybridConfig(),
+               mesh: Optional[Mesh] = None):
+    """Run the partitioned BFS on `pg.n_parts` devices; returns orig-id results.
+
+    `root_orig` is in original vertex ids; results are mapped back through the
+    plan's permutation (parents as original ids, -1 unreached). One-shot
+    convenience: compiles per call. For repeated queries use `repro.engine`,
+    which caches the executable built by `make_hybrid_search`.
+    """
+    search_fn, root_mapper = make_hybrid_search(pg, hcfg, mesh)
+    run = jax.jit(search_fn)
+    parent_new, level_new, levels = run(jnp.int32(root_mapper(root_orig)))
+    parent, level = finalize_hybrid(pg.plan, parent_new, level_new)
+    return parent, level, int(levels)
 
 
 # -------------------------------------------------- instrumented BSP loop --
@@ -288,25 +330,20 @@ def make_hybrid_stepper(pg: PartitionedGraph, hcfg: HybridConfig,
     Returns (init_fn, compute_fn, exchange_fn, finalize_fn, root_mapper):
     `compute_fn` runs one level's local TD/BU work on every partition (no
     communication); `exchange_fn` is exactly the per-round push/pull merge +
-    state update. Timing them separately reproduces the paper's
-    computation-vs-communication breakdown with real collectives.
+    state update; `finalize_fn` yields (parent_new, level_new) in the padded
+    id space (map back with `finalize_hybrid`). Timing compute vs exchange
+    separately reproduces the paper's computation-vs-communication breakdown
+    with real collectives.
     """
     plan = pg.plan
     n = plan.n_parts
     if mesh is None:
-        devs = jax.devices()
-        if len(devs) < n:
-            raise RuntimeError(f"need {n} devices, have {len(devs)}")
-        mesh = Mesh(np.array(devs[:n]), (hcfg.axis_name,))
+        mesh = default_mesh(n, hcfg.axis_name)
     v_pad, r = plan.v_pad, pg.num_local_rows
     e_local = pg.local_indices.shape[1]
     pg_shapes = (v_pad, r, e_local)
     cfg = hcfg.bfs
     ax = hcfg.axis_name
-
-    inv = np.full(plan.v_orig, -1, dtype=np.int64)
-    real = plan.perm_new_to_old >= 0
-    inv[plan.perm_new_to_old[real]] = np.flatnonzero(real)
 
     gl_indptr = jnp.asarray(pg.local_indptr)
     gl_indices = jnp.asarray(pg.local_indices)
@@ -316,9 +353,10 @@ def make_hybrid_stepper(pg: PartitionedGraph, hcfg: HybridConfig,
     def init_fn(root):
         visited = jnp.zeros(v_pad, jnp.uint8).at[root].set(1)
         pcand = jnp.full((n, v_pad), INT_MAX, jnp.int32).at[:, root].set(root)
+        lcand = jnp.full(v_pad, INT_MAX, jnp.int32).at[root].set(0)
         mu = gl_degext[:-1].sum(dtype=jnp.int32) - gl_degext[root]
         return dict(visited=visited, frontier=visited, pcand=pcand,
-                    cur=jnp.int32(0), bu=jnp.bool_(False),
+                    lcand=lcand, cur=jnp.int32(0), bu=jnp.bool_(False),
                     bu_steps=jnp.int32(0), mu=mu)
 
     def _compute(indptr, indices, row_gid, visited, frontier, bu):
@@ -332,9 +370,9 @@ def make_hybrid_stepper(pg: PartitionedGraph, hcfg: HybridConfig,
                                     visited, frontier))
         return nxt[None], pc[None]
 
-    shm = jax.shard_map(_compute, mesh=mesh,
-                        in_specs=(P(ax), P(ax), P(ax), P(), P(), P()),
-                        out_specs=(P(ax), P(ax)), check_vma=False)
+    shm = shard_map_compat(_compute, mesh=mesh,
+                           in_specs=(P(ax), P(ax), P(ax), P(), P(), P()),
+                           out_specs=(P(ax), P(ax)))
 
     @jax.jit
     def compute_fn(state):
@@ -353,21 +391,19 @@ def make_hybrid_stepper(pg: PartitionedGraph, hcfg: HybridConfig,
         pcand = jnp.where(newly[None] > 0,
                           jnp.minimum(state["pcand"], pc_stack),
                           state["pcand"])
+        lcand = jnp.where(newly > 0,
+                          jnp.minimum(state["lcand"], state["cur"] + 1),
+                          state["lcand"])
         visited = jnp.maximum(state["visited"], newly)
         mu = state["mu"] - fr.edge_count(newly, gl_degext[:-1])
-        return dict(visited=visited, frontier=newly, pcand=pcand,
+        return dict(visited=visited, frontier=newly, pcand=pcand, lcand=lcand,
                     cur=state["cur"] + 1, bu=bu, bu_steps=bu_steps, mu=mu)
 
     @jax.jit
     def finalize_fn(state):
-        return jnp.min(state["pcand"], axis=0)
+        return jnp.min(state["pcand"], axis=0), state["lcand"]
 
-    def root_mapper(root_orig: int) -> int:
-        root_new = int(inv[root_orig])
-        assert root_new >= 0
-        return root_new
-
-    return init_fn, compute_fn, exchange_fn, finalize_fn, root_mapper
+    return init_fn, compute_fn, exchange_fn, finalize_fn, make_root_mapper(plan)
 
 
 def hybrid_bfs_instrumented(pg: PartitionedGraph, root_orig: int,
@@ -375,8 +411,8 @@ def hybrid_bfs_instrumented(pg: PartitionedGraph, root_orig: int,
                             mesh: Optional[Mesh] = None):
     """Python-level BSP loop with per-level (compute, exchange) timing.
 
-    Returns (parent_orig, stats) where stats rows carry: level, direction,
-    frontier_size, compute_s, exchange_s.
+    Returns (parent_orig, level_orig, stats) where stats rows carry: level,
+    direction, frontier_size, compute_s, exchange_s.
     """
     import time as _time
 
@@ -400,7 +436,6 @@ def hybrid_bfs_instrumented(pg: PartitionedGraph, root_orig: int,
                           compute_s=t1 - t0, exchange_s=t2 - t1))
         if int(state["cur"]) > pg.plan.v_pad:
             raise RuntimeError("no termination")
-    parent_new = np.asarray(finalize_fn(state))
-    parent_new = np.where(parent_new == INT_MAX, -1, parent_new)
-    parent = unpermute_ids(pg.plan, parent_new)
-    return parent.astype(np.int32), stats
+    parent_new, level_new = finalize_fn(state)
+    parent, level = finalize_hybrid(pg.plan, parent_new, level_new)
+    return parent, level, stats

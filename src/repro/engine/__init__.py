@@ -1,0 +1,12 @@
+"""Unified traversal engine: graph sessions, compiled-plan caching, and
+batched multi-root BFS. See API.md for the full surface; in short:
+
+    from repro.engine import Engine
+    result = Engine(graph).bfs([root0, root1, ...])
+"""
+from repro.engine.engine import AUTO_MAX_PARTS, AUTO_SHARD_MIN_EDGES, BACKENDS, Engine
+from repro.engine.result import TraversalResult
+from repro.engine.session import GraphSession
+
+__all__ = ["Engine", "GraphSession", "TraversalResult", "BACKENDS",
+           "AUTO_SHARD_MIN_EDGES", "AUTO_MAX_PARTS"]

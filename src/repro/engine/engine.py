@@ -1,0 +1,373 @@
+"""The traversal engine: one entry point for every BFS in the repo.
+
+    from repro.engine import Engine
+    engine = Engine(graph)                      # wraps a GraphSession
+    result = engine.bfs([r0, r1, ...])          # batch or single root
+    result.validate(graph)
+
+Three backends, auto-selected from partition count and available devices
+(explicit `backend=` always wins):
+
+* ``fused``   — single-partition whole-search XLA program
+  (`repro.core.bfs.search_state`), batched over roots with `vmap`: a batch
+  of B roots is ONE compiled program and one dispatch.
+* ``sharded`` — the paper's partitioned BSP search under `shard_map`
+  (`repro.core.hybrid_bfs.make_hybrid_search`), pipelined over roots: all
+  queries are dispatched asynchronously against one cached executable and
+  the host blocks once at the end.
+* ``stepper`` — instrumented per-level python loop (single-partition or
+  BSP) returning per-level direction/frontier/timing stats; the benchmark
+  backend.
+
+Every executable is compiled at most once per (config, backend, batch
+shape) on the owning `GraphSession` — repeated queries are pure cache hits
+(see `GraphSession.trace_count`).
+"""
+from __future__ import annotations
+
+import time
+from typing import Optional, Sequence, Union
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import bfs as B
+from repro.core import frontier as fr
+from repro.core.bfs import BFSConfig
+from repro.core.graph import Graph
+from repro.core.hybrid_bfs import (HybridConfig, finalize_hybrid,
+                                   make_hybrid_search, make_hybrid_stepper)
+from repro.engine.result import TraversalResult
+from repro.engine.session import GraphSession
+
+BACKENDS = ("fused", "sharded", "stepper")
+
+# Auto-selection: below this many directed edges a single fused program beats
+# the BSP machinery even when more devices exist (exchange overhead dominates).
+AUTO_SHARD_MIN_EDGES = 1 << 19
+# Cap auto-selected partition counts; more partitions than this has never won
+# on the emulated-device containers this repo targets.
+AUTO_MAX_PARTS = 8
+
+RootsLike = Union[int, np.integer, Sequence[int], np.ndarray]
+
+
+def _tree_depth(level: np.ndarray) -> np.ndarray:
+    """Deepest discovered BFS level per root (0 when only the root)."""
+    return np.where(level >= 0, level, 0).max(axis=1).astype(np.int32)
+
+
+class Engine:
+    """Facade over a `GraphSession`: compile-once, query-many traversal."""
+
+    def __init__(self, graph_or_session: Union[Graph, GraphSession], **session_kw):
+        if isinstance(graph_or_session, GraphSession):
+            if session_kw:
+                raise ValueError("session kwargs only apply when passing a Graph")
+            self.session = graph_or_session
+        else:
+            self.session = GraphSession(graph_or_session, **session_kw)
+
+    @property
+    def graph(self) -> Graph:
+        return self.session.graph
+
+    # ----------------------------------------------------------- selection --
+
+    def _auto_parts(self) -> int:
+        n_dev = len(jax.devices())
+        if n_dev == 1 or self.graph.num_directed_edges < AUTO_SHARD_MIN_EDGES:
+            return 1
+        return min(n_dev, AUTO_MAX_PARTS)
+
+    def _resolve(self, backend: str, n_parts: Optional[int]):
+        if backend not in BACKENDS + ("auto",):
+            raise ValueError(f"unknown backend {backend!r}; "
+                             f"want one of {BACKENDS + ('auto',)}")
+        if n_parts is None:
+            n_parts = 1 if backend == "fused" else self._auto_parts()
+        if backend == "auto":
+            backend = "fused" if n_parts == 1 else "sharded"
+        if backend == "fused" and n_parts != 1:
+            raise ValueError("fused backend is single-partition; "
+                             f"got n_parts={n_parts}")
+        if backend == "sharded" and n_parts < 2:
+            raise ValueError("sharded backend needs n_parts >= 2 "
+                             "(use backend='fused' for one partition)")
+        return backend, n_parts
+
+    @staticmethod
+    def _normalize_cfg(cfg) -> HybridConfig:
+        if cfg is None:
+            return HybridConfig()
+        if isinstance(cfg, BFSConfig):
+            return HybridConfig(bfs=cfg)
+        if isinstance(cfg, HybridConfig):
+            return cfg
+        raise TypeError(f"cfg must be BFSConfig or HybridConfig, got {type(cfg)}")
+
+    def _normalize_roots(self, roots: RootsLike) -> np.ndarray:
+        arr = np.atleast_1d(np.asarray(roots, dtype=np.int64))
+        if arr.ndim != 1:
+            raise ValueError(f"roots must be a scalar or 1-D, got {arr.shape}")
+        v = self.graph.num_vertices
+        if arr.size:
+            if v == 0:
+                raise ValueError("cannot run BFS on an empty (0-vertex) graph")
+            if arr.min() < 0 or arr.max() >= v:
+                raise ValueError(f"roots out of range [0, {v})")
+        return arr
+
+    # --------------------------------------------------------------- query --
+
+    def bfs(self, roots: RootsLike, cfg=None, *, backend: str = "auto",
+            n_parts: Optional[int] = None, strategy: Optional[str] = None,
+            hub_edge_fraction: Optional[float] = None, batched: bool = True,
+            validate: bool = False) -> TraversalResult:
+        """Run BFS from one root or a batch of roots.
+
+        Args:
+          roots: int or 1-D int array of original vertex ids.
+          cfg: `BFSConfig` (heuristic/chunk knobs) or a full `HybridConfig`
+            (adds exchange/coordinator knobs for the sharded path).
+          backend: "auto" | "fused" | "sharded" | "stepper".
+          n_parts: partition count; None = auto from devices and graph size.
+          strategy / hub_edge_fraction: partitioning knobs (sharded/stepper
+            multi-partition paths); session defaults otherwise.
+          batched: True executes the batch as one fused program (fused) or
+            one pipelined async dispatch train (sharded) — maximum
+            throughput, per-root seconds are an even split. False runs and
+            times roots one at a time against the same cached executable —
+            the Graph500 measurement mode.
+          validate: check every parent tree against the python oracle.
+
+        Returns a `TraversalResult`; compile time is never inside the timed
+        region (the first query per (config, backend, batch shape) warms the
+        executable cache).
+        """
+        hcfg = self._normalize_cfg(cfg)
+        backend, n_parts = self._resolve(backend, n_parts)
+        # Canonical partition knobs so cache keys for "session default" and
+        # an explicitly passed default coincide.
+        strategy = strategy or self.session.default_strategy
+        if hub_edge_fraction is None:
+            hub_edge_fraction = self.session.default_hub_edge_fraction
+        roots_arr = self._normalize_roots(roots)
+        if roots_arr.size == 0:
+            v = self.graph.num_vertices
+            return TraversalResult(
+                roots=roots_arr, parent=np.empty((0, v), np.int32),
+                level=np.empty((0, v), np.int32),
+                num_levels=np.empty((0,), np.int32), seconds=0.0,
+                per_root_seconds=np.empty((0,)), backend=backend,
+                n_parts=n_parts, edges_undirected=self.graph.num_undirected_edges)
+
+        if backend == "fused":
+            res = self._bfs_fused(roots_arr, hcfg, batched)
+        elif backend == "sharded":
+            res = self._bfs_sharded(roots_arr, hcfg, n_parts, strategy,
+                                    hub_edge_fraction, batched)
+        else:
+            res = self._bfs_stepper(roots_arr, hcfg, n_parts, strategy,
+                                    hub_edge_fraction)
+        if validate:
+            res.validate(self.graph)
+        return res
+
+    # --------------------------------------------------------- fused path --
+
+    def _fused_executable(self, bcfg: BFSConfig, batch: int):
+        dg = self.session.device_graph()
+        key = ("fused", bcfg, batch)
+
+        def build():
+            def batched_search(roots_dev):
+                return jax.vmap(lambda r: B.search_state(dg, r, bcfg))(roots_dev)
+            return batched_search
+
+        return key, self.session.executable(key, build)
+
+    def _bfs_fused(self, roots_arr, hcfg, batched) -> TraversalResult:
+        e_und = self.graph.num_undirected_edges
+        if batched:
+            key, fn = self._fused_executable(hcfg.bfs, len(roots_arr))
+            dev_roots = jnp.asarray(roots_arr, jnp.int32)
+            self.session.warm(key, lambda: fn(dev_roots).frontier)
+            t0 = time.perf_counter()
+            st = fn(dev_roots)
+            jax.block_until_ready(st.frontier)
+            dt = time.perf_counter() - t0
+            parent, level = B.finalize(st)
+            per_root = np.full(len(roots_arr), dt / len(roots_arr))
+            return TraversalResult(roots_arr, parent, level, _tree_depth(level),
+                                   dt, per_root, "fused", 1, e_und)
+        # Graph500 mode: one root at a time against a batch-1 executable.
+        key, fn = self._fused_executable(hcfg.bfs, 1)
+        self.session.warm(
+            key, lambda: fn(jnp.asarray(roots_arr[:1], jnp.int32)).frontier)
+        parents, levels, per_root = [], [], []
+        for r in roots_arr:
+            t0 = time.perf_counter()
+            st = fn(jnp.asarray([r], jnp.int32))
+            jax.block_until_ready(st.frontier)
+            per_root.append(time.perf_counter() - t0)
+            p, l = B.finalize(st)
+            parents.append(p[0]); levels.append(l[0])
+        per_root = np.asarray(per_root)
+        level = np.stack(levels)
+        return TraversalResult(roots_arr, np.stack(parents), level,
+                               _tree_depth(level), float(per_root.sum()),
+                               per_root, "fused", 1, e_und)
+
+    # ------------------------------------------------------- sharded path --
+
+    def _sharded_executable(self, hcfg, n_parts, strategy, hub):
+        plan, pg = self.session.partitioned(n_parts, strategy, hub)
+        pkey = (n_parts, strategy, hub)
+        skey = ("sharded", hcfg) + pkey
+        search_fn, root_mapper = self.session.cached(
+            ("hybrid_search", hcfg) + pkey,
+            lambda: make_hybrid_search(
+                pg, hcfg, self.session.mesh_for(n_parts, hcfg.axis_name)))
+        fn = self.session.executable(skey, lambda: search_fn)
+        return skey, fn, root_mapper, plan
+
+    def _bfs_sharded(self, roots_arr, hcfg, n_parts, strategy, hub,
+                     batched) -> TraversalResult:
+        skey, fn, root_mapper, plan = self._sharded_executable(
+            hcfg, n_parts, strategy, hub)
+        roots_new = [root_mapper(int(r)) for r in roots_arr]
+        self.session.warm(skey, lambda: fn(jnp.int32(roots_new[0]))[0])
+        e_und = self.graph.num_undirected_edges
+        per_root = []
+        if batched:
+            # Pipelined: dispatch every query before blocking once.
+            t0 = time.perf_counter()
+            outs = [fn(jnp.int32(rn)) for rn in roots_new]
+            jax.block_until_ready([o[0] for o in outs])
+            dt = time.perf_counter() - t0
+            per_root = np.full(len(roots_arr), dt / len(roots_arr))
+        else:
+            outs = []
+            for rn in roots_new:
+                t0 = time.perf_counter()
+                out = fn(jnp.int32(rn))
+                jax.block_until_ready(out[0])
+                per_root.append(time.perf_counter() - t0)
+                outs.append(out)
+            per_root = np.asarray(per_root)
+            dt = float(per_root.sum())
+        parents, levels = [], []
+        for parent_new, level_new, _rounds in outs:
+            p, l = finalize_hybrid(plan, parent_new, level_new)
+            parents.append(p); levels.append(l)
+        level = np.stack(levels)
+        return TraversalResult(roots_arr, np.stack(parents), level,
+                               _tree_depth(level), dt, per_root,
+                               "sharded", n_parts, e_und)
+
+    # ------------------------------------------------------- stepper path --
+
+    def _bfs_stepper(self, roots_arr, hcfg, n_parts, strategy,
+                     hub) -> TraversalResult:
+        if n_parts == 1:
+            run_one = self._stepper_single(hcfg.bfs)
+        else:
+            run_one = self._stepper_sharded(hcfg, n_parts, strategy, hub)
+        wkey = ("stepper_warm", hcfg, n_parts, strategy, hub)
+        self.session.warm(wkey, lambda: run_one(int(roots_arr[0]))[0])
+        parents, levels, stats_all, timings, per_root = [], [], [], [], []
+        for r in roots_arr:
+            t0 = time.perf_counter()
+            p, l, stats, extra = run_one(int(r))
+            per_root.append(time.perf_counter() - t0)
+            parents.append(p); levels.append(l)
+            stats_all.append(stats)
+            timings.append(extra)
+        per_root = np.asarray(per_root)
+        level = np.stack(levels)
+        return TraversalResult(roots_arr, np.stack(parents), level,
+                               _tree_depth(level), float(per_root.sum()),
+                               per_root, "stepper", n_parts,
+                               self.graph.num_undirected_edges,
+                               per_level_stats=stats_all, timings=timings)
+
+    def _stepper_single(self, bcfg: BFSConfig):
+        dg = self.session.device_graph()
+        deg = dg.deg_ext[:-1]
+        step = self.session.cached(("stepper_step", bcfg),
+                                   lambda: B.make_level_step(dg, bcfg))
+        init = self.session.cached(
+            ("stepper_init",),
+            lambda: jax.jit(lambda r: B.init_state(dg, r)))
+
+        def run_one(root: int):
+            t0 = time.perf_counter()
+            st = init(jnp.int32(root))
+            jax.block_until_ready(st.frontier)
+            init_s = time.perf_counter() - t0
+            stats = []
+            while int(fr.count(st.frontier)) > 0:
+                nf = int(fr.count(st.frontier))
+                mf = int(fr.edge_count(st.frontier, deg))
+                t0 = time.perf_counter()
+                st = step(st)
+                jax.block_until_ready(st.frontier)
+                dt = time.perf_counter() - t0
+                stats.append(dict(level=int(st.cur_level), seconds=dt,
+                                  compute_s=dt, exchange_s=0.0,
+                                  direction="bu" if bool(st.bu_mode) else "td",
+                                  frontier_size=nf, frontier_edges=mf))
+                if int(st.cur_level) > dg.num_vertices:
+                    raise RuntimeError("BFS failed to terminate")
+            t0 = time.perf_counter()
+            parent, level = B.finalize(st)
+            agg_s = time.perf_counter() - t0
+            return parent, level, stats, dict(init_s=init_s, agg_s=agg_s)
+
+        return run_one
+
+    def _stepper_sharded(self, hcfg, n_parts, strategy, hub):
+        plan, pg = self.session.partitioned(n_parts, strategy, hub)
+        pieces = self.session.cached(
+            ("hybrid_stepper", hcfg, n_parts, strategy, hub),
+            lambda: make_hybrid_stepper(
+                pg, hcfg, self.session.mesh_for(n_parts, hcfg.axis_name)))
+        init_fn, compute_fn, exchange_fn, finalize_fn, root_mapper = pieces
+        deg = pg.deg_ext[:-1].astype(np.int64)
+
+        def run_one(root: int):
+            t0 = time.perf_counter()
+            state = init_fn(root_mapper(root))
+            jax.block_until_ready(state["frontier"])
+            init_s = time.perf_counter() - t0
+            stats = []
+            while True:
+                f = np.asarray(state["frontier"])
+                nf = int(f.sum())
+                if nf == 0:
+                    break
+                mf = int(deg[f > 0].sum())
+                t0 = time.perf_counter()
+                nxt, pc, bu, bs = compute_fn(state)
+                jax.block_until_ready(nxt)
+                t1 = time.perf_counter()
+                state = exchange_fn(state, nxt, pc, bu, bs)
+                jax.block_until_ready(state["frontier"])
+                t2 = time.perf_counter()
+                stats.append(dict(level=int(state["cur"]),
+                                  seconds=t2 - t0, compute_s=t1 - t0,
+                                  exchange_s=t2 - t1,
+                                  direction="bu" if bool(bu) else "td",
+                                  frontier_size=nf, frontier_edges=mf))
+                if int(state["cur"]) > plan.v_pad:
+                    raise RuntimeError("BFS failed to terminate")
+            t0 = time.perf_counter()
+            parent_new, level_new = finalize_fn(state)
+            jax.block_until_ready(parent_new)
+            parent, level = finalize_hybrid(plan, parent_new, level_new)
+            agg_s = time.perf_counter() - t0
+            return parent, level, stats, dict(init_s=init_s, agg_s=agg_s)
+
+        return run_one

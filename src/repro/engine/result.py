@@ -1,0 +1,92 @@
+"""Structured result of an engine traversal query (single- or multi-root).
+
+Replaces the ad-hoc `(parent, level)` / `(parent, level, nlevels)` /
+`(parent, level, stats)` tuples the pre-engine drivers each unpacked by hand.
+All arrays are host numpy in *original* vertex ids with Graph500 conventions
+(-1 = unreached); the batch dimension is always present, even for a single
+root, so callers never branch on batch size.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+from typing import Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class TraversalResult:
+    """Parent/level trees + timing for a batch of BFS roots.
+
+    Attributes:
+      roots: int64[B] original-id roots, in query order.
+      parent: int32[B, V]; parent[b, v] == -1 iff v unreached from roots[b].
+      level: int32[B, V]; BFS depth, -1 unreached.
+      num_levels: int32[B] BFS tree depth per root (deepest reached level;
+        0 when only the root's own component member is itself).
+      seconds: wall-clock for the whole batch, compile/warmup excluded.
+      per_root_seconds: float64[B]. Measured individually when the backend
+        ran roots one at a time with per-root blocking; an even split of
+        `seconds` when the batch executed as one fused program.
+      backend: "fused" | "sharded" | "stepper" (resolved, never "auto").
+      n_parts: partition count the query ran with.
+      edges_undirected: graph edge count used for TEPS (Graph500 rule).
+      per_level_stats: stepper backend only — one list of per-level dicts per
+        root (level, direction, frontier_size, frontier_edges, compute_s,
+        exchange_s, seconds).
+      timings: stepper backend only — one dict per root with out-of-loop
+        phase times (init_s, agg_s).
+    """
+
+    roots: np.ndarray
+    parent: np.ndarray
+    level: np.ndarray
+    num_levels: np.ndarray
+    seconds: float
+    per_root_seconds: np.ndarray
+    backend: str
+    n_parts: int
+    edges_undirected: int
+    per_level_stats: Optional[list] = None
+    timings: Optional[list] = None
+
+    @property
+    def batch_size(self) -> int:
+        return int(self.roots.shape[0])
+
+    @property
+    def teps(self) -> float:
+        """Aggregate throughput: traversed (undirected) edges per second."""
+        return self.batch_size * self.edges_undirected / max(self.seconds, 1e-12)
+
+    @property
+    def teps_per_root(self) -> np.ndarray:
+        return self.edges_undirected / np.maximum(self.per_root_seconds, 1e-12)
+
+    @property
+    def teps_hmean(self) -> float:
+        """Harmonic-mean per-root TEPS (the Graph500 reporting statistic)."""
+        if self.batch_size == 0:
+            return 0.0
+        return statistics.harmonic_mean(self.teps_per_root.tolist())
+
+    def reached(self, i: int = 0) -> np.ndarray:
+        """Vertex ids reached from roots[i]."""
+        return np.flatnonzero(self.level[i] >= 0)
+
+    def validate(self, graph, sample: Optional[int] = None) -> "TraversalResult":
+        """Graph500-style parent-tree validation against the python oracle.
+
+        Checks every root, or `sample` evenly spaced roots when set (large
+        batches). Raises AssertionError on any invalid tree; returns self so
+        it chains: `engine.bfs(roots).validate(g)`.
+        """
+        from repro.core import ref
+        idx = np.arange(self.batch_size)
+        if sample is not None and sample < self.batch_size:
+            idx = idx[np.linspace(0, self.batch_size - 1, sample).astype(int)]
+        for b in idx:
+            ref.validate_parents(graph, int(self.roots[b]),
+                                 self.parent[b], self.level[b])
+        return self

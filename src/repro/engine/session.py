@@ -1,0 +1,131 @@
+"""Graph sessions: preprocessing ownership + compiled-plan caching.
+
+A `GraphSession` is the serving-system unit of state for one graph (the
+paper treats a BFS as a query against a preprocessed, partitioned graph —
+Totem and Gunrock both amortize that preprocessing across many queries).
+The session owns, and builds at most once each:
+
+* the single-device CSR (`DeviceGraph`),
+* every `PartitionPlan`/`PartitionedGraph` requested, keyed by
+  (n_parts, strategy, hub_edge_fraction),
+* the device mesh per partition count,
+* compiled search executables, keyed by
+  (backend, config, n_parts/strategy, batch shape) — the graph itself is
+  the session, so graph shape is implicit in the key.
+
+Executables are wrapped so *tracing* (not calling) bumps a per-key counter;
+`trace_count` lets tests assert that repeated queries with an identical
+config never retrace.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+from repro.core import partition as PT
+from repro.core.bfs import DeviceGraph
+from repro.core.graph import Graph
+from repro.core.hybrid_bfs import default_mesh
+
+
+class GraphSession:
+    """Owns one graph's preprocessing products and compiled executables."""
+
+    def __init__(self, graph: Graph, *, mesh=None,
+                 default_strategy: str = "specialized",
+                 default_hub_edge_fraction: float = 0.5):
+        self.graph = graph
+        self.default_strategy = default_strategy
+        self.default_hub_edge_fraction = default_hub_edge_fraction
+        self._mesh = mesh
+        self._device_graph: Optional[DeviceGraph] = None
+        self._partitions: dict[tuple, tuple] = {}
+        self._executables: dict[Any, Callable] = {}
+        self._objects: dict[Any, Any] = {}
+        self._trace_counts: dict[Any, int] = {}
+        self._warmed: set = set()
+
+    # ------------------------------------------------------- preprocessing --
+
+    def device_graph(self) -> DeviceGraph:
+        """Single-device CSR arrays (built once, reused by every query)."""
+        if self._device_graph is None:
+            self._device_graph = DeviceGraph.from_graph(self.graph)
+        return self._device_graph
+
+    def partitioned(self, n_parts: int, strategy: Optional[str] = None,
+                    hub_edge_fraction: Optional[float] = None):
+        """(plan, partitioned_graph) for a partitioning, built once."""
+        strategy = strategy or self.default_strategy
+        hub = (self.default_hub_edge_fraction
+               if hub_edge_fraction is None else hub_edge_fraction)
+        key = (n_parts, strategy, hub)
+        if key not in self._partitions:
+            plan = PT.make_plan(self.graph, n_parts, strategy,
+                                hub_edge_fraction=hub)
+            self._partitions[key] = (plan, PT.apply_plan(self.graph, plan))
+        return self._partitions[key]
+
+    def mesh_for(self, n_parts: int, axis_name: str = "part"):
+        if self._mesh is not None:
+            if self._mesh.devices.size != n_parts:
+                raise ValueError(
+                    f"session mesh has {self._mesh.devices.size} devices but "
+                    f"the query wants {n_parts} partitions")
+            return self._mesh
+        return default_mesh(n_parts, axis_name)
+
+    # ------------------------------------------------------ compiled plans --
+
+    def executable(self, key, build: Callable[[], Callable],
+                   static_argnums=()) -> Callable:
+        """Cached jitted callable for `key`; `build` runs at most once.
+
+        `build()` must return a pure traceable function. The wrapper bumps
+        the key's trace counter from inside tracing, so a cache hit that
+        silently retraced (e.g. a weak-type or shape mismatch) is visible.
+        """
+        fn = self._executables.get(key)
+        if fn is None:
+            raw = build()
+
+            def counted(*args, _raw=raw, _key=key):
+                self._trace_counts[_key] = self._trace_counts.get(_key, 0) + 1
+                return _raw(*args)
+
+            fn = jax.jit(counted, static_argnums=static_argnums)
+            self._executables[key] = fn
+        return fn
+
+    def cached(self, key, build: Callable[[], Any]) -> Any:
+        """Cache for non-executable helper objects (steppers, mappers)."""
+        if key not in self._objects:
+            self._objects[key] = build()
+        return self._objects[key]
+
+    def warm(self, key, run: Callable[[], Any]) -> None:
+        """Run `run()` (and block) the first time `key` is used: pays
+        compilation outside any timed region."""
+        if key not in self._warmed:
+            jax.block_until_ready(run())
+            self._warmed.add(key)
+
+    # ---------------------------------------------------------- inspection --
+
+    def trace_count(self, key) -> int:
+        return self._trace_counts.get(key, 0)
+
+    @property
+    def total_traces(self) -> int:
+        return sum(self._trace_counts.values())
+
+    def cache_info(self) -> dict:
+        return {
+            "graph": dict(V=self.graph.num_vertices,
+                          E_undirected=self.graph.num_undirected_edges),
+            "partitions": sorted(self._partitions),
+            "executables": sorted(self._executables, key=repr),
+            "trace_counts": dict(self._trace_counts),
+        }

@@ -1,8 +1,9 @@
-"""The paper's workload driver: graph -> partition -> hybrid BFS -> TEPS.
+"""The paper's workload driver: graph -> engine session -> BFS -> TEPS.
 
 Graph500-style methodology: N search roots sampled from non-isolated
 vertices, harmonic-mean TEPS (undirected edges / time), parent-tree
-validation per run.
+validation per run. All traversal goes through `repro.engine` — one
+`GraphSession` per graph, one compiled executable per (config, backend).
 
   PYTHONPATH=src python -m repro.launch.bfs_run --scale 14 --nparts 4 \
       --strategy specialized     # needs XLA_FLAGS device_count >= nparts
@@ -10,78 +11,54 @@ validation per run.
 from __future__ import annotations
 
 import argparse
-import statistics
-import time
+import warnings
 
 import numpy as np
+
+
+def sample_roots(g, roots: int, seed: int = 0) -> np.ndarray:
+    """Sample distinct non-isolated roots, clamped to what the graph has.
+
+    Small/sparse graphs can hold fewer non-isolated vertices than requested
+    roots; `rng.choice(..., replace=False)` would crash. Clamp and warn
+    instead (falling back to all vertices when every vertex is isolated).
+    """
+    rng = np.random.default_rng(seed)
+    candidates = np.flatnonzero(g.degrees > 0)
+    if candidates.size == 0:
+        warnings.warn("graph has no edges; sampling roots from all vertices")
+        candidates = np.arange(g.num_vertices)
+    k = min(roots, candidates.size)
+    if k < roots:
+        warnings.warn(
+            f"requested {roots} roots but only {candidates.size} candidate "
+            f"vertices exist; clamping to {k}")
+    return rng.choice(candidates, size=k, replace=False)
 
 
 def run(scale: int, nparts: int, strategy: str, roots: int = 8,
         heuristic: str = "paper", edgefactor: int = 16, seed: int = 0,
         validate: bool = True, graph=None):
-    import jax
-
     from repro.core import graph as G
-    from repro.core import partition as PT
-    from repro.core import ref
     from repro.core.bfs import BFSConfig
-    from repro.core.hybrid_bfs import HybridConfig, hybrid_bfs
+    from repro.engine import Engine
 
     g = graph if graph is not None else G.rmat(scale, edgefactor=edgefactor,
                                                seed=seed)
-    rng = np.random.default_rng(seed)
-    candidates = np.flatnonzero(g.degrees > 0)
-    root_list = rng.choice(candidates, size=roots, replace=False)
-    bcfg = BFSConfig(heuristic=heuristic)
-
-    if nparts == 1:
-        # Fast path: one partition needs no shard_map/BSP machinery — the
-        # whole search is a single fused XLA program (the paper's "2S"
-        # column analogue).
-        from repro.core import bfs as BFS
-        import jax
-        import jax.numpy as jnp
-        dg = BFS.DeviceGraph.from_graph(g)
-        st = BFS._bfs_jit(dg, jnp.int32(int(root_list[0])), bcfg)
-        jax.block_until_ready(st.frontier)             # compile+warm
-        teps_list, times = [], []
-        for root in root_list:
-            t0 = time.perf_counter()
-            st = BFS._bfs_jit(dg, jnp.int32(int(root)), bcfg)
-            jax.block_until_ready(st.frontier)
-            dt = time.perf_counter() - t0
-            parent, level = BFS.finalize(st)
-            if validate:
-                ref.validate_parents(g, int(root), parent, level)
-            times.append(dt)
-            teps_list.append(g.num_undirected_edges / dt)
-        hmean = statistics.harmonic_mean(teps_list)
-        return {"scale": scale, "nparts": nparts, "strategy": strategy,
-                "heuristic": heuristic, "teps_hmean": hmean,
-                "teps_min": min(teps_list), "teps_max": max(teps_list),
-                "mean_s": sum(times) / len(times),
-                "V": g.num_vertices, "E_undirected": g.num_undirected_edges}
-
-    plan = PT.make_plan(g, nparts, strategy)
-    pg = PT.apply_plan(g, plan)
-    hcfg = HybridConfig(bfs=bcfg)
-
-    # warmup/compile
-    hybrid_bfs(pg, int(root_list[0]), hcfg)
-    teps_list, times = [], []
-    for root in root_list:
-        t0 = time.perf_counter()
-        parent, level, nlevels = hybrid_bfs(pg, int(root), hcfg)
-        dt = time.perf_counter() - t0
-        if validate:
-            ref.validate_parents(g, int(root), parent, level)
-        times.append(dt)
-        teps_list.append(g.num_undirected_edges / dt)
-    hmean = statistics.harmonic_mean(teps_list)
+    if roots < 1:
+        raise ValueError(f"need at least one search root, got roots={roots}")
+    root_list = sample_roots(g, roots, seed)
+    engine = Engine(g, default_strategy=strategy)
+    # batched=False: Graph500 measurement mode — every root individually
+    # timed against the one cached executable (first query pays the compile,
+    # outside the timed region).
+    res = engine.bfs(root_list, BFSConfig(heuristic=heuristic),
+                     n_parts=nparts, batched=False, validate=validate)
+    teps = res.teps_per_root
     return {"scale": scale, "nparts": nparts, "strategy": strategy,
-            "heuristic": heuristic, "teps_hmean": hmean,
-            "teps_min": min(teps_list), "teps_max": max(teps_list),
-            "mean_s": sum(times) / len(times),
+            "heuristic": heuristic, "teps_hmean": res.teps_hmean,
+            "teps_min": float(teps.min()), "teps_max": float(teps.max()),
+            "mean_s": float(res.per_root_seconds.mean()),
             "V": g.num_vertices, "E_undirected": g.num_undirected_edges}
 
 

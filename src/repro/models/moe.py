@@ -172,10 +172,10 @@ def moe_ffn_a2a(params: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
         return y.reshape(bl, sl, d)
 
     bat_spec = bat if bat else None
-    shm = jax.shard_map(
+    from repro.parallel.collectives import shard_map_compat
+    shm = shard_map_compat(
         body, mesh=mesh,
         in_specs=(P(bat_spec, ax_m, None), P(), P(ax_m, fsdp, None),
                   P(ax_m, fsdp, None), P(ax_m, None, fsdp)),
-        out_specs=P(bat_spec, ax_m, None),
-        check_vma=False)
+        out_specs=P(bat_spec, ax_m, None))
     return shm(x, params["router"], params["wg"], params["wi"], params["wo"])

@@ -1,0 +1,80 @@
+"""Deterministic stand-in for `hypothesis` when it is not installed.
+
+The property-test modules guard their import:
+
+    try:
+        from hypothesis import given, settings, strategies as st
+    except ImportError:
+        from hypothesis_fallback import given, settings, strategies as st
+
+With real hypothesis absent, `@given` parametrizes the test over a fixed,
+seeded sample drawn from each strategy — the properties still execute (unlike
+`importorskip`, which would silently drop whole modules), just without
+shrinking or adaptive example search. Only the strategy surface this repo
+uses is implemented: `st.integers(lo, hi)` and `st.sampled_from(seq)`.
+"""
+from __future__ import annotations
+
+import numpy as np
+import pytest
+
+_DEFAULT_EXAMPLES = 5
+_MAX_EXAMPLES_CAP = 10   # keep CI time bounded; hypothesis would adapt
+_SEED = 0xB0F5
+
+
+class _Integers:
+    def __init__(self, lo: int, hi: int):
+        self.lo, self.hi = lo, hi
+
+    def sample(self, rng):
+        return int(rng.integers(self.lo, self.hi, endpoint=True))
+
+
+class _SampledFrom:
+    def __init__(self, options):
+        self.options = list(options)
+
+    def sample(self, rng):
+        return self.options[int(rng.integers(len(self.options)))]
+
+
+class strategies:
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Integers:
+        return _Integers(min_value, max_value)
+
+    @staticmethod
+    def sampled_from(options) -> _SampledFrom:
+        return _SampledFrom(options)
+
+
+def settings(max_examples: int = _DEFAULT_EXAMPLES, **_ignored):
+    """Records max_examples for `given`; other knobs (deadline, ...) ignored."""
+    def deco(fn):
+        fn._fallback_max_examples = max_examples
+        return fn
+    return deco
+
+
+def given(*strats):
+    """Parametrize the test over a deterministic sample of the strategies.
+
+    The wrapped test must take exactly the drawn arguments (true for every
+    property test in this repo); fixtures are not mixed in.
+    """
+    def deco(fn):
+        n = min(getattr(fn, "_fallback_max_examples", _DEFAULT_EXAMPLES),
+                _MAX_EXAMPLES_CAP)
+        rng = np.random.default_rng(_SEED)
+        cases = [tuple(s.sample(rng) for s in strats) for _ in range(n)]
+
+        def runner(_fallback_case):
+            fn(*_fallback_case)
+
+        runner.__name__ = fn.__name__
+        runner.__doc__ = fn.__doc__
+        return pytest.mark.parametrize(
+            "_fallback_case", cases,
+            ids=[f"case{i}" for i in range(n)])(runner)
+    return deco

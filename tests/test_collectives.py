@@ -3,7 +3,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # run properties on a fixed seeded sample
+    from hypothesis_fallback import given, settings, strategies as st
 
 from repro.parallel.collectives import dequantize_int8, quantize_int8
 from conftest import run_in_devices
@@ -33,7 +36,8 @@ def test_quantize_unbiased():
 CODE = """
 import jax, jax.numpy as jnp, numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
-from repro.parallel.collectives import compressed_psum, or_allreduce_flags, or_allreduce_bitmap
+from repro.parallel.collectives import (compressed_psum, or_allreduce_flags,
+                                        or_allreduce_bitmap, shard_map_compat)
 from repro.core import frontier as fr
 
 mesh = Mesh(np.array(jax.devices()[:4]), ("d",))
@@ -41,8 +45,8 @@ def f(x):
     g = {"w": x * (jax.lax.axis_index("d") + 1.0)}
     return compressed_psum(g, "d", jax.random.PRNGKey(0))["w"]
 xs = jnp.ones((4, 256), jnp.float32)
-out = jax.jit(jax.shard_map(f, mesh=mesh, in_specs=P("d"), out_specs=P("d"),
-              check_vma=False))(xs)
+out = jax.jit(shard_map_compat(f, mesh=mesh, in_specs=P("d"),
+              out_specs=P("d")))(xs)
 want = (1 + 2 + 3 + 4) / 4.0
 np.testing.assert_allclose(np.asarray(out), want, atol=0.05)
 
@@ -50,8 +54,8 @@ def g(flags):
     flags = flags.reshape(-1)
     return or_allreduce_flags(flags, "d")[None]
 flags = (np.arange(4)[:, None] == np.arange(4)[None]).astype(np.uint8)
-merged = jax.jit(jax.shard_map(g, mesh=mesh, in_specs=P("d"), out_specs=P("d"),
-                 check_vma=False))(jnp.asarray(flags))
+merged = jax.jit(shard_map_compat(g, mesh=mesh, in_specs=P("d"),
+                 out_specs=P("d")))(jnp.asarray(flags))
 np.testing.assert_array_equal(np.asarray(merged), np.ones((4, 4), np.uint8))
 print("COLLECTIVES_OK")
 """

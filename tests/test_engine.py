@@ -1,0 +1,176 @@
+"""repro.engine: batched multi-root BFS vs oracle, compiled-plan cache hits,
+backend selection, and the no-private-imports API boundary."""
+import os
+
+import numpy as np
+import pytest
+
+from conftest import run_in_devices
+from repro.core import graph as G, ref
+from repro.core.bfs import BFSConfig
+from repro.engine import Engine, GraphSession, TraversalResult
+
+
+def _fused_keys(session):
+    return [k for k in session.cache_info()["trace_counts"] if k[0] == "fused"]
+
+
+def test_batched_multiroot_matches_reference(medium_graph):
+    g = medium_graph
+    rng = np.random.default_rng(0)
+    roots = rng.choice(np.flatnonzero(g.degrees > 0), 8, replace=False)
+    res = Engine(g).bfs(roots, BFSConfig())
+    assert isinstance(res, TraversalResult)
+    assert res.parent.shape == (8, g.num_vertices)
+    assert res.backend == "fused" and res.batch_size == 8
+    for b, root in enumerate(roots):
+        ref.validate_parents(g, int(root), res.parent[b], res.level[b])
+
+
+def test_batch_of_8_roots_single_trace(small_graph):
+    """Acceptance: a >=8-root batch compiles exactly once per (config,
+    backend) pair, and identical follow-up queries never retrace."""
+    session = GraphSession(small_graph)
+    engine = Engine(session)
+    cfg = BFSConfig(heuristic="paper")
+    roots = np.arange(8)
+    engine.bfs(roots, cfg)
+    keys = _fused_keys(session)
+    assert len(keys) == 1
+    assert session.trace_count(keys[0]) == 1
+    # same config + batch shape, different roots: pure cache hit
+    engine.bfs(roots + 100, cfg)
+    engine.bfs(roots, BFSConfig(heuristic="paper"))  # equal config, new object
+    assert session.trace_count(keys[0]) == 1
+    assert session.total_traces == 1
+    # a different config is a different plan: one more trace, old key untouched
+    engine.bfs(roots, BFSConfig(heuristic="beamer"))
+    assert session.trace_count(keys[0]) == 1
+    assert session.total_traces == 2
+
+
+def test_unbatched_mode_shares_one_executable(small_graph):
+    session = GraphSession(small_graph)
+    engine = Engine(session)
+    res = engine.bfs([3, 5, 9], batched=False, validate=True)
+    assert res.per_root_seconds.shape == (3,)
+    # 3 roots, one batch-1 executable, one trace
+    assert session.total_traces == 1
+    assert res.teps_hmean > 0
+
+
+def test_scalar_root_and_empty_batch(small_graph):
+    engine = Engine(small_graph)
+    res = engine.bfs(7)
+    assert res.parent.shape == (1, small_graph.num_vertices)
+    empty = engine.bfs(np.array([], dtype=np.int64))
+    assert empty.parent.shape == (0, small_graph.num_vertices)
+    assert empty.seconds == 0.0
+
+
+def test_degenerate_edgeless_graph():
+    g = G.from_edges(np.array([], np.int64), np.array([], np.int64), 6)
+    res = Engine(g).bfs([0, 3, 5])
+    for b, root in enumerate([0, 3, 5]):
+        assert res.parent[b, root] == root and res.level[b, root] == 0
+        others = np.arange(6) != root
+        assert (res.parent[b, others] == -1).all()
+        ref.validate_parents(g, root, res.parent[b], res.level[b])
+
+
+def test_degenerate_star_graph():
+    center, leaves = 0, np.arange(1, 7)
+    g = G.from_edges(np.zeros(6, np.int64), leaves, 7)
+    res = Engine(g).bfs([center, 3], validate=True)
+    assert res.num_levels[0] == 1 and res.num_levels[1] == 2
+    assert (res.level[0, leaves] == 1).all()
+
+
+def test_degenerate_disconnected_graph():
+    # two components: {0,1,2} path and {3,4} edge; 5 isolated
+    g = G.from_edges(np.array([0, 1, 3]), np.array([1, 2, 4]), 6)
+    res = Engine(g).bfs([0, 4, 5], validate=True)
+    assert (res.level[0, [3, 4, 5]] == -1).all()
+    assert (res.level[1, [0, 1, 2, 5]] == -1).all()
+    assert res.reached(2).tolist() == [5]
+
+
+def test_stepper_backend_stats(small_graph):
+    g = small_graph
+    root = int(np.argmax(g.degrees))
+    res = Engine(g).bfs(root, backend="stepper", validate=True)
+    stats = res.per_level_stats[0]
+    # one BSP round per discovered level + the final empty-discovery round
+    assert len(stats) == res.num_levels[0] + 1
+    assert stats[0]["direction"] == "td" and stats[0]["frontier_size"] == 1
+    for s in stats:
+        assert s["seconds"] >= s["compute_s"] >= 0
+    assert set(res.timings[0]) == {"init_s", "agg_s"}
+
+
+def test_backend_validation_errors(small_graph):
+    engine = Engine(small_graph)
+    with pytest.raises(ValueError):
+        engine.bfs(0, backend="warp")
+    with pytest.raises(ValueError):
+        engine.bfs(0, backend="fused", n_parts=2)
+    with pytest.raises(ValueError):
+        engine.bfs(0, backend="sharded", n_parts=1)
+    with pytest.raises(ValueError):
+        engine.bfs(small_graph.num_vertices)  # root out of range
+
+
+def test_no_private_core_imports_outside_core():
+    """API boundary: `_bfs_jit` / `_device_bfs` / other core-private symbols
+    must not be referenced outside src/repro/core."""
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    offenders = []
+    for base in ("src", "examples", "benchmarks", "tests"):
+        for dirpath, _dirs, files in os.walk(os.path.join(repo, base)):
+            if os.path.join("repro", "core") in dirpath:
+                continue
+            for fname in files:
+                if not fname.endswith(".py"):
+                    continue
+                path = os.path.join(dirpath, fname)
+                text = open(path, encoding="utf-8").read()
+                for sym in ("_bfs_jit", "_device_bfs", "_top_down_step",
+                            "_bottom_up_step", "_local_top_down",
+                            "_local_bottom_up"):
+                    if sym in text and fname != os.path.basename(__file__):
+                        offenders.append(f"{path}: {sym}")
+    assert not offenders, "\n".join(offenders)
+
+
+SHARDED_CODE = """
+import numpy as np
+from repro.core import graph as G, ref
+from repro.core.bfs import BFSConfig
+from repro.engine import Engine, GraphSession
+
+g = G.rmat(9, seed=3)
+session = GraphSession(g)
+engine = Engine(session)
+roots = [int(np.argmax(g.degrees)), 0, 7, 19, 30, 41, 52, 63]
+res = engine.bfs(roots, BFSConfig(), n_parts=4)
+assert res.backend == "sharded" and res.parent.shape == (8, g.num_vertices)
+for b, root in enumerate(roots):
+    ref.validate_parents(g, root, res.parent[b], res.level[b])
+# pipelined batch + per-root mode + a second batch: still ONE trace
+engine.bfs(roots[:2], BFSConfig(), n_parts=4, batched=False)
+engine.bfs([11, 13], BFSConfig(), n_parts=4)
+counts = list(session.cache_info()["trace_counts"].values())
+assert counts == [1], counts
+# stepper backend on the same session, multi-partition
+res2 = engine.bfs(roots[0], backend="stepper", n_parts=4)
+st = res2.per_level_stats[0]
+assert st and all(s["exchange_s"] >= 0 for s in st)
+ref.validate_parents(g, roots[0], res2.parent[0], res2.level[0])
+print("ENGINE_SHARDED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_engine_sharded_4dev():
+    out = run_in_devices(SHARDED_CODE, 4, timeout=420)
+    assert "ENGINE_SHARDED_OK" in out

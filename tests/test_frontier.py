@@ -1,7 +1,10 @@
 """Bitmap frontier ops: unit + property tests."""
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # run properties on a fixed seeded sample
+    from hypothesis_fallback import given, settings, strategies as st
 
 from repro.core import frontier as fr
 

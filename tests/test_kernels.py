@@ -2,7 +2,10 @@
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ImportError:      # run properties on a fixed seeded sample
+    from hypothesis_fallback import given, settings, strategies as st
 
 from repro.kernels import ops, ref
 

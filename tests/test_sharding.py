@@ -12,10 +12,16 @@ try:
     from jax.sharding import AbstractMesh
 
     def mk_mesh(shape, names):
-        try:
-            return AbstractMesh(shape, names)
-        except TypeError:
-            return AbstractMesh(dict(zip(names, shape)))
+        # JAX API drift: AbstractMesh(shape, names) (new) vs
+        # AbstractMesh({name: size}) vs AbstractMesh(((name, size), ...))
+        # (0.4.x, which raises ValueError — not TypeError — on the new form).
+        for args in ((shape, names), (dict(zip(names, shape)),),
+                     (tuple(zip(names, shape)),)):
+            try:
+                return AbstractMesh(*args)
+            except (TypeError, ValueError):
+                continue
+        raise TypeError("no known AbstractMesh constructor form worked")
     HAVE_ABSTRACT = True
 except ImportError:
     HAVE_ABSTRACT = False

@@ -28,6 +28,29 @@ def test_direction_optimized_beats_topdown_on_edge_checks():
     assert do_td_edges < 0.35 * td_edges, (do_td_edges, td_edges)
 
 
+def test_root_sampling_clamps_on_sparse_graphs():
+    """Requesting more roots than the graph has non-isolated vertices must
+    clamp with a warning, not crash `rng.choice(..., replace=False)`."""
+    import warnings
+    from repro.core import graph as G
+    from repro.launch.bfs_run import run, sample_roots
+
+    g = G.from_edges(np.array([0, 1]), np.array([1, 2]), 8)  # 3 non-isolated
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        roots = sample_roots(g, 8)
+    assert sorted(roots.tolist()) == [0, 1, 2]
+    assert any("clamping" in str(w.message) for w in caught)
+    res = run(scale=0, nparts=1, strategy="specialized", roots=8, graph=g)
+    assert res["teps_hmean"] > 0
+
+    edgeless = G.from_edges(np.array([], np.int64), np.array([], np.int64), 4)
+    with warnings.catch_warnings(record=True) as caught:
+        warnings.simplefilter("always")
+        roots = sample_roots(edgeless, 2)
+    assert len(roots) == 2 and any("no edges" in str(w.message) for w in caught)
+
+
 def test_quickstart_example_runs():
     import examples.quickstart as q
     q.main(tiny=True)
