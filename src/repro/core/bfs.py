@@ -9,7 +9,7 @@ shapes so the whole search (or one level) is a compiled XLA program:
   Ownership of an edge slot is recovered with a vectorized `searchsorted`
   over the queue's degree prefix sum — the TPU-native replacement for the
   GPU's per-thread edge binning ("virtual warp" has no TPU analogue; see
-  DESIGN.md §Hardware-adaptation).
+  API.md §Kernel-backed traversal).
 * **Bottom-up (pull)**: unvisited vertices are scanned in row chunks; each
   chunk walks its adjacency in width-`bu_slab` slabs with a while-loop that
   exits as soon as every row in the chunk found a frontier parent —
@@ -18,6 +18,21 @@ shapes so the whole search (or one level) is a compiled XLA program:
 * Direction switching implements both the paper's heuristic (static fraction
   of total edges + fixed number of bottom-up rounds, §3.3) and Beamer's
   alpha/beta heuristic.
+
+Two interchangeable formulations of the per-level steps exist:
+
+* the pure-XLA gather/scatter loops above (the reference path), and
+* a Pallas kernel path (`BFSConfig.backend_kernels`) dispatching to
+  `repro.kernels.ops` over degree-bucketed ELL tiles (`repro.core.ell`):
+  block-early-exit bottom-up, fused visited-gather top-down, and one fused
+  pack+count+edge-mass pass for the per-level frontier statistics, which
+  thread through `BFSState.nf`/`BFSState.mf` so neither the direction
+  heuristic nor the loop condition re-scans the frontier.
+
+Both produce bitwise-identical parent/level arrays (gated by
+tests/test_kernel_bfs.py); `backend_kernels=None` auto-enables the kernel
+path on TPU backends and keeps XLA elsewhere (where the kernels only run
+under the Pallas interpreter).
 
 All vertex/edge indices are int32 (per-partition E < 2**31; the multi-pod
 sharding in `hybrid_bfs.py` keeps per-device edge counts far below this).
@@ -32,8 +47,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import ell as ELL
 from repro.core import frontier as fr
 from repro.core.graph import Graph
+from repro.kernels import ops as K
 
 INT_MAX = np.iinfo(np.int32).max
 
@@ -50,6 +67,18 @@ class BFSConfig:
     bu_chunk: int = 512           # rows per bottom-up chunk
     bu_slab: int = 32             # neighbour slots per bottom-up slab
     max_levels: int = 0           # 0 = num_vertices (safe upper bound)
+    # Pallas kernel path over ELL tiles. None = auto: real Mosaic lowering on
+    # TPU backends, XLA reference path elsewhere (where kernels would run
+    # under the interpreter). Explicit True forces the kernel path anywhere
+    # (interpret mode off-TPU — the CI equivalence configuration).
+    backend_kernels: Optional[bool] = None
+
+
+def kernels_enabled(cfg: BFSConfig) -> bool:
+    """Resolve `cfg.backend_kernels` (None = auto: TPU only)."""
+    if cfg.backend_kernels is None:
+        return jax.default_backend() == "tpu"
+    return cfg.backend_kernels
 
 
 @jax.tree_util.register_pytree_node_class
@@ -98,10 +127,13 @@ class BFSState:
     bu_mode: jax.Array    # bool scalar: currently bottom-up
     bu_steps: jax.Array   # int32: bottom-up rounds taken
     mu: jax.Array         # int32: edge mass of unvisited vertices
+    nf: jax.Array         # int32: frontier vertex count (carried stat)
+    mf: jax.Array         # int32: frontier edge mass (carried stat)
 
     def tree_flatten(self):
         return ((self.visited, self.frontier, self.parent, self.level,
-                 self.cur_level, self.bu_mode, self.bu_steps, self.mu), None)
+                 self.cur_level, self.bu_mode, self.bu_steps, self.mu,
+                 self.nf, self.mf), None)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
@@ -117,7 +149,8 @@ def init_state(dg: DeviceGraph, root) -> BFSState:
     total_e = dg.deg_ext.sum(dtype=jnp.int32)
     mu = total_e - dg.deg_ext[root]
     return BFSState(visited, frontier, parent, level,
-                    jnp.int32(0), jnp.bool_(False), jnp.int32(0), mu)
+                    jnp.int32(0), jnp.bool_(False), jnp.int32(0), mu,
+                    jnp.int32(1), dg.deg_ext[root])
 
 
 # ---------------------------------------------------------------- top-down --
@@ -208,6 +241,46 @@ def _bottom_up_step(dg: DeviceGraph, cfg: BFSConfig, st: BFSState):
     return next_flags, parent
 
 
+# -------------------------------------------------------- kernel-path steps --
+#
+# Same level semantics as the XLA steps above, dispatched to the Pallas
+# kernels over degree-bucketed ELL tiles (repro.core.ell). Activity masking
+# replaces queue compaction: inactive rows get degree 0, so bottom-up blocks
+# of settled rows exit after zero slabs (the block-granularity early exit the
+# chunked slab while-loop provided). ELL rows preserve CSR slot order, so
+# first-hit parents are bitwise-identical to the XLA formulation.
+
+def _top_down_step_kernels(dg: DeviceGraph, cfg: BFSConfig, ell, st: BFSState):
+    """Push level via `kernels.ops.topdown`: fused visited-gather + masking
+    per tile; the idempotent scatter-max/min stays in XLA."""
+    v = dg.num_vertices
+    next_flags = jnp.zeros(v, jnp.uint8)
+    pcand = jnp.full(v, INT_MAX, jnp.int32)
+    for rows, deg, nbrs in ell:
+        act_deg = jnp.where(st.frontier[rows] > 0, deg, 0)
+        fresh, dst = K.topdown(act_deg, nbrs, st.visited)
+        next_flags = next_flags.at[dst].max(fresh)
+        src = jnp.broadcast_to(rows[:, None], dst.shape)
+        pcand = pcand.at[dst].min(jnp.where(fresh > 0, src, INT_MAX))
+    parent = jnp.where(next_flags > 0, jnp.minimum(st.parent, pcand), st.parent)
+    return next_flags, parent
+
+
+def _bottom_up_step_kernels(dg: DeviceGraph, cfg: BFSConfig, ell, st: BFSState):
+    """Pull level via `kernels.ops.bottomup`: ELL slab scan with block early
+    exit (visited rows are masked to degree 0 and cost no slabs)."""
+    v = dg.num_vertices
+    next_flags = jnp.zeros(v, jnp.uint8)
+    parent = st.parent
+    for rows, deg, nbrs in ell:
+        act_deg = jnp.where(st.visited[rows] == 0, deg, 0)
+        found, par = K.bottomup(act_deg, nbrs, st.frontier,
+                                slab=min(cfg.bu_slab, nbrs.shape[1]))
+        next_flags = next_flags.at[rows].max(found)
+        parent = parent.at[rows].min(jnp.where(found > 0, par, INT_MAX))
+    return next_flags, parent
+
+
 # ------------------------------------------------------------------ levels --
 
 def _decide_direction(dg: DeviceGraph, cfg: BFSConfig, st: BFSState,
@@ -232,29 +305,71 @@ def _decide_direction(dg: DeviceGraph, cfg: BFSConfig, st: BFSState,
     return bu, jnp.where(bu, st.bu_steps + 1, 0)
 
 
-def _advance(dg: DeviceGraph, cfg: BFSConfig, st: BFSState) -> BFSState:
-    """Advance one BFS level (direction decision + step + state merge)."""
-    mf = fr.edge_count(st.frontier, dg.deg_ext[:-1])
-    nf = fr.count(st.frontier)
-    bu, bu_steps = _decide_direction(dg, cfg, st, mf, nf)
-    next_flags, parent = jax.lax.cond(
-        bu,
-        lambda s: _bottom_up_step(dg, cfg, s),
-        lambda s: _top_down_step(dg, cfg, s),
-        st)
+def _advance(dg: DeviceGraph, cfg: BFSConfig, ell, st: BFSState) -> BFSState:
+    """Advance one BFS level (direction decision + step + state merge).
+
+    The direction decision reads the carried `st.nf`/`st.mf` (computed once
+    when the frontier was produced) instead of re-scanning the frontier; the
+    next level's statistics come from a single fused pass on the kernel path
+    (`kernels.ops.frontier_fused`) or two XLA reductions on the reference
+    path — both feed the carry, the loop condition, and the `mu` update.
+    """
+    use_kernels = kernels_enabled(cfg)
+    bu, bu_steps = _decide_direction(dg, cfg, st, st.mf, st.nf)
+    if use_kernels:
+        next_flags, parent = jax.lax.cond(
+            bu,
+            lambda s: _bottom_up_step_kernels(dg, cfg, ell, s),
+            lambda s: _top_down_step_kernels(dg, cfg, ell, s),
+            st)
+        _, nf, mf = K.frontier_fused(next_flags, dg.deg_ext[:-1])
+    else:
+        next_flags, parent = jax.lax.cond(
+            bu,
+            lambda s: _bottom_up_step(dg, cfg, s),
+            lambda s: _top_down_step(dg, cfg, s),
+            st)
+        nf = fr.count(next_flags)
+        mf = fr.edge_count(next_flags, dg.deg_ext[:-1])
     visited = jnp.maximum(st.visited, next_flags)
     level = jnp.where(next_flags > 0, st.cur_level + 1, st.level)
-    mu = st.mu - fr.edge_count(next_flags, dg.deg_ext[:-1])
+    mu = st.mu - mf
     return BFSState(visited, next_flags, parent, level,
-                    st.cur_level + 1, bu, bu_steps, mu)
+                    st.cur_level + 1, bu, bu_steps, mu, nf, mf)
 
 
-def make_level_step(dg: DeviceGraph, cfg: BFSConfig):
+def _resolve_ell(dg: DeviceGraph, cfg: BFSConfig, ell):
+    """ELL tiles for the kernel path (None when the XLA path runs).
+
+    Building tiles requires *concrete* graph arrays: callers jitting over a
+    traced `DeviceGraph` (the one-shot `bfs()` wrapper does) must build tiles
+    outside the trace — `GraphSession.ell_tiles` is the cached way. Tiles
+    built here are memoized on the `DeviceGraph` instance so repeated
+    `bfs()`/`bfs_instrumented()` calls on one graph pay the host-side
+    bucketing once.
+    """
+    if not kernels_enabled(cfg):
+        return None
+    if ell is None:
+        if isinstance(dg.indptr, jax.core.Tracer):
+            raise ValueError(
+                "backend_kernels traversal needs prebuilt ELL tiles when the "
+                "graph arrays are traced; pass ell=GraphSession.ell_tiles() "
+                "(see API.md §Kernel-backed traversal)")
+        ell = getattr(dg, "_ell_cache", None)
+        if ell is None:
+            ell = ELL.build_device_graph_ell(dg)
+            dg._ell_cache = ell
+    return ell
+
+
+def make_level_step(dg: DeviceGraph, cfg: BFSConfig, ell=None):
     """Returns a jitted `state -> state` advancing one BFS level."""
-    return jax.jit(functools.partial(_advance, dg, cfg))
+    ell = _resolve_ell(dg, cfg, ell)
+    return jax.jit(functools.partial(_advance, dg, cfg, ell))
 
 
-def search_state(dg: DeviceGraph, root, cfg: BFSConfig) -> BFSState:
+def search_state(dg: DeviceGraph, root, cfg: BFSConfig, ell=None) -> BFSState:
     """Whole-search body: init + level loop, as a pure traceable function.
 
     This is the public building block for compiled search plans: wrap it in
@@ -263,14 +378,20 @@ def search_state(dg: DeviceGraph, root, cfg: BFSConfig) -> BFSState:
     caches the result). Under vmap the per-level `lax.cond` lowers to a
     select, so every level pays both directions' work — correct, and still a
     single fused program for the whole batch.
+
+    When `kernels_enabled(cfg)`, pass `ell` (degree-bucketed tiles from
+    `repro.core.ell` / `GraphSession.ell_tiles`); it is closed over by the
+    per-level steps alongside the CSR arrays.
     """
+    ell = _resolve_ell(dg, cfg, ell)
     st = init_state(dg, root)
     max_levels = cfg.max_levels or dg.num_vertices
 
     def cond(st: BFSState):
-        return (fr.count(st.frontier) > 0) & (st.cur_level < max_levels)
+        return (st.nf > 0) & (st.cur_level < max_levels)
 
-    return jax.lax.while_loop(cond, functools.partial(_advance, dg, cfg), st)
+    return jax.lax.while_loop(cond, functools.partial(_advance, dg, cfg, ell),
+                              st)
 
 
 _bfs_jit = jax.jit(search_state, static_argnums=(2,))
@@ -287,9 +408,15 @@ def finalize(st: BFSState) -> tuple[np.ndarray, np.ndarray]:
 
 def bfs(g: Graph | DeviceGraph, root: int,
         cfg: BFSConfig = BFSConfig()) -> tuple[np.ndarray, np.ndarray]:
-    """Run a full direction-optimized BFS; returns (parent, level)."""
+    """Run a full direction-optimized BFS; returns (parent, level).
+
+    One-shot convenience: pass a `DeviceGraph` (or use `repro.engine`) for
+    repeated queries — the ELL tiles the kernel path needs are cached on the
+    `DeviceGraph` instance, and a fresh `Graph` conversion rebuilds them.
+    """
     dg = g if isinstance(g, DeviceGraph) else DeviceGraph.from_graph(g)
-    st = _bfs_jit(dg, jnp.int32(root), cfg)
+    ell = _resolve_ell(dg, cfg, None)
+    st = _bfs_jit(dg, jnp.int32(root), cfg, ell)
     return finalize(st)
 
 
@@ -307,9 +434,11 @@ def bfs_instrumented(g: Graph | DeviceGraph, root: int,
     st = jax.jit(lambda r: init_state(dg, r))(jnp.int32(root))
     jax.block_until_ready(st.frontier)
     stats = []
-    while int(fr.count(st.frontier)) > 0:
-        nf = int(fr.count(st.frontier))
-        mf = int(fr.edge_count(st.frontier, dg.deg_ext[:-1]))
+    while True:
+        # One host sync per level: the carried stats are two scalars.
+        nf, mf = (int(x) for x in jax.device_get((st.nf, st.mf)))
+        if nf == 0:
+            break
         t0 = time.perf_counter()
         st = step(st)
         jax.block_until_ready(st.frontier)

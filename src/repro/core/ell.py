@@ -1,0 +1,162 @@
+"""Degree-bucketed ELL adjacency tiles: the Pallas kernels' graph format.
+
+The hand-tiled kernels in `repro.kernels` (bottom-up slab scan, top-down
+expansion check) want fixed-shape `[R, Wmax]` neighbour tiles, not ragged
+CSR. A single global Wmax would square the padding on skewed (RMAT) degree
+distributions, so rows are bucketed by degree class: bucket widths grow
+geometrically from `base` (one VPU slab) and each row lands in the narrowest
+bucket that fits, bounding per-row padding to a `growth` factor (plus the
+`base`-wide catch-all for the low-degree mass). Within a bucket rows are
+sorted by descending degree so the kernels' block-granularity early exit
+fires as soon as possible (paper §3.4 adjacency ordering does the same for
+slot order *within* a row — ELL rows preserve CSR slot order exactly, which
+is what makes kernel first-hit parents bitwise-equal to the XLA slab scan).
+
+Built host-side (numpy) once per graph/partition, like partition plans and
+meshes; `GraphSession.ell_tiles` / `GraphSession.hybrid_ell` own the cache.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+DEFAULT_BASE = 32      # narrowest bucket width == one bottom-up slab
+DEFAULT_GROWTH = 2     # geometric bucket-width growth factor
+
+
+class EllBucket(NamedTuple):
+    """One degree class as a fixed-shape tile (a pytree of device arrays).
+
+    rows: int32[R] vertex ids (scatter targets; global new ids on the hybrid
+      path, where padding rows carry the out-of-range id `v_pad` and degree 0
+      so `mode="drop"` scatters discard them).
+    deg:  int32[R] true row degrees (0 < deg <= nbrs.shape[1] for real rows).
+    nbrs: int32[R, W] neighbour ids in CSR slot order, 0-padded past deg.
+    """
+    rows: jax.Array
+    deg: jax.Array
+    nbrs: jax.Array
+
+
+EllTiles = tuple  # tuple[EllBucket, ...]
+
+
+def bucket_widths(max_degree: int, base: int = DEFAULT_BASE,
+                  growth: int = DEFAULT_GROWTH) -> list[int]:
+    """Ascending bucket widths covering degrees 1..max_degree."""
+    widths = [base]
+    while widths[-1] < max_degree:
+        widths.append(widths[-1] * growth)
+    return widths
+
+
+def build_ell(indptr: np.ndarray, indices: np.ndarray, degrees: np.ndarray,
+              row_ids: np.ndarray | None = None, *,
+              base: int = DEFAULT_BASE,
+              growth: int = DEFAULT_GROWTH) -> EllTiles:
+    """CSR (host numpy) -> tuple of `EllBucket` device tiles.
+
+    Degree-0 rows are dropped entirely: they can neither push (no out-edges)
+    nor pull (no in-edges on an undirected graph), and they are still
+    discoverable as scatter *targets* of other rows' tiles.
+
+    `row_ids` maps local row index -> scatter-target id (identity when None).
+    """
+    indptr = np.asarray(indptr)
+    indices = np.asarray(indices)
+    degrees = np.asarray(degrees)
+    if row_ids is None:
+        row_ids = np.arange(len(degrees), dtype=np.int32)
+    if degrees.size == 0 or degrees.max() == 0:
+        return ()
+    widths = bucket_widths(int(degrees.max()), base, growth)
+    return tuple(EllBucket(rows=jnp.asarray(rows), deg=jnp.asarray(deg),
+                           nbrs=jnp.asarray(tile))
+                 for rows, deg, tile in _ell_numpy(indptr, indices, degrees,
+                                                   row_ids, widths)
+                 if len(rows))
+
+
+def build_graph_ell(graph, *, base: int = DEFAULT_BASE,
+                    growth: int = DEFAULT_GROWTH) -> EllTiles:
+    """`repro.core.graph.Graph` -> single-partition ELL tiles."""
+    return build_ell(graph.indptr, graph.indices, graph.degrees,
+                     base=base, growth=growth)
+
+
+def build_device_graph_ell(dg, *, base: int = DEFAULT_BASE,
+                           growth: int = DEFAULT_GROWTH) -> EllTiles:
+    """`repro.core.bfs.DeviceGraph` (concrete arrays) -> ELL tiles."""
+    indptr = np.asarray(dg.indptr)
+    return build_ell(indptr, np.asarray(dg.indices),
+                     np.diff(indptr).astype(np.int32),
+                     base=base, growth=growth)
+
+
+def build_hybrid_ell(pg, *, base: int = DEFAULT_BASE,
+                     growth: int = DEFAULT_GROWTH) -> EllTiles:
+    """`PartitionedGraph` -> per-device ELL buckets stacked on axis 0.
+
+    Every device gets the same bucket count and tile shapes (a `shard_map`
+    requirement): bucket widths come from the global max local-row degree,
+    and each bucket's row count is padded to the per-device max with
+    degree-0 rows targeting the out-of-range id `v_pad` (dropped by the
+    kernel-path `mode="drop"` scatters). Columns are global new ids, so the
+    stacked tiles shard with `P(axis)` alongside `local_indptr` et al.
+    """
+    p_, v_pad = pg.n_parts, pg.plan.v_pad
+    per_dev_deg = np.diff(pg.local_indptr.astype(np.int64), axis=1)
+    max_deg = int(per_dev_deg.max()) if per_dev_deg.size else 0
+    if max_deg == 0:
+        return ()
+    widths = bucket_widths(max_deg, base, growth)
+    # Build each device's tiles against the shared width ladder.
+    per_dev = []
+    for p in range(p_):
+        deg = per_dev_deg[p].astype(np.int32)
+        per_dev.append(_ell_numpy(pg.local_indptr[p], pg.local_indices[p],
+                                  deg, pg.local_row_gid[p], widths))
+    buckets = []
+    for b, w in enumerate(widths):
+        r_max = max(len(per_dev[p][b][0]) for p in range(p_))
+        if r_max == 0:
+            continue
+        rows = np.full((p_, r_max), v_pad, dtype=np.int32)
+        deg = np.zeros((p_, r_max), dtype=np.int32)
+        nbrs = np.zeros((p_, r_max, w), dtype=np.int32)
+        for p in range(p_):
+            rw, dg_, nb = per_dev[p][b]
+            rows[p, :len(rw)] = rw
+            deg[p, :len(rw)] = dg_
+            nbrs[p, :len(rw)] = nb
+        buckets.append(EllBucket(rows=jnp.asarray(rows),
+                                 deg=jnp.asarray(deg),
+                                 nbrs=jnp.asarray(nbrs)))
+    return tuple(buckets)
+
+
+def _ell_numpy(indptr, indices, degrees, row_ids, widths):
+    """Host-side bucketing against a fixed width ladder.
+
+    Returns one (rows, deg, tile) numpy triple per width, empty buckets
+    included (the hybrid builder aligns bucket indices across devices;
+    `build_ell` drops the empty ones).
+    """
+    out = []
+    lo = 0
+    for w in widths:
+        sel = np.flatnonzero((degrees > lo) & (degrees <= w))
+        lo = w
+        sel = sel[np.argsort(-degrees[sel].astype(np.int64), kind="stable")]
+        d = degrees[sel].astype(np.int64)
+        tile = np.zeros((len(sel), w), dtype=np.int32)
+        if len(sel):
+            rowrep = np.repeat(np.arange(len(sel)), d)
+            col = np.arange(d.sum()) - np.repeat(np.cumsum(d) - d, d)
+            tile[rowrep, col] = indices[np.repeat(indptr[sel].astype(np.int64), d) + col]
+        out.append((np.asarray(row_ids)[sel].astype(np.int32),
+                    degrees[sel].astype(np.int32), tile))
+    return out

@@ -22,6 +22,14 @@ The per-level compute mirrors `bfs.py` (chunked push queue; slab pull with
 block early exit) but runs on the device's `local_row_gid` row set, which
 uniformly expresses owned leaves, the hub0 layout, and delegated hub slices
 (see `partition.py`).
+
+Like `bfs.py`, every per-level step has two interchangeable formulations:
+the XLA reference loops and a Pallas kernel path
+(`BFSConfig.backend_kernels`) over per-device ELL tiles. On the kernel path
+the per-level frontier statistics (count, edge mass, packed bitmap) come
+from one fused VMEM pass (`kernels.ops.frontier_fused`) and are carried in
+the BSP loop state, and the `exchange="bitmap"` collective consumes the
+kernel's already-packed words instead of re-packing.
 """
 from __future__ import annotations
 
@@ -34,9 +42,11 @@ import jax.numpy as jnp
 import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.core import ell as ELL
 from repro.core import frontier as fr
-from repro.core.bfs import BFSConfig, INT_MAX
+from repro.core.bfs import BFSConfig, INT_MAX, kernels_enabled
 from repro.core.partition import PartitionedGraph, PartitionPlan, unpermute, unpermute_ids
+from repro.kernels import ops as K
 from repro.parallel.collectives import shard_map_compat
 
 
@@ -50,15 +60,21 @@ class HybridConfig:
 
 # ------------------------------------------------------------- collectives --
 
-def _or_exchange(flags: jax.Array, cfg: HybridConfig) -> jax.Array:
-    """Merge per-device next-frontier flags: the push/pull of Algs. 2/3."""
+def _or_exchange(flags: jax.Array, cfg: HybridConfig,
+                 packed: Optional[jax.Array] = None) -> jax.Array:
+    """Merge per-device next-frontier flags: the push/pull of Algs. 2/3.
+
+    `packed` short-circuits the pack pass when the caller already holds the
+    bitmap words (the kernel path's fused frontier pass emits them for free).
+    """
     ax = cfg.axis_name
     if cfg.exchange == "psum":
         # Sum of 0/1 contributions then clamp. Wire: one V-byte ring reduce.
         summed = jax.lax.psum(flags.astype(jnp.int32), ax)
         return (summed > 0).astype(jnp.uint8)
     # Packed-bitmap variant: V/8 bytes per hop, OR-folded after all-gather.
-    packed = fr.pack(flags)
+    if packed is None:
+        packed = fr.pack(flags)
     gathered = jax.lax.all_gather(packed, ax)          # [P, W]
     merged = jax.lax.reduce(gathered, np.uint32(0), jax.lax.bitwise_or, (0,))
     return fr.unpack(merged, flags.shape[0])
@@ -156,18 +172,100 @@ def _local_bottom_up(pg_shapes, cfg: BFSConfig, indptr, indices, row_gid,
     return next_flags, pcand
 
 
+# ------------------------------------------------------- kernel-path steps --
+#
+# Pallas-backed formulations of the local steps, over per-device ELL tiles
+# (`ell.build_hybrid_ell`). Inactive rows are masked to degree 0 instead of
+# being compacted away; padding rows carry gid == v_pad and are discarded by
+# the mode="drop" scatters. Tiles preserve local CSR slot order, so parent
+# candidates match the XLA slab scan bitwise.
+
+def _unstack_ell(ell):
+    """Per-device view inside shard_map: drop the leading [1, ...] axis."""
+    return tuple(ELL.EllBucket(b.rows.reshape(b.rows.shape[-1]),
+                               b.deg.reshape(b.deg.shape[-1]),
+                               b.nbrs.reshape(b.nbrs.shape[-2:]))
+                 for b in ell)
+
+
+def _local_top_down_kernels(pg_shapes, cfg: BFSConfig, ell, visited, frontier):
+    """Push step via `kernels.ops.topdown`; scatter-max/min stays in XLA."""
+    v_pad, _r, _e = pg_shapes
+    frontier_ext = jnp.concatenate([frontier, jnp.zeros(1, jnp.uint8)])
+    next_flags = jnp.zeros(v_pad, jnp.uint8)
+    pcand = jnp.full(v_pad, INT_MAX, jnp.int32)
+    for gid, deg, nbrs in ell:
+        # padding rows carry gid == v_pad exactly -> the _ext sentinel slot
+        act_deg = jnp.where(frontier_ext[gid] > 0, deg, 0)
+        fresh, dst = K.topdown(act_deg, nbrs, visited)
+        next_flags = next_flags.at[dst].max(fresh)
+        src = jnp.broadcast_to(gid[:, None], dst.shape)
+        pcand = pcand.at[dst].min(jnp.where(fresh > 0, src, INT_MAX))
+    return next_flags, pcand
+
+
+def _local_bottom_up_kernels(pg_shapes, cfg: BFSConfig, ell, visited, frontier):
+    """Pull step via `kernels.ops.bottomup` (block early exit per tile)."""
+    v_pad, _r, _e = pg_shapes
+    visited_ext = jnp.concatenate([visited, jnp.ones(1, jnp.uint8)])
+    next_flags = jnp.zeros(v_pad, jnp.uint8)
+    pcand = jnp.full(v_pad, INT_MAX, jnp.int32)
+    for gid, deg, nbrs in ell:
+        act_deg = jnp.where(visited_ext[gid] == 0, deg, 0)
+        found, par = K.bottomup(act_deg, nbrs, frontier,
+                                slab=min(cfg.bu_slab, nbrs.shape[1]))
+        next_flags = next_flags.at[gid].max(found, mode="drop")
+        pcand = pcand.at[gid].min(jnp.where(found > 0, par, INT_MAX),
+                                  mode="drop")
+    return next_flags, pcand
+
+
+def _frontier_stats(use_kernels: bool, flags, deg, dec_hub: int):
+    """(nf, mf_full, mf_dec) of `flags` in as few V-passes as possible.
+
+    Kernel path: one fused VMEM pass (`ops.frontier_fused`); XLA path: two
+    reductions. `dec_hub` > 0 restricts the §3.3 decision statistic to the
+    hub slice — a static id *prefix* [0, dec_hub), so it costs an
+    O(hub_count) slice reduction, not a second V-pass (0 = decide on the
+    full edge mass).
+    """
+    if use_kernels:
+        _, nf, mf_full = K.frontier_fused(flags, deg)
+    else:
+        nf = fr.count(flags)
+        mf_full = fr.edge_count(flags, deg)
+    if not dec_hub:
+        return nf, mf_full, mf_full
+    return nf, mf_full, fr.edge_count(flags[:dec_hub], deg[:dec_hub])
+
+
+def _dec_hub(hcfg: HybridConfig, hub_count: int) -> int:
+    """Hub-slice length for the decision statistic (0 = use full mass)."""
+    return hub_count if hcfg.coordinator == "hub" else 0
+
+
+def _init_mf_dec(root, deg, dec_hub: int):
+    """Decision statistic of the initial {root} frontier."""
+    return jnp.where(root < dec_hub, deg[root], 0) if dec_hub else deg[root]
+
+
+def _resolve_hybrid_ell(pg: PartitionedGraph, cfg: BFSConfig, ell):
+    """Stacked per-device tiles for the kernel path; () when XLA runs."""
+    if not kernels_enabled(cfg):
+        return ()
+    return ELL.build_hybrid_ell(pg) if ell is None else ell
+
+
 # -------------------------------------------------------------- level loop --
 
-def _decide(hcfg: HybridConfig, cfg: BFSConfig, v_pad, e_total, hub_count,
-            frontier, deg, bu_mode, bu_steps, mu):
-    """Direction decision; identical on every device (no collective)."""
-    if hcfg.coordinator == "hub" and hub_count > 0:
-        # §3.3: hubs alone predict growth. Statistic from hub slice only.
-        hub_mask = jnp.arange(v_pad) < hub_count
-        mf = jnp.sum(jnp.where((frontier > 0) & hub_mask, deg, 0))
-    else:
-        mf = fr.edge_count(frontier, deg)
-    nf = fr.count(frontier)
+def _decide(hcfg: HybridConfig, cfg: BFSConfig, v_pad, e_total,
+            nf, mf, bu_mode, bu_steps, mu):
+    """Direction decision; identical on every device (no collective).
+
+    `nf`/`mf` are the carried frontier statistics — computed once when the
+    frontier was produced (§3.3 hub-slice mf under the hub coordinator), not
+    re-scanned here.
+    """
     if cfg.heuristic == "topdown":
         return jnp.bool_(False), bu_steps
     if cfg.heuristic == "beamer":
@@ -182,47 +280,68 @@ def _decide(hcfg: HybridConfig, cfg: BFSConfig, v_pad, e_total, hub_count,
 
 
 def _device_bfs(pg_shapes, e_total, hub_count, hcfg: HybridConfig,
-                indptr, indices, row_gid, deg_ext, root):
+                indptr, indices, row_gid, deg_ext, ell, root):
     """Whole-search body run per device inside shard_map."""
     v_pad, r, e_local = pg_shapes
     cfg = hcfg.bfs
+    use_kernels = kernels_enabled(cfg)
     indptr = indptr.reshape(-1)
     indices = indices.reshape(-1)
     row_gid = row_gid.reshape(-1)
+    ell = _unstack_ell(ell)
     deg = deg_ext[:-1]
+    dec_hub = _dec_hub(hcfg, hub_count)
 
     visited = jnp.zeros(v_pad, jnp.uint8).at[root].set(1)
     frontier = visited
     pcand = jnp.full(v_pad, INT_MAX, jnp.int32).at[root].set(root)
     lcand = jnp.full(v_pad, INT_MAX, jnp.int32).at[root].set(0)
     mu = deg.sum(dtype=jnp.int32) - deg_ext[root]
+    nf0 = jnp.int32(1)
+    mf0 = _init_mf_dec(root, deg, dec_hub)
 
     def level(carry):
-        visited, frontier, pcand, lcand, cur, bu_mode, bu_steps, mu = carry
-        bu, bu_steps = _decide(hcfg, cfg, v_pad, e_total, hub_count,
-                               frontier, deg, bu_mode, bu_steps, mu)
-        nxt_local, pc_local = jax.lax.cond(
-            bu,
-            lambda: _local_bottom_up(pg_shapes, cfg, indptr, indices, row_gid,
-                                     visited, frontier),
-            lambda: _local_top_down(pg_shapes, cfg, indptr, indices, row_gid,
-                                    visited, frontier))
+        (visited, frontier, pcand, lcand, cur, bu_mode, bu_steps, mu,
+         nf, mf_dec) = carry
+        bu, bu_steps = _decide(hcfg, cfg, v_pad, e_total,
+                               nf, mf_dec, bu_mode, bu_steps, mu)
+        if use_kernels:
+            nxt_local, pc_local = jax.lax.cond(
+                bu,
+                lambda: _local_bottom_up_kernels(pg_shapes, cfg, ell,
+                                                 visited, frontier),
+                lambda: _local_top_down_kernels(pg_shapes, cfg, ell,
+                                                visited, frontier))
+        else:
+            nxt_local, pc_local = jax.lax.cond(
+                bu,
+                lambda: _local_bottom_up(pg_shapes, cfg, indptr, indices,
+                                         row_gid, visited, frontier),
+                lambda: _local_top_down(pg_shapes, cfg, indptr, indices,
+                                        row_gid, visited, frontier))
         # ---- the one collective per BSP round (Algorithms 2/3) ----
-        nxt = _or_exchange(nxt_local, hcfg)
+        if use_kernels and hcfg.exchange == "bitmap":
+            # The fused pass emits the wire words; no separate pack pass.
+            packed_local, _, _ = K.frontier_fused(nxt_local, deg)
+            nxt = _or_exchange(nxt_local, hcfg, packed=packed_local)
+        else:
+            nxt = _or_exchange(nxt_local, hcfg)
         newly = jnp.where(visited > 0, 0, nxt).astype(jnp.uint8)
         pcand = jnp.where(newly > 0, jnp.minimum(pcand, pc_local), pcand)
         lcand = jnp.where(newly > 0, jnp.minimum(lcand, cur + 1), lcand)
         visited = jnp.maximum(visited, newly)
-        mu = mu - fr.edge_count(newly, deg)
-        return (visited, newly, pcand, lcand, cur + 1, bu, bu_steps, mu)
+        nf, mf_full, mf_dec = _frontier_stats(use_kernels, newly, deg, dec_hub)
+        mu = mu - mf_full
+        return (visited, newly, pcand, lcand, cur + 1, bu, bu_steps, mu,
+                nf, mf_dec)
 
     def cond(carry):
-        frontier, cur = carry[1], carry[4]
-        return (fr.count(frontier) > 0) & (cur < v_pad)
+        nf, cur = carry[8], carry[4]
+        return (nf > 0) & (cur < v_pad)
 
     carry = (visited, frontier, pcand, lcand, jnp.int32(0),
-             jnp.bool_(False), jnp.int32(0), mu)
-    visited, _, pcand, lcand, levels, _, _, _ = jax.lax.while_loop(
+             jnp.bool_(False), jnp.int32(0), mu, nf0, mf0)
+    visited, _, pcand, lcand, levels, _, _, _, _, _ = jax.lax.while_loop(
         cond, level, carry)
     # ---- deferred parent aggregation (§3.1): one min-reduce at the end ----
     parent = jax.lax.pmin(pcand, hcfg.axis_name)
@@ -257,7 +376,7 @@ def make_root_mapper(plan: PartitionPlan):
 
 def make_hybrid_search(pg: PartitionedGraph,
                        hcfg: HybridConfig = HybridConfig(),
-                       mesh: Optional[Mesh] = None):
+                       mesh: Optional[Mesh] = None, ell=None):
     """Build the partitioned whole-search callable (public compile target).
 
     Returns `(search_fn, root_mapper)`. `search_fn(root_new)` is a pure
@@ -266,6 +385,10 @@ def make_hybrid_search(pg: PartitionedGraph,
     `jax.jit` once and reuse it across roots — `repro.engine` caches exactly
     that executable per (graph, plan, config). `root_mapper` translates
     original ids; `finalize_hybrid` maps results back.
+
+    `ell` (stacked per-device tiles from `ell.build_hybrid_ell`) feeds the
+    `backend_kernels` path; it is built on the fly when omitted —
+    `GraphSession.hybrid_ell` caches it across searches.
     """
     plan = pg.plan
     if mesh is None:
@@ -273,13 +396,14 @@ def make_hybrid_search(pg: PartitionedGraph,
     v_pad, r = plan.v_pad, pg.num_local_rows
     e_local = pg.local_indices.shape[1]
     pg_shapes = (v_pad, r, e_local)
+    ell = _resolve_hybrid_ell(pg, hcfg.bfs, ell)
 
     fn = functools.partial(_device_bfs, pg_shapes, pg.total_directed_edges,
                            plan.hub_count, hcfg)
     ax = hcfg.axis_name
     shmapped = shard_map_compat(
         fn, mesh=mesh,
-        in_specs=(P(ax), P(ax), P(ax), P(), P()),
+        in_specs=(P(ax), P(ax), P(ax), P(), P(ax), P()),
         out_specs=(P(), P(), P()))
     gl_indptr = jnp.asarray(pg.local_indptr)
     gl_indices = jnp.asarray(pg.local_indices)
@@ -287,7 +411,7 @@ def make_hybrid_search(pg: PartitionedGraph,
     gl_degext = jnp.asarray(pg.deg_ext)
 
     def search_fn(root_new):
-        return shmapped(gl_indptr, gl_indices, gl_rowgid, gl_degext,
+        return shmapped(gl_indptr, gl_indices, gl_rowgid, gl_degext, ell,
                         jnp.asarray(root_new, jnp.int32))
 
     return search_fn, make_root_mapper(plan)
@@ -324,7 +448,7 @@ def hybrid_bfs(pg: PartitionedGraph, root_orig: int,
 # -------------------------------------------------- instrumented BSP loop --
 
 def make_hybrid_stepper(pg: PartitionedGraph, hcfg: HybridConfig,
-                        mesh: Optional[Mesh] = None):
+                        mesh: Optional[Mesh] = None, ell=None):
     """Level-by-level driver pieces for the Fig. 3/4 benchmarks.
 
     Returns (init_fn, compute_fn, exchange_fn, finalize_fn, root_mapper):
@@ -334,6 +458,10 @@ def make_hybrid_stepper(pg: PartitionedGraph, hcfg: HybridConfig,
     id space (map back with `finalize_hybrid`). Timing compute vs exchange
     separately reproduces the paper's computation-vs-communication breakdown
     with real collectives.
+
+    State carries the frontier statistics (`nf` full count, `mf` full edge
+    mass, `mf_dec` the direction-decision statistic) so the host loop reads
+    two scalars per level instead of re-reducing the V-byte frontier.
     """
     plan = pg.plan
     n = plan.n_parts
@@ -343,44 +471,58 @@ def make_hybrid_stepper(pg: PartitionedGraph, hcfg: HybridConfig,
     e_local = pg.local_indices.shape[1]
     pg_shapes = (v_pad, r, e_local)
     cfg = hcfg.bfs
+    use_kernels = kernels_enabled(cfg)
+    ell = _resolve_hybrid_ell(pg, cfg, ell)
     ax = hcfg.axis_name
 
     gl_indptr = jnp.asarray(pg.local_indptr)
     gl_indices = jnp.asarray(pg.local_indices)
     gl_rowgid = jnp.asarray(pg.local_row_gid)
     gl_degext = jnp.asarray(pg.deg_ext)
+    deg = gl_degext[:-1]
+    dec_hub = _dec_hub(hcfg, plan.hub_count)
 
     def init_fn(root):
         visited = jnp.zeros(v_pad, jnp.uint8).at[root].set(1)
         pcand = jnp.full((n, v_pad), INT_MAX, jnp.int32).at[:, root].set(root)
         lcand = jnp.full(v_pad, INT_MAX, jnp.int32).at[root].set(0)
-        mu = gl_degext[:-1].sum(dtype=jnp.int32) - gl_degext[root]
+        mu = deg.sum(dtype=jnp.int32) - gl_degext[root]
         return dict(visited=visited, frontier=visited, pcand=pcand,
                     lcand=lcand, cur=jnp.int32(0), bu=jnp.bool_(False),
-                    bu_steps=jnp.int32(0), mu=mu)
+                    bu_steps=jnp.int32(0), mu=mu, nf=jnp.int32(1),
+                    mf=deg[root], mf_dec=_init_mf_dec(root, deg, dec_hub))
 
-    def _compute(indptr, indices, row_gid, visited, frontier, bu):
+    def _compute(indptr, indices, row_gid, ell_dev, visited, frontier, bu):
         indptr, indices, row_gid = (indptr.reshape(-1), indices.reshape(-1),
                                     row_gid.reshape(-1))
-        nxt, pc = jax.lax.cond(
-            bu,
-            lambda: _local_bottom_up(pg_shapes, cfg, indptr, indices, row_gid,
-                                     visited, frontier),
-            lambda: _local_top_down(pg_shapes, cfg, indptr, indices, row_gid,
-                                    visited, frontier))
+        if use_kernels:
+            ell_local = _unstack_ell(ell_dev)
+            nxt, pc = jax.lax.cond(
+                bu,
+                lambda: _local_bottom_up_kernels(pg_shapes, cfg, ell_local,
+                                                 visited, frontier),
+                lambda: _local_top_down_kernels(pg_shapes, cfg, ell_local,
+                                                visited, frontier))
+        else:
+            nxt, pc = jax.lax.cond(
+                bu,
+                lambda: _local_bottom_up(pg_shapes, cfg, indptr, indices,
+                                         row_gid, visited, frontier),
+                lambda: _local_top_down(pg_shapes, cfg, indptr, indices,
+                                        row_gid, visited, frontier))
         return nxt[None], pc[None]
 
     shm = shard_map_compat(_compute, mesh=mesh,
-                           in_specs=(P(ax), P(ax), P(ax), P(), P(), P()),
+                           in_specs=(P(ax), P(ax), P(ax), P(ax), P(), P(),
+                                     P()),
                            out_specs=(P(ax), P(ax)))
 
     @jax.jit
     def compute_fn(state):
         bu, bu_steps = _decide(hcfg, cfg, v_pad, pg.total_directed_edges,
-                               plan.hub_count, state["frontier"],
-                               gl_degext[:-1], state["bu"], state["bu_steps"],
-                               state["mu"])
-        nxt_stack, pc_stack = shm(gl_indptr, gl_indices, gl_rowgid,
+                               state["nf"], state["mf_dec"], state["bu"],
+                               state["bu_steps"], state["mu"])
+        nxt_stack, pc_stack = shm(gl_indptr, gl_indices, gl_rowgid, ell,
                                   state["visited"], state["frontier"], bu)
         return nxt_stack, pc_stack, bu, bu_steps
 
@@ -395,9 +537,11 @@ def make_hybrid_stepper(pg: PartitionedGraph, hcfg: HybridConfig,
                           jnp.minimum(state["lcand"], state["cur"] + 1),
                           state["lcand"])
         visited = jnp.maximum(state["visited"], newly)
-        mu = state["mu"] - fr.edge_count(newly, gl_degext[:-1])
+        nf, mf_full, mf_dec = _frontier_stats(use_kernels, newly, deg, dec_hub)
+        mu = state["mu"] - mf_full
         return dict(visited=visited, frontier=newly, pcand=pcand, lcand=lcand,
-                    cur=state["cur"] + 1, bu=bu, bu_steps=bu_steps, mu=mu)
+                    cur=state["cur"] + 1, bu=bu, bu_steps=bu_steps, mu=mu,
+                    nf=nf, mf=mf_full, mf_dec=mf_dec)
 
     @jax.jit
     def finalize_fn(state):
@@ -421,8 +565,12 @@ def hybrid_bfs_instrumented(pg: PartitionedGraph, root_orig: int,
     state = init_fn(root_mapper(root_orig))
     jax.block_until_ready(state["frontier"])
     stats = []
-    while int(jnp.sum(state["frontier"])) > 0:
-        nf = int(jnp.sum(state["frontier"]))
+    while True:
+        # One host sync per level: the carried stats are two scalars (the
+        # old loop reduced the V-byte frontier twice per round).
+        nf, mf = (int(x) for x in jax.device_get((state["nf"], state["mf"])))
+        if nf == 0:
+            break
         t0 = _time.perf_counter()
         nxt_stack, pc_stack, bu, bu_steps = compute_fn(state)
         jax.block_until_ready(nxt_stack)
@@ -432,7 +580,7 @@ def hybrid_bfs_instrumented(pg: PartitionedGraph, root_orig: int,
         t2 = _time.perf_counter()
         stats.append(dict(level=int(state["cur"]),
                           direction="bu" if bool(bu) else "td",
-                          frontier_size=nf,
+                          frontier_size=nf, frontier_edges=mf,
                           compute_s=t1 - t0, exchange_s=t2 - t1))
         if int(state["cur"]) > pg.plan.v_pad:
             raise RuntimeError("no termination")

@@ -16,7 +16,7 @@ Strategies
   degree-balanced (snake-dealt) set of low-degree leaves. Delegated hub work
   is perfectly balanced and needs *no extra communication*: the existing
   once-per-round bitmap OR-exchange and the deferred parent min-reduction
-  merge the per-slice results (DESIGN.md §Hardware-adaptation).
+  merge the per-slice results (API.md §Kernel-backed traversal).
 
 Layout
 ------

@@ -33,7 +33,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import bfs as B
-from repro.core import frontier as fr
 from repro.core.bfs import BFSConfig
 from repro.core.graph import Graph
 from repro.core.hybrid_bfs import (HybridConfig, finalize_hybrid,
@@ -51,6 +50,18 @@ AUTO_SHARD_MIN_EDGES = 1 << 19
 AUTO_MAX_PARTS = 8
 
 RootsLike = Union[int, np.integer, Sequence[int], np.ndarray]
+
+# Batched fused queries pad to the next power of two, floored at this bucket,
+# so ragged batch sizes share executables instead of compiling one each
+# (batch 1 stays 1: the Graph500 per-root measurement mode).
+MIN_BATCH_BUCKET = 8
+
+
+def _bucket_batch(batch: int) -> int:
+    """Executable batch bucket: 1, or the next power of two >= 8."""
+    if batch <= 1:
+        return 1
+    return max(MIN_BATCH_BUCKET, 1 << (batch - 1).bit_length())
 
 
 def _tree_depth(level: np.ndarray) -> np.ndarray:
@@ -178,32 +189,47 @@ class Engine:
     # --------------------------------------------------------- fused path --
 
     def _fused_executable(self, bcfg: BFSConfig, batch: int):
+        """Cached vmap-batched whole-search executable for a batch bucket.
+
+        The key holds the *bucket*, not the raw batch size: ragged batches
+        round up to `_bucket_batch` and pad their roots, so e.g. batches of
+        3/5/7 all hit one size-8 executable (`trace_count` proves it).
+        """
         dg = self.session.device_graph()
-        key = ("fused", bcfg, batch)
+        ell = self.session.ell_tiles() if B.kernels_enabled(bcfg) else None
+        bucket = _bucket_batch(batch)
+        key = ("fused", bcfg, bucket)
 
         def build():
             def batched_search(roots_dev):
-                return jax.vmap(lambda r: B.search_state(dg, r, bcfg))(roots_dev)
+                return jax.vmap(
+                    lambda r: B.search_state(dg, r, bcfg, ell=ell))(roots_dev)
             return batched_search
 
-        return key, self.session.executable(key, build)
+        return key, self.session.executable(key, build), bucket
 
     def _bfs_fused(self, roots_arr, hcfg, batched) -> TraversalResult:
         e_und = self.graph.num_undirected_edges
         if batched:
-            key, fn = self._fused_executable(hcfg.bfs, len(roots_arr))
-            dev_roots = jnp.asarray(roots_arr, jnp.int32)
+            b = len(roots_arr)
+            key, fn, bucket = self._fused_executable(hcfg.bfs, b)
+            # Pad to the bucket with a repeat of the first root (a valid
+            # query whose padded results are sliced off below).
+            padded = np.full(bucket, roots_arr[0], dtype=np.int64)
+            padded[:b] = roots_arr
+            dev_roots = jnp.asarray(padded, jnp.int32)
             self.session.warm(key, lambda: fn(dev_roots).frontier)
             t0 = time.perf_counter()
             st = fn(dev_roots)
             jax.block_until_ready(st.frontier)
             dt = time.perf_counter() - t0
             parent, level = B.finalize(st)
-            per_root = np.full(len(roots_arr), dt / len(roots_arr))
+            parent, level = parent[:b], level[:b]
+            per_root = np.full(b, dt / b)
             return TraversalResult(roots_arr, parent, level, _tree_depth(level),
                                    dt, per_root, "fused", 1, e_und)
         # Graph500 mode: one root at a time against a batch-1 executable.
-        key, fn = self._fused_executable(hcfg.bfs, 1)
+        key, fn, _bucket = self._fused_executable(hcfg.bfs, 1)
         self.session.warm(
             key, lambda: fn(jnp.asarray(roots_arr[:1], jnp.int32)).frontier)
         parents, levels, per_root = [], [], []
@@ -226,10 +252,13 @@ class Engine:
         plan, pg = self.session.partitioned(n_parts, strategy, hub)
         pkey = (n_parts, strategy, hub)
         skey = ("sharded", hcfg) + pkey
+        ell = (self.session.hybrid_ell(n_parts, strategy, hub)
+               if B.kernels_enabled(hcfg.bfs) else None)
         search_fn, root_mapper = self.session.cached(
             ("hybrid_search", hcfg) + pkey,
             lambda: make_hybrid_search(
-                pg, hcfg, self.session.mesh_for(n_parts, hcfg.axis_name)))
+                pg, hcfg, self.session.mesh_for(n_parts, hcfg.axis_name),
+                ell=ell))
         fn = self.session.executable(skey, lambda: search_fn)
         return skey, fn, root_mapper, plan
 
@@ -295,9 +324,9 @@ class Engine:
 
     def _stepper_single(self, bcfg: BFSConfig):
         dg = self.session.device_graph()
-        deg = dg.deg_ext[:-1]
+        ell = self.session.ell_tiles() if B.kernels_enabled(bcfg) else None
         step = self.session.cached(("stepper_step", bcfg),
-                                   lambda: B.make_level_step(dg, bcfg))
+                                   lambda: B.make_level_step(dg, bcfg, ell))
         init = self.session.cached(
             ("stepper_init",),
             lambda: jax.jit(lambda r: B.init_state(dg, r)))
@@ -308,9 +337,13 @@ class Engine:
             jax.block_until_ready(st.frontier)
             init_s = time.perf_counter() - t0
             stats = []
-            while int(fr.count(st.frontier)) > 0:
-                nf = int(fr.count(st.frontier))
-                mf = int(fr.edge_count(st.frontier, deg))
+            while True:
+                # Single host sync per level: two carried scalars, fetched
+                # together (the old loop reduced the frontier twice and made
+                # two device round-trips).
+                nf, mf = (int(x) for x in jax.device_get((st.nf, st.mf)))
+                if nf == 0:
+                    break
                 t0 = time.perf_counter()
                 st = step(st)
                 jax.block_until_ready(st.frontier)
@@ -330,12 +363,14 @@ class Engine:
 
     def _stepper_sharded(self, hcfg, n_parts, strategy, hub):
         plan, pg = self.session.partitioned(n_parts, strategy, hub)
+        ell = (self.session.hybrid_ell(n_parts, strategy, hub)
+               if B.kernels_enabled(hcfg.bfs) else None)
         pieces = self.session.cached(
             ("hybrid_stepper", hcfg, n_parts, strategy, hub),
             lambda: make_hybrid_stepper(
-                pg, hcfg, self.session.mesh_for(n_parts, hcfg.axis_name)))
+                pg, hcfg, self.session.mesh_for(n_parts, hcfg.axis_name),
+                ell=ell))
         init_fn, compute_fn, exchange_fn, finalize_fn, root_mapper = pieces
-        deg = pg.deg_ext[:-1].astype(np.int64)
 
         def run_one(root: int):
             t0 = time.perf_counter()
@@ -344,11 +379,12 @@ class Engine:
             init_s = time.perf_counter() - t0
             stats = []
             while True:
-                f = np.asarray(state["frontier"])
-                nf = int(f.sum())
+                # One host sync per level: carried scalar stats, not a
+                # device->host copy of the whole V-byte frontier.
+                nf, mf = (int(x)
+                          for x in jax.device_get((state["nf"], state["mf"])))
                 if nf == 0:
                     break
-                mf = int(deg[f > 0].sum())
                 t0 = time.perf_counter()
                 nxt, pc, bu, bs = compute_fn(state)
                 jax.block_until_ready(nxt)

@@ -9,6 +9,8 @@ The session owns, and builds at most once each:
 * every `PartitionPlan`/`PartitionedGraph` requested, keyed by
   (n_parts, strategy, hub_edge_fraction),
 * the device mesh per partition count,
+* the degree-bucketed ELL tiles the Pallas kernel path traverses
+  (`ell_tiles` single-partition, `hybrid_ell` per partitioning),
 * compiled search executables, keyed by
   (backend, config, n_parts/strategy, batch shape) — the graph itself is
   the session, so graph shape is implicit in the key.
@@ -24,6 +26,7 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro.core import ell as ELL
 from repro.core import partition as PT
 from repro.core.bfs import DeviceGraph
 from repro.core.graph import Graph
@@ -67,6 +70,30 @@ class GraphSession:
                                 hub_edge_fraction=hub)
             self._partitions[key] = (plan, PT.apply_plan(self.graph, plan))
         return self._partitions[key]
+
+    def ell_tiles(self, *, base: int = ELL.DEFAULT_BASE,
+                  growth: int = ELL.DEFAULT_GROWTH):
+        """Degree-bucketed ELL tiles for the single-partition kernel path.
+
+        Built once per (base, growth) and shared by every
+        `backend_kernels` query, like plans and meshes.
+        """
+        return self.cached(("ell", base, growth),
+                           lambda: ELL.build_graph_ell(self.graph, base=base,
+                                                       growth=growth))
+
+    def hybrid_ell(self, n_parts: int, strategy: Optional[str] = None,
+                   hub_edge_fraction: Optional[float] = None, *,
+                   base: int = ELL.DEFAULT_BASE,
+                   growth: int = ELL.DEFAULT_GROWTH):
+        """Stacked per-device ELL tiles for a partitioning (cached)."""
+        strategy = strategy or self.default_strategy
+        hub = (self.default_hub_edge_fraction
+               if hub_edge_fraction is None else hub_edge_fraction)
+        key = ("hybrid_ell", n_parts, strategy, hub, base, growth)
+        _plan, pg = self.partitioned(n_parts, strategy, hub)
+        return self.cached(key, lambda: ELL.build_hybrid_ell(pg, base=base,
+                                                             growth=growth))
 
     def mesh_for(self, n_parts: int, axis_name: str = "part"):
         if self._mesh is not None:

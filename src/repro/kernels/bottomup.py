@@ -3,7 +3,7 @@
 This is the paper's performance bottleneck (§3.2: "processing the low-degree
 vertices during the bottom-up steps is the main bottleneck") and therefore the
 compute hot-spot we hand-tile. The GPU implementation relies on the virtual-
-warp trick; the TPU-native formulation (DESIGN.md §Hardware-adaptation) is:
+warp trick; the TPU-native formulation (API.md §Kernel-backed traversal) is:
 
 * Rows (unvisited vertices) tiled into blocks of ``rblk`` VPU lanes; their
   adjacency is ELL-packed ``[rblk, wmax]`` (degree-sorted per §3.4, so

@@ -22,6 +22,10 @@ def _auto_interpret(interpret):
     return interpret
 
 
+def _ceil_to(n, mult):
+    return ((n + mult - 1) // mult) * mult
+
+
 def _pad_rows(x, mult, fill=0):
     pad = (-x.shape[0]) % mult
     if pad:
@@ -32,8 +36,17 @@ def _pad_rows(x, mult, fill=0):
 
 @functools.partial(jax.jit, static_argnames=("slab", "rblk", "interpret"))
 def bottomup(deg, nbrs, frontier, *, slab=32, rblk=128, interpret=None):
-    """Bottom-up slab scan: (found uint8[R], parent int32[R]). Pads rows."""
+    """Bottom-up slab scan: (found uint8[R], parent int32[R]).
+
+    Handles ragged inputs: rows pad to an `rblk` multiple (padding rows have
+    degree 0, so they are skipped and sliced back off), W pads to a `slab`
+    multiple inside the kernel wrapper, and an empty tile (R == 0) returns
+    empty outputs without issuing a kernel.
+    """
     r = nbrs.shape[0]
+    if r == 0:
+        return (jnp.zeros(0, jnp.uint8), jnp.zeros(0, jnp.int32))
+    rblk = min(rblk, _ceil_to(r, 8))
     deg_p, _ = _pad_rows(deg, rblk)
     nbrs_p, _ = _pad_rows(nbrs, rblk)
     found, parent = _bu.bottomup_pallas(
@@ -46,6 +59,9 @@ def bottomup(deg, nbrs, frontier, *, slab=32, rblk=128, interpret=None):
 def frontier_fused(flags, deg, *, blk_words=256, interpret=None):
     """Fused pack+count+edge-mass: (packed uint32[ceil(V/32)], nf, mf)."""
     v = flags.shape[0]
+    if v == 0:
+        return (jnp.zeros(0, jnp.uint32), jnp.int32(0), jnp.int32(0))
+    blk_words = min(blk_words, _ceil_to((v + 31) // 32, 8))
     blk = blk_words * 32
     flags_p, _ = _pad_rows(flags, blk)
     deg_p, _ = _pad_rows(deg, blk)
@@ -57,8 +73,15 @@ def frontier_fused(flags, deg, *, blk_words=256, interpret=None):
 
 @functools.partial(jax.jit, static_argnames=("cblk", "interpret"))
 def topdown(deg, nbrs, visited, *, cblk=128, interpret=None):
-    """Top-down expansion check: (fresh uint8[C,W], dst int32[C,W])."""
-    c = nbrs.shape[0]
+    """Top-down expansion check: (fresh uint8[C,W], dst int32[C,W]).
+
+    Ragged handling mirrors `bottomup`: rows pad to a `cblk` multiple
+    (degree-0 padding, sliced back off); an empty tile short-circuits.
+    """
+    c, w = nbrs.shape
+    if c == 0:
+        return (jnp.zeros((0, w), jnp.uint8), jnp.zeros((0, w), jnp.int32))
+    cblk = min(cblk, _ceil_to(c, 8))
     deg_p, _ = _pad_rows(deg, cblk)
     nbrs_p, _ = _pad_rows(nbrs, cblk)
     fresh, dst = _td.topdown_pallas(

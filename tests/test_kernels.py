@@ -68,6 +68,70 @@ def test_frontier_fused_sweep(v):
     assert int(nf1) == int(nf2) and int(mf1) == int(mf2)
 
 
+@pytest.mark.parametrize("r,w,v", [(5, 7, 100),      # R not an rblk multiple
+                                   (130, 33, 257),   # W not a slab multiple
+                                   (3, 96, 50)])     # tiny R, wide W
+def test_bottomup_ragged_padding(r, w, v):
+    rng = np.random.default_rng(r * 7 + w)
+    deg = rng.integers(0, w + 1, r).astype(np.int32)
+    nbrs = rng.integers(0, v, (r, w)).astype(np.int32)
+    frontier = (rng.random(v) < 0.2).astype(np.uint8)
+    f1, p1 = ops.bottomup(jnp.asarray(deg), jnp.asarray(nbrs),
+                          jnp.asarray(frontier))
+    f2, p2 = ref.bottomup_ref(jnp.asarray(deg), jnp.asarray(nbrs),
+                              jnp.asarray(frontier))
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    np.testing.assert_array_equal(np.asarray(p1), np.asarray(p2))
+
+
+def test_bottomup_empty_frontier_finds_nothing():
+    rng = np.random.default_rng(0)
+    deg = rng.integers(1, 9, 40).astype(np.int32)
+    nbrs = rng.integers(0, 64, (40, 8)).astype(np.int32)
+    f, p = ops.bottomup(jnp.asarray(deg), jnp.asarray(nbrs),
+                        jnp.zeros(64, jnp.uint8))
+    assert int(np.asarray(f).sum()) == 0
+    assert (np.asarray(p) == 2**31 - 1).all()
+
+
+def test_bottomup_empty_tile_short_circuits():
+    f, p = ops.bottomup(jnp.zeros(0, jnp.int32), jnp.zeros((0, 4), jnp.int32),
+                        jnp.ones(16, jnp.uint8))
+    assert f.shape == (0,) and p.shape == (0,)
+
+
+def test_topdown_ragged_padding():
+    rng = np.random.default_rng(3)
+    c, w, v = 9, 5, 333                       # C not a cblk multiple
+    deg = rng.integers(0, w + 1, c).astype(np.int32)
+    nbrs = rng.integers(0, v, (c, w)).astype(np.int32)
+    visited = (rng.random(v) < 0.5).astype(np.uint8)
+    f1, d1 = ops.topdown(jnp.asarray(deg), jnp.asarray(nbrs),
+                         jnp.asarray(visited))
+    f2, d2 = ref.topdown_ref(jnp.asarray(deg), jnp.asarray(nbrs),
+                             jnp.asarray(visited))
+    np.testing.assert_array_equal(np.asarray(f1), np.asarray(f2))
+    np.testing.assert_array_equal(np.asarray(d1), np.asarray(d2))
+
+
+@pytest.mark.parametrize("v", [31, 33, 8191, 8193])  # around word/block edges
+def test_frontier_fused_nonmultiple_v(v):
+    rng = np.random.default_rng(v)
+    flags = (rng.random(v) < 0.4).astype(np.uint8)
+    deg = rng.integers(0, 9, v).astype(np.int32)
+    pk1, nf1, mf1 = ops.frontier_fused(jnp.asarray(flags), jnp.asarray(deg))
+    pk2, nf2, mf2 = ref.frontier_fused_ref(jnp.asarray(flags), jnp.asarray(deg))
+    np.testing.assert_array_equal(np.asarray(pk1), np.asarray(pk2))
+    assert int(nf1) == int(nf2) and int(mf1) == int(mf2)
+
+
+def test_frontier_fused_empty_frontier():
+    pk, nf, mf = ops.frontier_fused(jnp.zeros(100, jnp.uint8),
+                                    jnp.ones(100, jnp.int32))
+    assert int(nf) == 0 and int(mf) == 0
+    assert (np.asarray(pk) == 0).all() and pk.shape == (4,)
+
+
 def test_bottomup_first_hit_parent_is_slab_ordered():
     # degree-sorted adjacency => the chosen parent must be the FIRST slot hit
     deg = jnp.asarray(np.array([3], np.int32))
