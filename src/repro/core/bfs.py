@@ -434,19 +434,22 @@ def bfs_instrumented(g: Graph | DeviceGraph, root: int,
     st = jax.jit(lambda r: init_state(dg, r))(jnp.int32(root))
     jax.block_until_ready(st.frontier)
     stats = []
-    while True:
-        # One host sync per level: the carried stats are two scalars.
-        nf, mf = (int(x) for x in jax.device_get((st.nf, st.mf)))
-        if nf == 0:
-            break
+    # One host sync per level: loop condition, stats row, and termination
+    # guard share a single device_get (separate `int(st.cur_level)` /
+    # `bool(st.bu_mode)` reads would each round-trip to the device).
+    nf, mf = (int(x) for x in jax.device_get((st.nf, st.mf)))
+    while nf > 0:
         t0 = time.perf_counter()
         st = step(st)
         jax.block_until_ready(st.frontier)
         dt = time.perf_counter() - t0
-        stats.append(dict(level=int(st.cur_level), seconds=dt,
-                          direction="bu" if bool(st.bu_mode) else "td",
+        nf2, mf2, cur, bu = jax.device_get(
+            (st.nf, st.mf, st.cur_level, st.bu_mode))
+        stats.append(dict(level=int(cur), seconds=dt,
+                          direction="bu" if bool(bu) else "td",
                           frontier_size=nf, frontier_edges=mf))
-        if int(st.cur_level) > dg.num_vertices:
+        if int(cur) > dg.num_vertices:
             raise RuntimeError("BFS failed to terminate")
+        nf, mf = int(nf2), int(mf2)
     parent, level = finalize(st)
     return parent, level, stats

@@ -565,12 +565,12 @@ def hybrid_bfs_instrumented(pg: PartitionedGraph, root_orig: int,
     state = init_fn(root_mapper(root_orig))
     jax.block_until_ready(state["frontier"])
     stats = []
-    while True:
-        # One host sync per level: the carried stats are two scalars (the
-        # old loop reduced the V-byte frontier twice per round).
-        nf, mf = (int(x) for x in jax.device_get((state["nf"], state["mf"])))
-        if nf == 0:
-            break
+    # One host sync per level: loop condition, stats row (including the
+    # direction flag), and termination guard share a single device_get (the
+    # old loop's `int(state["cur"])` / `bool(bu)` reads each round-tripped,
+    # on top of reducing the V-byte frontier twice per round pre-PR2).
+    nf, mf = (int(x) for x in jax.device_get((state["nf"], state["mf"])))
+    while nf > 0:
         t0 = _time.perf_counter()
         nxt_stack, pc_stack, bu, bu_steps = compute_fn(state)
         jax.block_until_ready(nxt_stack)
@@ -578,12 +578,15 @@ def hybrid_bfs_instrumented(pg: PartitionedGraph, root_orig: int,
         state = exchange_fn(state, nxt_stack, pc_stack, bu, bu_steps)
         jax.block_until_ready(state["frontier"])
         t2 = _time.perf_counter()
-        stats.append(dict(level=int(state["cur"]),
-                          direction="bu" if bool(bu) else "td",
+        nf2, mf2, cur, bu_host = jax.device_get(
+            (state["nf"], state["mf"], state["cur"], bu))
+        stats.append(dict(level=int(cur),
+                          direction="bu" if bool(bu_host) else "td",
                           frontier_size=nf, frontier_edges=mf,
                           compute_s=t1 - t0, exchange_s=t2 - t1))
-        if int(state["cur"]) > pg.plan.v_pad:
+        if int(cur) > pg.plan.v_pad:
             raise RuntimeError("no termination")
+        nf, mf = int(nf2), int(mf2)
     parent_new, level_new = finalize_fn(state)
     parent, level = finalize_hybrid(pg.plan, parent_new, level_new)
     return parent, level, stats

@@ -1,12 +1,24 @@
-"""Unified traversal engine: graph sessions, compiled-plan caching, and
-batched multi-root BFS. See API.md for the full surface; in short:
+"""Unified traversal engine: graph sessions, compiled-plan caching, batched
+multi-root BFS, and the concurrent query server. See API.md for the full
+surface; in short:
 
-    from repro.engine import Engine
-    result = Engine(graph).bfs([root0, root1, ...])
+    from repro.engine import Engine, BFSServer
+    result = Engine(graph).bfs([root0, root1, ...])        # library use
+
+    server = BFSServer({"web": graph})                     # serving use
+    handle = server.submit("web", [root0, root1], client="alice")
+    result = handle.result(timeout=60)
 """
-from repro.engine.engine import AUTO_MAX_PARTS, AUTO_SHARD_MIN_EDGES, BACKENDS, Engine
-from repro.engine.result import TraversalResult
+from repro.engine.engine import (AUTO_MAX_PARTS, AUTO_SHARD_MIN_EDGES,
+                                 BACKENDS, Engine, QueryPlan)
+from repro.engine.queueing import (BoundedPriorityQueue, ClientCaps,
+                                   QueueClosed, QueueFull, ServerOverloaded)
+from repro.engine.result import TraversalResult, edges_traversed_from_levels
+from repro.engine.server import BFSServer, QueryHandle, ServerClosed
 from repro.engine.session import GraphSession
 
 __all__ = ["Engine", "GraphSession", "TraversalResult", "BACKENDS",
-           "AUTO_SHARD_MIN_EDGES", "AUTO_MAX_PARTS"]
+           "AUTO_SHARD_MIN_EDGES", "AUTO_MAX_PARTS", "QueryPlan",
+           "BFSServer", "QueryHandle", "ServerOverloaded", "ServerClosed",
+           "BoundedPriorityQueue", "ClientCaps", "QueueFull", "QueueClosed",
+           "edges_traversed_from_levels"]

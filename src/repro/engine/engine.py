@@ -25,8 +25,9 @@ shape) on the owning `GraphSession` — repeated queries are pure cache hits
 """
 from __future__ import annotations
 
+import dataclasses
 import time
-from typing import Optional, Sequence, Union
+from typing import Callable, Optional, Sequence, Union
 
 import jax
 import jax.numpy as jnp
@@ -37,7 +38,7 @@ from repro.core.bfs import BFSConfig
 from repro.core.graph import Graph
 from repro.core.hybrid_bfs import (HybridConfig, finalize_hybrid,
                                    make_hybrid_search, make_hybrid_stepper)
-from repro.engine.result import TraversalResult
+from repro.engine.result import TraversalResult, edges_traversed_from_levels
 from repro.engine.session import GraphSession
 
 BACKENDS = ("fused", "sharded", "stepper")
@@ -62,6 +63,22 @@ def _bucket_batch(batch: int) -> int:
     if batch <= 1:
         return 1
     return max(MIN_BATCH_BUCKET, 1 << (batch - 1).bit_length())
+
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """Fully resolved query parameters: the coalescing/compatibility key.
+
+    Two queries with equal plans hit the same compiled executables, so a
+    server may merge their root batches into one dispatch (`BFSServer` does
+    exactly that, grouping queued queries by plan). Hashable because
+    `HybridConfig`/`BFSConfig` are frozen dataclasses.
+    """
+    backend: str              # resolved: "fused" | "sharded" | "stepper"
+    n_parts: int
+    hcfg: HybridConfig
+    strategy: str
+    hub_edge_fraction: float
 
 
 def _tree_depth(level: np.ndarray) -> np.ndarray:
@@ -132,10 +149,29 @@ class Engine:
 
     # --------------------------------------------------------------- query --
 
+    def plan(self, cfg=None, *, backend: str = "auto",
+             n_parts: Optional[int] = None, strategy: Optional[str] = None,
+             hub_edge_fraction: Optional[float] = None) -> QueryPlan:
+        """Resolve query knobs into a canonical, hashable `QueryPlan`.
+
+        The plan is the batch-coalescing hook: queries with equal plans
+        share every compiled executable, so a server can concatenate their
+        roots and run them as one dispatch (see `BFSServer`). Canonicalizes
+        session-default partition knobs so "default" and an explicitly
+        passed default coincide.
+        """
+        hcfg = self._normalize_cfg(cfg)
+        backend, n_parts = self._resolve(backend, n_parts)
+        strategy = strategy or self.session.default_strategy
+        if hub_edge_fraction is None:
+            hub_edge_fraction = self.session.default_hub_edge_fraction
+        return QueryPlan(backend, n_parts, hcfg, strategy, hub_edge_fraction)
+
     def bfs(self, roots: RootsLike, cfg=None, *, backend: str = "auto",
             n_parts: Optional[int] = None, strategy: Optional[str] = None,
             hub_edge_fraction: Optional[float] = None, batched: bool = True,
-            validate: bool = False) -> TraversalResult:
+            validate: bool = False,
+            on_level: Optional[Callable] = None) -> TraversalResult:
         """Run BFS from one root or a batch of roots.
 
         Args:
@@ -152,18 +188,29 @@ class Engine:
             times roots one at a time against the same cached executable —
             the Graph500 measurement mode.
           validate: check every parent tree against the python oracle.
+          on_level: stepper backend only — streaming callback invoked as
+            `on_level(batch_index, stats_row)` the moment each level's stats
+            land on the host, before the search finishes (the server's
+            result-streaming hook).
 
         Returns a `TraversalResult`; compile time is never inside the timed
         region (the first query per (config, backend, batch shape) warms the
         executable cache).
         """
-        hcfg = self._normalize_cfg(cfg)
-        backend, n_parts = self._resolve(backend, n_parts)
-        # Canonical partition knobs so cache keys for "session default" and
-        # an explicitly passed default coincide.
-        strategy = strategy or self.session.default_strategy
-        if hub_edge_fraction is None:
-            hub_edge_fraction = self.session.default_hub_edge_fraction
+        qp = self.plan(cfg, backend=backend, n_parts=n_parts,
+                       strategy=strategy, hub_edge_fraction=hub_edge_fraction)
+        return self.bfs_plan(roots, qp, batched=batched, validate=validate,
+                             on_level=on_level)
+
+    def bfs_plan(self, roots: RootsLike, plan: QueryPlan, *,
+                 batched: bool = True, validate: bool = False,
+                 on_level: Optional[Callable] = None) -> TraversalResult:
+        """Run a query whose knobs were already resolved by `plan()`."""
+        backend, n_parts = plan.backend, plan.n_parts
+        hcfg = plan.hcfg
+        if on_level is not None and backend != "stepper":
+            raise ValueError(
+                f"on_level streaming needs backend='stepper', got {backend!r}")
         roots_arr = self._normalize_roots(roots)
         if roots_arr.size == 0:
             v = self.graph.num_vertices
@@ -172,16 +219,20 @@ class Engine:
                 level=np.empty((0, v), np.int32),
                 num_levels=np.empty((0,), np.int32), seconds=0.0,
                 per_root_seconds=np.empty((0,)), backend=backend,
-                n_parts=n_parts, edges_undirected=self.graph.num_undirected_edges)
+                n_parts=n_parts,
+                edges_undirected=self.graph.num_undirected_edges,
+                edges_traversed=np.empty((0,), np.int64))
 
         if backend == "fused":
             res = self._bfs_fused(roots_arr, hcfg, batched)
         elif backend == "sharded":
-            res = self._bfs_sharded(roots_arr, hcfg, n_parts, strategy,
-                                    hub_edge_fraction, batched)
+            res = self._bfs_sharded(roots_arr, hcfg, n_parts, plan.strategy,
+                                    plan.hub_edge_fraction, batched)
         else:
-            res = self._bfs_stepper(roots_arr, hcfg, n_parts, strategy,
-                                    hub_edge_fraction)
+            res = self._bfs_stepper(roots_arr, hcfg, n_parts, plan.strategy,
+                                    plan.hub_edge_fraction, on_level)
+        res.edges_traversed = edges_traversed_from_levels(self.graph.degrees,
+                                                          res.level)
         if validate:
             res.validate(self.graph)
         return res
@@ -298,8 +349,8 @@ class Engine:
 
     # ------------------------------------------------------- stepper path --
 
-    def _bfs_stepper(self, roots_arr, hcfg, n_parts, strategy,
-                     hub) -> TraversalResult:
+    def _bfs_stepper(self, roots_arr, hcfg, n_parts, strategy, hub,
+                     on_level=None) -> TraversalResult:
         if n_parts == 1:
             run_one = self._stepper_single(hcfg.bfs)
         else:
@@ -307,9 +358,10 @@ class Engine:
         wkey = ("stepper_warm", hcfg, n_parts, strategy, hub)
         self.session.warm(wkey, lambda: run_one(int(roots_arr[0]))[0])
         parents, levels, stats_all, timings, per_root = [], [], [], [], []
-        for r in roots_arr:
+        for b, r in enumerate(roots_arr):
+            cb = (lambda row, _b=b: on_level(_b, row)) if on_level else None
             t0 = time.perf_counter()
-            p, l, stats, extra = run_one(int(r))
+            p, l, stats, extra = run_one(int(r), cb)
             per_root.append(time.perf_counter() - t0)
             parents.append(p); levels.append(l)
             stats_all.append(stats)
@@ -331,29 +383,35 @@ class Engine:
             ("stepper_init",),
             lambda: jax.jit(lambda r: B.init_state(dg, r)))
 
-        def run_one(root: int):
+        def run_one(root: int, on_level=None):
             t0 = time.perf_counter()
             st = init(jnp.int32(root))
             jax.block_until_ready(st.frontier)
             init_s = time.perf_counter() - t0
             stats = []
-            while True:
-                # Single host sync per level: two carried scalars, fetched
-                # together (the old loop reduced the frontier twice and made
-                # two device round-trips).
-                nf, mf = (int(x) for x in jax.device_get((st.nf, st.mf)))
-                if nf == 0:
-                    break
+            # One host sync per level, for real: the loop condition, the
+            # stats row, and the termination guard all read from a single
+            # four-scalar device_get. (The old loop's `int(st.cur_level)` /
+            # `bool(st.bu_mode)` reads each issued their own round-trip, so
+            # "one sync per level" was actually four.)
+            nf, mf = (int(x) for x in jax.device_get((st.nf, st.mf)))
+            while nf > 0:
                 t0 = time.perf_counter()
                 st = step(st)
                 jax.block_until_ready(st.frontier)
                 dt = time.perf_counter() - t0
-                stats.append(dict(level=int(st.cur_level), seconds=dt,
-                                  compute_s=dt, exchange_s=0.0,
-                                  direction="bu" if bool(st.bu_mode) else "td",
-                                  frontier_size=nf, frontier_edges=mf))
-                if int(st.cur_level) > dg.num_vertices:
+                nf2, mf2, cur, bu = jax.device_get(
+                    (st.nf, st.mf, st.cur_level, st.bu_mode))
+                row = dict(level=int(cur), seconds=dt,
+                           compute_s=dt, exchange_s=0.0,
+                           direction="bu" if bool(bu) else "td",
+                           frontier_size=nf, frontier_edges=mf)
+                stats.append(row)
+                if on_level:
+                    on_level(row)
+                if int(cur) > dg.num_vertices:
                     raise RuntimeError("BFS failed to terminate")
+                nf, mf = int(nf2), int(mf2)
             t0 = time.perf_counter()
             parent, level = B.finalize(st)
             agg_s = time.perf_counter() - t0
@@ -372,19 +430,20 @@ class Engine:
                 ell=ell))
         init_fn, compute_fn, exchange_fn, finalize_fn, root_mapper = pieces
 
-        def run_one(root: int):
+        def run_one(root: int, on_level=None):
             t0 = time.perf_counter()
             state = init_fn(root_mapper(root))
             jax.block_until_ready(state["frontier"])
             init_s = time.perf_counter() - t0
             stats = []
-            while True:
-                # One host sync per level: carried scalar stats, not a
-                # device->host copy of the whole V-byte frontier.
-                nf, mf = (int(x)
-                          for x in jax.device_get((state["nf"], state["mf"])))
-                if nf == 0:
-                    break
+            # One host sync per level: loop condition, stats row (including
+            # the direction flag `bu` compute_fn returned), and termination
+            # guard all come from a single device_get — no separate
+            # `int(state["cur"])` / `bool(bu)` round-trips, and never a
+            # device->host copy of the whole V-byte frontier.
+            nf, mf = (int(x)
+                      for x in jax.device_get((state["nf"], state["mf"])))
+            while nf > 0:
                 t0 = time.perf_counter()
                 nxt, pc, bu, bs = compute_fn(state)
                 jax.block_until_ready(nxt)
@@ -392,13 +451,19 @@ class Engine:
                 state = exchange_fn(state, nxt, pc, bu, bs)
                 jax.block_until_ready(state["frontier"])
                 t2 = time.perf_counter()
-                stats.append(dict(level=int(state["cur"]),
-                                  seconds=t2 - t0, compute_s=t1 - t0,
-                                  exchange_s=t2 - t1,
-                                  direction="bu" if bool(bu) else "td",
-                                  frontier_size=nf, frontier_edges=mf))
-                if int(state["cur"]) > plan.v_pad:
+                nf2, mf2, cur, bu_host = jax.device_get(
+                    (state["nf"], state["mf"], state["cur"], bu))
+                row = dict(level=int(cur),
+                           seconds=t2 - t0, compute_s=t1 - t0,
+                           exchange_s=t2 - t1,
+                           direction="bu" if bool(bu_host) else "td",
+                           frontier_size=nf, frontier_edges=mf)
+                stats.append(row)
+                if on_level:
+                    on_level(row)
+                if int(cur) > plan.v_pad:
                     raise RuntimeError("BFS failed to terminate")
+                nf, mf = int(nf2), int(mf2)
             t0 = time.perf_counter()
             parent_new, level_new = finalize_fn(state)
             jax.block_until_ready(parent_new)

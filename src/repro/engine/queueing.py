@@ -1,0 +1,192 @@
+"""Serving-side queueing primitives: bounded priority queues and admission
+control for `repro.engine.server.BFSServer`.
+
+Design constraints (the serving story the ROADMAP targets):
+
+* **Bounded everywhere.** An overloaded server must *reject* — with a typed
+  `ServerOverloaded` the client can catch and back off — never stall the
+  submitting thread or grow an unbounded backlog. `BoundedPriorityQueue.put`
+  therefore never blocks; depth is a hard cap checked under the lock.
+* **Priority + FIFO.** Items pop lowest `priority` first and FIFO within a
+  priority class (a monotonic sequence number breaks ties), so equal-priority
+  clients are served in arrival order.
+* **Micro-batch aware.** `get_batch` pops one item (blocking up to a
+  timeout), then greedily pops *consecutive compatible* items — same
+  coalescing key, within a weight budget — so the server can fuse several
+  queued queries into one batched dispatch without ever reordering across
+  incompatible work or priorities.
+
+Everything here is plain threading (no asyncio): JAX dispatch is
+thread-friendly and releases the GIL inside XLA computations, and the
+engine's compiled-executable caches are already lock-protected
+(`GraphSession`), so OS threads are the simplest correct substrate.
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import threading
+import time
+from typing import Any, Callable, Optional
+
+
+class QueueFull(Exception):
+    """Bounded queue is at capacity (internal; servers map it to
+    `ServerOverloaded`)."""
+
+
+class QueueClosed(Exception):
+    """Queue was closed; no further puts/gets are possible."""
+
+
+class ServerOverloaded(RuntimeError):
+    """Typed admission-control rejection.
+
+    Raised by `BFSServer.submit` instead of blocking when either bound is
+    hit. `reason` is machine-readable: ``"queue_full"`` (per-session queue
+    depth) or ``"client_inflight"`` (per-client in-flight cap).
+    """
+
+    def __init__(self, reason: str, detail: str = ""):
+        self.reason = reason
+        self.detail = detail
+        super().__init__(f"server overloaded ({reason}): {detail}")
+
+
+class BoundedPriorityQueue:
+    """Thread-safe bounded priority queue with batch (coalescing) pops.
+
+    `put` is non-blocking by contract (raises `QueueFull`); `get`/`get_batch`
+    block up to a timeout. `high_water` records the deepest the queue ever
+    got — the stress tests use it to prove the depth bound held under load.
+    """
+
+    def __init__(self, maxsize: int):
+        if maxsize < 1:
+            raise ValueError(f"maxsize must be >= 1, got {maxsize}")
+        self.maxsize = maxsize
+        self._heap: list = []
+        self._lock = threading.Lock()
+        self._not_empty = threading.Condition(self._lock)
+        self._seq = itertools.count()
+        self._closed = False
+        self.high_water = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._heap)
+
+    def put(self, item: Any, priority: int = 0) -> None:
+        """Enqueue without blocking; `QueueFull` when at capacity."""
+        with self._lock:
+            if self._closed:
+                raise QueueClosed("queue is closed")
+            if len(self._heap) >= self.maxsize:
+                raise QueueFull(
+                    f"queue depth {len(self._heap)} at maxsize {self.maxsize}")
+            heapq.heappush(self._heap, (priority, next(self._seq), item))
+            self.high_water = max(self.high_water, len(self._heap))
+            self._not_empty.notify()
+
+    def _pop_locked(self) -> Any:
+        return heapq.heappop(self._heap)[2]
+
+    def get(self, timeout: Optional[float] = None) -> Any:
+        """Pop the highest-priority item; `TimeoutError` when none arrives."""
+        batch = self.get_batch(timeout=timeout, max_items=1)
+        return batch[0]
+
+    def get_batch(self, timeout: Optional[float] = None, *,
+                  key: Optional[Callable[[Any], Any]] = None,
+                  max_items: int = 1,
+                  weight: Optional[Callable[[Any], int]] = None,
+                  max_weight: Optional[int] = None) -> list:
+        """Pop one item (blocking), then greedily coalesce compatible ones.
+
+        After the first (blocking) pop, keeps popping while the queue head
+        has the same `key` as the first item, fewer than `max_items` were
+        taken, and the summed `weight` stays <= `max_weight`. Only
+        *consecutive in priority order* items coalesce — batching never
+        reorders work past an incompatible or higher-priority query.
+
+        Raises `TimeoutError` if no item arrives in `timeout` seconds and
+        `QueueClosed` once the queue is closed *and* drained.
+        """
+        # Deadline, not per-wakeup timeout: another consumer can win the
+        # race for a notified item, and the loser must not restart the full
+        # wait (that could block far past `timeout` under a steady trickle
+        # of stolen puts).
+        deadline = None if timeout is None else time.monotonic() + timeout
+        with self._lock:
+            while not self._heap:
+                if self._closed:
+                    raise QueueClosed("queue is closed")
+                remaining = (None if deadline is None
+                             else deadline - time.monotonic())
+                if remaining is not None and remaining <= 0:
+                    raise TimeoutError("queue.get timed out")
+                self._not_empty.wait(remaining)
+            first = self._pop_locked()
+            batch = [first]
+            if key is None:
+                return batch
+            kfirst = key(first)
+            total_w = weight(first) if weight else 1
+            while self._heap and len(batch) < max_items:
+                head = self._heap[0][2]
+                if key(head) != kfirst:
+                    break
+                w = weight(head) if weight else 1
+                if max_weight is not None and total_w + w > max_weight:
+                    break
+                batch.append(self._pop_locked())
+                total_w += w
+            return batch
+
+    def close(self) -> list:
+        """Close the queue; returns (and removes) any undelivered items."""
+        with self._lock:
+            self._closed = True
+            leftovers = [entry[2] for entry in sorted(self._heap)]
+            self._heap.clear()
+            self._not_empty.notify_all()
+            return leftovers
+
+
+class ClientCaps:
+    """Per-client in-flight caps: the second half of admission control.
+
+    `acquire` raises `ServerOverloaded(reason="client_inflight")` when one
+    client alone would exceed its budget — a single hot client cannot starve
+    the shared queue. Always pair with `release` (the server does so in the
+    worker's `finally`).
+    """
+
+    def __init__(self, max_inflight: int):
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
+        self.max_inflight = max_inflight
+        self._counts: dict[Any, int] = {}
+        self._lock = threading.Lock()
+
+    def acquire(self, client: Any) -> None:
+        with self._lock:
+            n = self._counts.get(client, 0)
+            if n >= self.max_inflight:
+                raise ServerOverloaded(
+                    "client_inflight",
+                    f"client {client!r} has {n} queries in flight "
+                    f"(cap {self.max_inflight})")
+            self._counts[client] = n + 1
+
+    def release(self, client: Any) -> None:
+        with self._lock:
+            n = self._counts.get(client, 0) - 1
+            if n <= 0:
+                self._counts.pop(client, None)
+            else:
+                self._counts[client] = n
+
+    def inflight(self, client: Any) -> int:
+        with self._lock:
+            return self._counts.get(client, 0)

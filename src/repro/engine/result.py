@@ -5,14 +5,36 @@ Replaces the ad-hoc `(parent, level)` / `(parent, level, nlevels)` /
 All arrays are host numpy in *original* vertex ids with Graph500 conventions
 (-1 = unreached); the batch dimension is always present, even for a single
 root, so callers never branch on batch size.
+
+TEPS accounting follows the Graph500 rule: a search is credited only with
+the edges it actually traversed — half the degree sum over the *reached*
+vertex set (the reached set is the root's whole component, so that sum
+counts each intra-component undirected edge exactly twice). Dividing by the
+whole-graph edge count instead (the pre-server bug) inflates TEPS for roots
+in small components, which RMAT graphs have plenty of (isolated vertices);
+that figure survives as `teps_global` for benchmark continuity.
 """
 from __future__ import annotations
 
 import dataclasses
 import statistics
-from typing import Optional
+from typing import Optional, Sequence
 
 import numpy as np
+
+
+def edges_traversed_from_levels(degrees: np.ndarray,
+                                level: np.ndarray) -> np.ndarray:
+    """Undirected edges traversed per root: half the reached degree sum.
+
+    `degrees` is int32[V] (directed degree = undirected incident edges);
+    `level` is int32[B, V] with -1 for unreached. Every edge incident to a
+    reached vertex stays inside the component, so the degree sum over
+    `level[b] >= 0` counts each traversed undirected edge twice.
+    """
+    deg = np.asarray(degrees, dtype=np.int64)
+    reached = np.asarray(level) >= 0
+    return (reached @ deg) // 2
 
 
 @dataclasses.dataclass
@@ -31,12 +53,14 @@ class TraversalResult:
         `seconds` when the batch executed as one fused program.
       backend: "fused" | "sharded" | "stepper" (resolved, never "auto").
       n_parts: partition count the query ran with.
-      edges_undirected: graph edge count used for TEPS (Graph500 rule).
+      edges_undirected: whole-graph undirected edge count (`teps_global`).
       per_level_stats: stepper backend only — one list of per-level dicts per
         root (level, direction, frontier_size, frontier_edges, compute_s,
         exchange_s, seconds).
       timings: stepper backend only — one dict per root with out-of-loop
         phase times (init_s, agg_s).
+      edges_traversed: int64[B] undirected edges actually traversed per root
+        (Graph500 accounting; the engine fills it from the reached set).
     """
 
     roots: np.ndarray
@@ -50,19 +74,26 @@ class TraversalResult:
     edges_undirected: int
     per_level_stats: Optional[list] = None
     timings: Optional[list] = None
+    edges_traversed: Optional[np.ndarray] = None
 
     @property
     def batch_size(self) -> int:
         return int(self.roots.shape[0])
 
+    def _edges_per_root(self) -> np.ndarray:
+        if self.edges_traversed is not None:
+            return np.asarray(self.edges_traversed, dtype=np.float64)
+        return np.full(self.batch_size, self.edges_undirected, np.float64)
+
     @property
     def teps(self) -> float:
-        """Aggregate throughput: traversed (undirected) edges per second."""
-        return self.batch_size * self.edges_undirected / max(self.seconds, 1e-12)
+        """Aggregate throughput: *traversed* undirected edges per second."""
+        return float(self._edges_per_root().sum()) / max(self.seconds, 1e-12)
 
     @property
     def teps_per_root(self) -> np.ndarray:
-        return self.edges_undirected / np.maximum(self.per_root_seconds, 1e-12)
+        return self._edges_per_root() / np.maximum(self.per_root_seconds,
+                                                   1e-12)
 
     @property
     def teps_hmean(self) -> float:
@@ -71,9 +102,53 @@ class TraversalResult:
             return 0.0
         return statistics.harmonic_mean(self.teps_per_root.tolist())
 
+    @property
+    def teps_global(self) -> float:
+        """Pre-component-accounting figure: whole-graph E / batch seconds.
+
+        Kept for trajectory continuity in `benchmarks/bench_teps.py`; it
+        over-credits roots whose component is smaller than the graph.
+        """
+        return (self.batch_size * self.edges_undirected
+                / max(self.seconds, 1e-12))
+
     def reached(self, i: int = 0) -> np.ndarray:
         """Vertex ids reached from roots[i]."""
         return np.flatnonzero(self.level[i] >= 0)
+
+    def split(self, sizes: Sequence[int]) -> list["TraversalResult"]:
+        """Slice a coalesced batch back into per-query results.
+
+        `sizes` must sum to `batch_size` (in query order). Each part keeps
+        the batch's backend/partitioning; `seconds` is the sum of the
+        part's `per_root_seconds` (an even split when the batch ran as one
+        fused dispatch). The server uses this to return every coalesced
+        client its own result.
+        """
+        if int(np.sum(sizes)) != self.batch_size:
+            raise ValueError(
+                f"split sizes {list(sizes)} do not sum to batch "
+                f"{self.batch_size}")
+        parts, lo = [], 0
+        for n in sizes:
+            hi = lo + int(n)
+            sl = slice(lo, hi)
+            parts.append(TraversalResult(
+                roots=self.roots[sl], parent=self.parent[sl],
+                level=self.level[sl], num_levels=self.num_levels[sl],
+                seconds=float(self.per_root_seconds[sl].sum()),
+                per_root_seconds=self.per_root_seconds[sl],
+                backend=self.backend, n_parts=self.n_parts,
+                edges_undirected=self.edges_undirected,
+                per_level_stats=(self.per_level_stats[sl]
+                                 if self.per_level_stats is not None else None),
+                timings=(self.timings[sl]
+                         if self.timings is not None else None),
+                edges_traversed=(self.edges_traversed[sl]
+                                 if self.edges_traversed is not None else None),
+            ))
+            lo = hi
+        return parts
 
     def validate(self, graph, sample: Optional[int] = None) -> "TraversalResult":
         """Graph500-style parent-tree validation against the python oracle.

@@ -1,0 +1,404 @@
+"""`BFSServer`: concurrent traversal serving over named graph sessions.
+
+The paper's premise is that a BFS is a *query* against a preprocessed,
+partitioned graph — Totem-style systems amortize partitioning/compilation
+across many traversals, and Graph500-style evaluation measures sustained
+per-root throughput. This module is that serving layer:
+
+* a registry of named `GraphSession`s (one `Engine` each, caches shared and
+  lock-protected), served **concurrently** by one worker thread per session;
+* a bounded priority queue per session (`queueing.BoundedPriorityQueue`) —
+  depth is a hard cap, so overload *rejects* with a typed
+  `ServerOverloaded` instead of stalling submitters;
+* **automatic micro-batching**: consecutive queued queries with equal
+  `QueryPlan`s are coalesced into one fused dispatch (the engine pads the
+  merged batch to its pow2 bucket, so coalesced sizes reuse the same
+  compiled executable — `Engine._fused_executable` via `Engine.bfs_plan`),
+  then split back per client with `TraversalResult.split`;
+* **result streaming**: `submit(..., stream=True)` runs on the stepper
+  backend and pushes each level's frontier stats to the handle the moment
+  they land on the host — `handle.stream()` iterates levels while the
+  search is still running, `handle.result()` returns the final tree;
+* **admission control**: bounded queue depth + per-client in-flight caps
+  (`queueing.ClientCaps`), both rejecting with `ServerOverloaded`.
+
+Threads, not asyncio: XLA computations release the GIL, per-session workers
+give cross-graph parallelism, and the session caches are already
+thread-safe. Synchronous `submit` returns a `QueryHandle` future.
+
+    server = BFSServer({"web": g1, "road": g2})
+    h = server.submit("web", [3, 17, 42], client="alice")
+    result = h.result(timeout=60)        # TraversalResult, oracle-validated
+    server.close()
+"""
+from __future__ import annotations
+
+import queue as _pyqueue
+import threading
+import time
+from typing import Any, Dict, Optional, Union
+
+import numpy as np
+
+from repro.core.graph import Graph
+from repro.engine.engine import Engine, QueryPlan
+from repro.engine.queueing import (BoundedPriorityQueue, ClientCaps,
+                                   QueueClosed, QueueFull, ServerOverloaded)
+from repro.engine.result import TraversalResult
+from repro.engine.session import GraphSession
+
+_STREAM_END = object()
+
+
+class ServerClosed(RuntimeError):
+    """Submit/worker interaction after `BFSServer.close()`."""
+
+
+class QueryHandle:
+    """Future for one submitted query (thread-safe).
+
+    `result(timeout)` blocks for the final `TraversalResult` (re-raising the
+    query's failure, `TimeoutError` on expiry). For streamed queries,
+    `stream(timeout)` iterates per-level stats rows as the worker produces
+    them — each row is the stepper's dict (level, direction, frontier_size,
+    frontier_edges, seconds, ...) plus the `root` it belongs to — and ends
+    when the search finishes; `result()` is available afterwards.
+    """
+
+    def __init__(self, qid: int, session: str, roots: np.ndarray,
+                 plan: QueryPlan, client: Any, priority: int, stream: bool):
+        self.qid = qid
+        self.session = session
+        self.roots = roots
+        self.plan = plan
+        self.client = client
+        self.priority = priority
+        self.is_stream = stream
+        self.submitted_at = time.perf_counter()
+        self.latency_s: Optional[float] = None
+        self._done = threading.Event()
+        self._result: Optional[TraversalResult] = None
+        self._error: Optional[BaseException] = None
+        self._events: Optional[_pyqueue.Queue] = (
+            _pyqueue.Queue() if stream else None)
+
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def result(self, timeout: Optional[float] = None) -> TraversalResult:
+        if not self._done.wait(timeout):
+            raise TimeoutError(
+                f"query {self.qid} on session {self.session!r} not done "
+                f"after {timeout}s")
+        if self._error is not None:
+            raise self._error
+        return self._result
+
+    def stream(self, timeout: Optional[float] = None):
+        """Yield per-level stats rows until the search completes."""
+        if self._events is None:
+            raise ValueError("submit with stream=True to iterate levels")
+        while True:
+            try:
+                ev = self._events.get(timeout=timeout)
+            except _pyqueue.Empty:
+                raise TimeoutError(
+                    f"query {self.qid}: no level completed in {timeout}s")
+            if ev is _STREAM_END:
+                break
+            yield ev
+        if self._error is not None:
+            raise self._error
+
+    # ------------------------------------------------- worker-side plumbing --
+
+    def _push(self, row: dict) -> None:
+        if self._events is not None:
+            self._events.put(row)
+
+    def _finish(self, res: TraversalResult) -> None:
+        self._result = res
+        self.latency_s = time.perf_counter() - self.submitted_at
+        if self._events is not None:
+            self._events.put(_STREAM_END)
+        self._done.set()
+
+    def _fail(self, exc: BaseException) -> None:
+        self._error = exc
+        self.latency_s = time.perf_counter() - self.submitted_at
+        if self._events is not None:
+            self._events.put(_STREAM_END)
+        self._done.set()
+
+
+class _QueryItem:
+    """Internal queue entry: the handle plus everything the worker needs."""
+
+    __slots__ = ("handle", "roots", "plan", "stream", "client", "batch_key")
+
+    def __init__(self, handle: QueryHandle, roots: np.ndarray,
+                 plan: QueryPlan, stream: bool, client: Any):
+        self.handle = handle
+        self.roots = roots
+        self.plan = plan
+        self.stream = stream
+        self.client = client
+        # Streamed queries never coalesce (each runs its own stepper loop
+        # with its own callback), so their key is unique by identity.
+        self.batch_key = ("stream", id(handle)) if stream else ("batch", plan)
+
+
+class BFSServer:
+    """Serve BFS queries concurrently over a registry of graph sessions.
+
+    Args:
+      graphs: optional name -> `Graph` | `GraphSession` mapping registered
+        at construction (more via `register`).
+      max_queue_depth: per-session bounded queue depth; submits beyond it
+        get `ServerOverloaded(reason="queue_full")`.
+      max_inflight_per_client: admission cap counted from submit to
+        completion; beyond it `ServerOverloaded(reason="client_inflight")`.
+      max_batch_queries / max_batch_roots: micro-batching bounds — at most
+        this many compatible queries / total roots fuse into one dispatch.
+      autostart: spawn worker threads immediately (False lets tests fill
+        queues deterministically before serving begins; call `start()`).
+    """
+
+    def __init__(self, graphs: Optional[Dict[str, Union[Graph, GraphSession]]]
+                 = None, *, max_queue_depth: int = 64,
+                 max_inflight_per_client: int = 16,
+                 max_batch_queries: int = 16, max_batch_roots: int = 64,
+                 autostart: bool = True):
+        self.max_queue_depth = max_queue_depth
+        self.max_batch_queries = max_batch_queries
+        self.max_batch_roots = max_batch_roots
+        self._caps = ClientCaps(max_inflight_per_client)
+        self._engines: Dict[str, Engine] = {}
+        self._queues: Dict[str, BoundedPriorityQueue] = {}
+        self._threads: Dict[str, threading.Thread] = {}
+        self._counters: Dict[str, dict] = {}
+        self._state_lock = threading.Lock()
+        self._stats_lock = threading.Lock()
+        self._qid = 0
+        self._started = False
+        self._closed = False
+        for name, g in (graphs or {}).items():
+            self.register(name, g)
+        if autostart:
+            self.start()
+
+    # ------------------------------------------------------------ registry --
+
+    def register(self, name: str,
+                 graph_or_session: Union[Graph, GraphSession]) -> Engine:
+        """Add a named graph session; returns its `Engine` (shared caches)."""
+        with self._state_lock:
+            if self._closed:
+                raise ServerClosed("cannot register on a closed server")
+            if name in self._engines:
+                raise ValueError(f"session {name!r} already registered")
+            engine = Engine(graph_or_session)
+            self._engines[name] = engine
+            self._queues[name] = BoundedPriorityQueue(self.max_queue_depth)
+            # _counters is read under _stats_lock (stats/_count), so the
+            # insert must hold it too — register() is legal on a live server.
+            with self._stats_lock:
+                self._counters[name] = dict(served=0, rejected=0, batches=0,
+                                            roots=0, edges_traversed=0,
+                                            busy_s=0.0)
+            if self._started:
+                self._spawn_worker(name)
+            return engine
+
+    @property
+    def sessions(self) -> Dict[str, GraphSession]:
+        with self._state_lock:
+            return {name: eng.session for name, eng in self._engines.items()}
+
+    def engine(self, name: str) -> Engine:
+        eng = self._engines.get(name)
+        if eng is None:
+            raise KeyError(f"unknown graph session {name!r}; registered: "
+                           f"{sorted(self._engines)}")
+        return eng
+
+    # ----------------------------------------------------------- lifecycle --
+
+    def _spawn_worker(self, name: str) -> None:
+        t = threading.Thread(target=self._worker_loop, args=(name,),
+                             name=f"bfs-serve-{name}", daemon=True)
+        self._threads[name] = t
+        t.start()
+
+    def start(self) -> "BFSServer":
+        """Start one worker thread per registered session (idempotent)."""
+        with self._state_lock:
+            if self._closed:
+                raise ServerClosed("cannot start a closed server")
+            self._started = True
+            for name in self._engines:
+                if name not in self._threads:
+                    self._spawn_worker(name)
+        return self
+
+    def close(self, timeout: Optional[float] = None) -> None:
+        """Stop serving: fail queued-but-unstarted queries, join workers.
+
+        In-flight dispatches finish; undelivered queue entries get their
+        handles failed with `ServerClosed`.
+        """
+        with self._state_lock:
+            if self._closed:
+                return
+            self._closed = True
+            queues = list(self._queues.items())
+            threads = list(self._threads.values())
+        for _name, q in queues:
+            for item in q.close():
+                item.handle._fail(
+                    ServerClosed("server closed before the query ran"))
+                self._caps.release(item.client)
+        for t in threads:
+            t.join(timeout)
+
+    def __enter__(self) -> "BFSServer":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()
+
+    # -------------------------------------------------------------- submit --
+
+    def submit(self, session: str, roots, cfg=None, *, backend: str = "auto",
+               n_parts: Optional[int] = None, strategy: Optional[str] = None,
+               hub_edge_fraction: Optional[float] = None,
+               client: Any = "anonymous", priority: int = 0,
+               stream: bool = False) -> QueryHandle:
+        """Enqueue a traversal query; never blocks on load.
+
+        Invalid input (unknown session, bad roots/backend) raises
+        synchronously; overload raises `ServerOverloaded` (typed; catch and
+        back off). Returns a `QueryHandle` future.
+
+        `priority`: lower runs first; FIFO within a priority class.
+        `stream=True` resolves to the stepper backend and makes
+        `handle.stream()` yield per-level stats as levels complete.
+        """
+        if self._closed:
+            raise ServerClosed("server is closed")
+        eng = self.engine(session)
+        if stream:
+            if backend == "auto":
+                backend = "stepper"
+            elif backend != "stepper":
+                raise ValueError(
+                    f"stream=True runs on the stepper backend, got {backend!r}")
+        plan = eng.plan(cfg, backend=backend, n_parts=n_parts,
+                        strategy=strategy,
+                        hub_edge_fraction=hub_edge_fraction)
+        roots_arr = eng._normalize_roots(roots)
+        if roots_arr.size == 0:
+            raise ValueError("cannot submit an empty root batch")
+        with self._state_lock:
+            self._qid += 1
+            qid = self._qid
+        handle = QueryHandle(qid, session, roots_arr, plan, client, priority,
+                             stream)
+        item = _QueryItem(handle, roots_arr, plan, stream, client)
+        try:
+            self._caps.acquire(client)
+        except ServerOverloaded:
+            self._count(session, rejected=1)
+            raise
+        try:
+            self._queues[session].put(item, priority)
+        except QueueFull as e:
+            self._caps.release(client)
+            self._count(session, rejected=1)
+            raise ServerOverloaded("queue_full", str(e)) from None
+        except QueueClosed:
+            self._caps.release(client)
+            raise ServerClosed("server is closed") from None
+        return handle
+
+    # -------------------------------------------------------------- worker --
+
+    def _worker_loop(self, name: str) -> None:
+        q = self._queues[name]
+        eng = self._engines[name]
+        while True:
+            try:
+                # Blocks while idle; close() wakes every waiter into the
+                # QueueClosed exit path, so no poll timeout is needed.
+                batch = q.get_batch(key=lambda it: it.batch_key,
+                                    max_items=self.max_batch_queries,
+                                    weight=lambda it: len(it.roots),
+                                    max_weight=self.max_batch_roots)
+            except QueueClosed:
+                return
+            self._execute(name, eng, batch)
+
+    def _execute(self, name: str, eng: Engine, batch: list) -> None:
+        t0 = time.perf_counter()
+        try:
+            first = batch[0]
+            if first.stream:
+                h = first.handle
+                res = eng.bfs_plan(
+                    first.roots, first.plan,
+                    on_level=lambda b, row, _r=first.roots: h._push(
+                        dict(row, root=int(_r[b]))))
+                results = [res]
+            else:
+                # Micro-batch: one fused dispatch for every coalesced query
+                # (the engine pads the merged batch to its pow2 bucket, so
+                # ragged coalesced sizes share one executable), split back
+                # per query below.
+                merged = eng.bfs_plan(
+                    np.concatenate([it.roots for it in batch]), first.plan)
+                results = merged.split([len(it.roots) for it in batch])
+        except Exception as e:  # noqa: BLE001 — every failure reaches clients
+            for it in batch:
+                self._caps.release(it.client)
+                it.handle._fail(e)
+            self._count(name, busy_s=time.perf_counter() - t0)
+            return
+        edges = 0
+        for it, res in zip(batch, results):
+            # Release the admission slot *before* waking the client: a
+            # client resubmitting the instant result() returns must not be
+            # bounced off its own just-completed query.
+            self._caps.release(it.client)
+            it.handle._finish(res)
+            edges += int(res.edges_traversed.sum())
+        self._count(name, served=len(batch), batches=1,
+                    roots=sum(len(it.roots) for it in batch),
+                    edges_traversed=edges,
+                    busy_s=time.perf_counter() - t0)
+
+    # --------------------------------------------------------------- stats --
+
+    def _count(self, name: str, **deltas) -> None:
+        with self._stats_lock:
+            c = self._counters[name]
+            for k, v in deltas.items():
+                c[k] += v
+
+    def stats(self) -> dict:
+        """Live counters per session + totals (served/rejected/batches/...,
+        queue depth and high-water mark — the depth-bound proof)."""
+        with self._state_lock:
+            queues = list(self._queues.items())
+        with self._stats_lock:
+            per = {name: dict(c) for name, c in self._counters.items()}
+        for name, q in queues:
+            per[name]["queue_depth"] = len(q)
+            per[name]["queue_high_water"] = q.high_water
+        totals = {}
+        for c in per.values():
+            for k, v in c.items():
+                if k not in ("queue_depth", "queue_high_water"):
+                    totals[k] = totals.get(k, 0) + v
+        return dict(sessions=per, totals=totals,
+                    max_queue_depth=self.max_queue_depth,
+                    clients_capped_at=self._caps.max_inflight)

@@ -18,9 +18,20 @@ The session owns, and builds at most once each:
 Executables are wrapped so *tracing* (not calling) bumps a per-key counter;
 `trace_count` lets tests assert that repeated queries with an identical
 config never retrace.
+
+Sessions are **thread-safe**: every cache (partitions, executables, helper
+objects, warm set, trace counters) is guarded by one per-session `RLock`
+with double-checked builds, so concurrent queries — the `BFSServer` case —
+build/trace each plan at most once instead of racing check-then-set on
+plain dicts. The lock is re-entrant because builders call back into the
+session (e.g. a fused executable build reads `device_graph()`); it is held
+across `build()`/`warm()` bodies, which serializes *first-time compiles*
+per session but never steady-state cache hits (readers check outside the
+lock first) and never cross-session work (each session has its own lock).
 """
 from __future__ import annotations
 
+import threading
 from typing import Any, Callable, Optional
 
 import jax
@@ -43,6 +54,7 @@ class GraphSession:
         self.default_strategy = default_strategy
         self.default_hub_edge_fraction = default_hub_edge_fraction
         self._mesh = mesh
+        self._lock = threading.RLock()
         self._device_graph: Optional[DeviceGraph] = None
         self._partitions: dict[tuple, tuple] = {}
         self._executables: dict[Any, Callable] = {}
@@ -55,7 +67,9 @@ class GraphSession:
     def device_graph(self) -> DeviceGraph:
         """Single-device CSR arrays (built once, reused by every query)."""
         if self._device_graph is None:
-            self._device_graph = DeviceGraph.from_graph(self.graph)
+            with self._lock:
+                if self._device_graph is None:
+                    self._device_graph = DeviceGraph.from_graph(self.graph)
         return self._device_graph
 
     def partitioned(self, n_parts: int, strategy: Optional[str] = None,
@@ -65,11 +79,16 @@ class GraphSession:
         hub = (self.default_hub_edge_fraction
                if hub_edge_fraction is None else hub_edge_fraction)
         key = (n_parts, strategy, hub)
-        if key not in self._partitions:
-            plan = PT.make_plan(self.graph, n_parts, strategy,
-                                hub_edge_fraction=hub)
-            self._partitions[key] = (plan, PT.apply_plan(self.graph, plan))
-        return self._partitions[key]
+        got = self._partitions.get(key)
+        if got is None:
+            with self._lock:
+                got = self._partitions.get(key)
+                if got is None:
+                    plan = PT.make_plan(self.graph, n_parts, strategy,
+                                        hub_edge_fraction=hub)
+                    got = (plan, PT.apply_plan(self.graph, plan))
+                    self._partitions[key] = got
+        return got
 
     def ell_tiles(self, *, base: int = ELL.DEFAULT_BASE,
                   growth: int = ELL.DEFAULT_GROWTH):
@@ -101,6 +120,14 @@ class GraphSession:
                 raise ValueError(
                     f"session mesh has {self._mesh.devices.size} devices but "
                     f"the query wants {n_parts} partitions")
+            # Validate the axis up front: a mismatched axis otherwise dies
+            # deep inside shard_map with an opaque unbound-axis error.
+            if axis_name not in self._mesh.axis_names:
+                raise ValueError(
+                    f"session mesh axes {self._mesh.axis_names} do not "
+                    f"include the query's axis {axis_name!r}; construct the "
+                    f"mesh with Mesh(devices, ({axis_name!r},)) or set "
+                    f"HybridConfig(axis_name=...) to a mesh axis")
             return self._mesh
         return default_mesh(n_parts, axis_name)
 
@@ -116,43 +143,66 @@ class GraphSession:
         """
         fn = self._executables.get(key)
         if fn is None:
-            raw = build()
+            with self._lock:
+                fn = self._executables.get(key)
+                if fn is None:
+                    raw = build()
 
-            def counted(*args, _raw=raw, _key=key):
-                self._trace_counts[_key] = self._trace_counts.get(_key, 0) + 1
-                return _raw(*args)
+                    def counted(*args, _raw=raw, _key=key):
+                        with self._lock:
+                            self._trace_counts[_key] = \
+                                self._trace_counts.get(_key, 0) + 1
+                        return _raw(*args)
 
-            fn = jax.jit(counted, static_argnums=static_argnums)
-            self._executables[key] = fn
+                    fn = jax.jit(counted, static_argnums=static_argnums)
+                    self._executables[key] = fn
         return fn
 
     def cached(self, key, build: Callable[[], Any]) -> Any:
         """Cache for non-executable helper objects (steppers, mappers)."""
-        if key not in self._objects:
-            self._objects[key] = build()
-        return self._objects[key]
+        got = self._objects.get(key)
+        if got is None:
+            with self._lock:
+                got = self._objects.get(key)
+                if got is None:
+                    got = build()
+                    self._objects[key] = got
+        return got
 
     def warm(self, key, run: Callable[[], Any]) -> None:
         """Run `run()` (and block) the first time `key` is used: pays
-        compilation outside any timed region."""
-        if key not in self._warmed:
+        compilation outside any timed region.
+
+        Holds the session lock across the run, so two concurrent queries on
+        one plan compile it once (the second blocks, then cache-hits) —
+        without the lock both would trace and the trace-count proof of
+        zero per-query recompiles would fail under a concurrent server.
+        """
+        if key in self._warmed:
+            return
+        with self._lock:
+            if key in self._warmed:
+                return
             jax.block_until_ready(run())
             self._warmed.add(key)
 
     # ---------------------------------------------------------- inspection --
 
     def trace_count(self, key) -> int:
-        return self._trace_counts.get(key, 0)
+        with self._lock:
+            return self._trace_counts.get(key, 0)
 
     @property
     def total_traces(self) -> int:
-        return sum(self._trace_counts.values())
+        with self._lock:
+            return sum(self._trace_counts.values())
 
     def cache_info(self) -> dict:
-        return {
-            "graph": dict(V=self.graph.num_vertices,
-                          E_undirected=self.graph.num_undirected_edges),
-            "partitions": sorted(self._partitions),
-            "executables": sorted(self._executables, key=repr),
-            "trace_counts": dict(self._trace_counts),
-        }
+        with self._lock:
+            return {
+                "graph": dict(V=self.graph.num_vertices,
+                              E_undirected=self.graph.num_undirected_edges),
+                "partitions": sorted(self._partitions),
+                "executables": sorted(self._executables, key=repr),
+                "trace_counts": dict(self._trace_counts),
+            }

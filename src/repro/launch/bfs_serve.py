@@ -1,0 +1,196 @@
+"""BFS query-server driver: N synthetic clients against a `BFSServer`.
+
+Stands up a server over one or more RMAT graph sessions and drives it with
+concurrent client threads (Graph500-style random non-isolated roots),
+reporting sustained QPS / aggregate component-TEPS, query latency
+percentiles, and admission-control counters. `run_load` is the reusable
+load generator — `benchmarks/bench_serve.py` wraps it and records the
+numbers to BENCH_serve.json.
+
+  PYTHONPATH=src python -m repro.launch.bfs_serve --graphs 2 --scale 12 \
+      --clients 8 --queries 6 --batch 4
+"""
+from __future__ import annotations
+
+import argparse
+import threading
+import time
+
+import numpy as np
+
+from repro.engine import BFSServer, ServerOverloaded
+
+
+def _root_candidates(g) -> np.ndarray:
+    """Graph500 root pool: non-isolated vertices (all, if none have edges)."""
+    cand = np.flatnonzero(g.degrees > 0)
+    return cand if cand.size else np.arange(g.num_vertices)
+
+
+def _client_loop(server, names, candidates, *, client_id: str, queries: int,
+                 batch: int, seed: int, stream_every: int, out: dict):
+    """One synthetic client: submit `queries`, retry on overload, wait all.
+
+    Any failure is recorded in `out[client_id]["error"]` (not swallowed by
+    the thread's default excepthook) so `run_load` can fail loudly instead
+    of aggregating metrics over the surviving clients only.
+    """
+    try:
+        rng = np.random.default_rng(seed)
+        handles, rejected = [], 0
+        for i in range(queries):
+            name = names[i % len(names)]
+            cand = candidates[name]
+            roots = rng.choice(cand, size=min(batch, cand.size),
+                               replace=False)
+            stream = stream_every and (i % stream_every == stream_every - 1)
+            while True:
+                try:
+                    handles.append(server.submit(name, roots,
+                                                 client=client_id,
+                                                 stream=stream))
+                    break
+                except ServerOverloaded:
+                    # Typed rejection: the client backs off and retries
+                    # instead of stalling inside the server.
+                    rejected += 1
+                    time.sleep(0.002)
+        levels_streamed = 0
+        for h in handles:
+            if h.is_stream:
+                levels_streamed += sum(1 for _ in h.stream(timeout=600))
+        results = [(h.session, h.result(timeout=600)) for h in handles]
+        out[client_id] = dict(
+            results=results,
+            latencies=[h.latency_s for h in handles],
+            rejected=rejected,
+            levels_streamed=levels_streamed,
+        )
+    except Exception as e:  # noqa: BLE001 — reported by run_load
+        out[client_id] = dict(error=e)
+
+
+def run_load(server: BFSServer, graphs: dict, *, clients: int = 8,
+             queries_per_client: int = 6, batch: int = 4, seed: int = 0,
+             stream_every: int = 0, validate: int = 1) -> dict:
+    """Drive `server` with concurrent clients; returns sustained metrics.
+
+    `graphs` maps registered session names to their `Graph`s (for root
+    sampling and optional oracle validation of `validate` results per
+    client). `stream_every=k` makes every k-th query a streamed stepper
+    query. Aggregate TEPS uses component-corrected traversed edges.
+    """
+    names = sorted(graphs)
+    candidates = {n: _root_candidates(graphs[n]) for n in names}
+    # Warm every session outside the measured window: the first query per
+    # (plan, bucket) pays the trace+compile; steady-state QPS/latency should
+    # measure serving, not XLA compilation.
+    warm = [server.submit(n, candidates[n][:batch], client="warmup")
+            for n in names]
+    if stream_every:
+        warm += [server.submit(n, candidates[n][:1], client="warmup",
+                               stream=True) for n in names]
+    for h in warm:
+        h.result(timeout=600)
+    out: dict = {}
+    threads = [
+        threading.Thread(
+            target=_client_loop, args=(server, names, candidates),
+            kwargs=dict(client_id=f"client-{c}", queries=queries_per_client,
+                        batch=batch, seed=seed * 1000 + c,
+                        stream_every=stream_every, out=out),
+            name=f"bfs-client-{c}")
+        for c in range(clients)
+    ]
+    t0 = time.perf_counter()
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wall = time.perf_counter() - t0
+
+    failures = {cid: c["error"] for cid, c in out.items() if "error" in c}
+    if failures:
+        raise RuntimeError(f"client failures under load: {failures}")
+    if len(out) != clients:
+        raise RuntimeError(
+            f"only {len(out)}/{clients} clients reported results")
+    all_results = [r for c in out.values() for _, r in c["results"]]
+    latencies = np.asarray([l for c in out.values() for l in c["latencies"]])
+    edges = sum(int(r.edges_traversed.sum()) for r in all_results)
+    if validate:
+        for c in out.values():
+            for name, r in c["results"][:validate]:
+                r.validate(graphs[name])
+    return dict(
+        clients=clients,
+        queries=len(all_results),
+        roots=int(sum(r.batch_size for r in all_results)),
+        wall_s=wall,
+        qps=len(all_results) / wall,
+        teps_sustained=edges / wall,
+        edges_traversed=edges,
+        latency_p50_ms=float(np.percentile(latencies, 50) * 1e3),
+        latency_p95_ms=float(np.percentile(latencies, 95) * 1e3),
+        client_rejected=int(sum(c["rejected"] for c in out.values())),
+        levels_streamed=int(sum(c["levels_streamed"] for c in out.values())),
+    )
+
+
+def build_server(n_graphs: int, scale: int, *, edgefactor: int = 16,
+                 seed: int = 0, **server_kw):
+    """(server, {name: graph}) over `n_graphs` RMAT sessions."""
+    from repro.core import graph as G
+    graphs = {f"rmat{scale}-{i}": G.rmat(scale, edgefactor=edgefactor,
+                                         seed=seed + i)
+              for i in range(n_graphs)}
+    return BFSServer(graphs, **server_kw), graphs
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--graphs", type=int, default=2)
+    ap.add_argument("--scale", type=int, default=12)
+    ap.add_argument("--edgefactor", type=int, default=16)
+    ap.add_argument("--clients", type=int, default=8)
+    ap.add_argument("--queries", type=int, default=6,
+                    help="queries per client")
+    ap.add_argument("--batch", type=int, default=4, help="roots per query")
+    ap.add_argument("--stream-every", type=int, default=0,
+                    help="every k-th query streams per-level stats (0=off)")
+    ap.add_argument("--queue-depth", type=int, default=64)
+    ap.add_argument("--inflight", type=int, default=16,
+                    help="per-client in-flight cap")
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--no-validate", action="store_true")
+    args = ap.parse_args(argv)
+
+    server, graphs = build_server(
+        args.graphs, args.scale, edgefactor=args.edgefactor, seed=args.seed,
+        max_queue_depth=args.queue_depth,
+        max_inflight_per_client=args.inflight)
+    try:
+        m = run_load(server, graphs, clients=args.clients,
+                     queries_per_client=args.queries, batch=args.batch,
+                     seed=args.seed, stream_every=args.stream_every,
+                     validate=0 if args.no_validate else 1)
+        stats = server.stats()
+    finally:
+        server.close()
+    print(f"[serve] {args.graphs} session(s) scale={args.scale} | "
+          f"{m['clients']} clients x {args.queries} queries "
+          f"(batch {args.batch}): {m['qps']:.1f} QPS, "
+          f"{m['teps_sustained'] / 1e6:.2f} MTEPS sustained, "
+          f"p50 {m['latency_p50_ms']:.0f} ms / p95 {m['latency_p95_ms']:.0f} ms")
+    t = stats["totals"]
+    print(f"[serve] coalescing: {t['served']} queries in {t['batches']} "
+          f"dispatches; rejected {t['rejected']}; "
+          f"streamed levels {m['levels_streamed']}")
+    for name, c in sorted(stats["sessions"].items()):
+        print(f"[serve]   {name}: served={c['served']} "
+              f"high_water={c['queue_high_water']}/{stats['max_queue_depth']}")
+    return m, stats
+
+
+if __name__ == "__main__":
+    main()

@@ -95,6 +95,61 @@ def test_degenerate_disconnected_graph():
     assert res.reached(2).tolist() == [5]
 
 
+def test_component_teps_accounting():
+    """Graph500 rule: a root is credited only with its component's edges.
+
+    Two components ({0,1,2} path: 2 edges; {3,4}: 1 edge) plus isolated 5.
+    The old accounting divided every root by the whole-graph edge count,
+    inflating TEPS for small components; that figure survives as
+    `teps_global`.
+    """
+    from repro.engine import edges_traversed_from_levels
+    g = G.from_edges(np.array([0, 1, 3]), np.array([1, 2, 4]), 6)
+    res = Engine(g).bfs([0, 4, 5], validate=True)
+    assert res.edges_traversed.tolist() == [2, 1, 0]
+    np.testing.assert_array_equal(
+        edges_traversed_from_levels(g.degrees, res.level),
+        res.edges_traversed)
+    # aggregate: 3 traversed edges, vs 3 roots x 3 global edges
+    assert res.teps == pytest.approx(3 / res.seconds, rel=1e-9)
+    assert res.teps_global == pytest.approx(9 / res.seconds, rel=1e-9)
+    per = res.teps_per_root
+    assert per[2] == 0.0                      # isolated root traverses nothing
+    assert res.teps_hmean == 0.0              # hmean with a zero is zero
+    # single-component queries: both figures coincide
+    res2 = Engine(g).bfs([3], validate=True)
+    assert res2.edges_traversed.tolist() == [1]
+    assert res2.teps == pytest.approx(res2.teps_global / 3, rel=1e-9)
+
+
+def test_result_split():
+    g = G.from_edges(np.array([0, 1, 3]), np.array([1, 2, 4]), 6)
+    res = Engine(g).bfs([0, 4, 5, 1])
+    parts = res.split([1, 2, 1])
+    assert [p.batch_size for p in parts] == [1, 2, 1]
+    np.testing.assert_array_equal(parts[1].roots, [4, 5])
+    np.testing.assert_array_equal(parts[1].parent, res.parent[1:3])
+    np.testing.assert_array_equal(parts[1].edges_traversed,
+                                  res.edges_traversed[1:3])
+    assert sum(p.seconds for p in parts) == pytest.approx(res.seconds)
+    with pytest.raises(ValueError):
+        res.split([2, 3])
+
+
+def test_session_mesh_axis_validation(small_graph):
+    """A user-supplied mesh with a mismatched axis must fail up front with a
+    clear message, not deep inside shard_map."""
+    import jax
+    from jax.sharding import Mesh
+    mesh = Mesh(np.array(jax.devices()[:1]), ("x",))
+    session = GraphSession(small_graph, mesh=mesh)
+    with pytest.raises(ValueError, match="axis 'part'"):
+        session.mesh_for(1, "part")
+    assert session.mesh_for(1, "x") is mesh
+    with pytest.raises(ValueError, match="devices"):
+        session.mesh_for(2, "x")
+
+
 def test_stepper_backend_stats(small_graph):
     g = small_graph
     root = int(np.argmax(g.degrees))

@@ -1,0 +1,246 @@
+"""BFSServer + queueing: concurrent multi-graph serving vs the oracle,
+micro-batch coalescing with trace-count proof, admission control, result
+streaming, and the bounded-priority-queue primitives."""
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import graph as G, ref
+from repro.core.bfs import BFSConfig
+from repro.engine import (BFSServer, BoundedPriorityQueue, ClientCaps,
+                          QueueClosed, QueueFull, ServerClosed,
+                          ServerOverloaded)
+
+
+@pytest.fixture(scope="module")
+def two_graphs():
+    return {"g0": G.rmat(9, seed=7), "g1": G.rmat(9, seed=1)}
+
+
+# ----------------------------------------------------------- queue primitives
+
+
+def test_priority_queue_order_and_bounds():
+    q = BoundedPriorityQueue(3)
+    q.put("b", priority=1)
+    q.put("a", priority=0)
+    q.put("c", priority=1)
+    with pytest.raises(QueueFull):
+        q.put("d")
+    assert q.high_water == 3
+    # priority first, FIFO within a priority class
+    assert [q.get(0), q.get(0), q.get(0)] == ["a", "b", "c"]
+    with pytest.raises(TimeoutError):
+        q.get(timeout=0.01)
+
+
+def test_priority_queue_batch_coalescing():
+    q = BoundedPriorityQueue(10)
+    for i, (key, w) in enumerate([("x", 2), ("x", 2), ("x", 3), ("y", 1),
+                                  ("x", 1)]):
+        q.put((key, w, i))
+    # same-key prefix only, respecting the weight budget (2+2 <= 5 < 2+2+3)
+    batch = q.get_batch(0, key=lambda it: it[0], max_items=10,
+                        weight=lambda it: it[1], max_weight=5)
+    assert [it[2] for it in batch] == [0, 1]
+    # next pop never reorders past the incompatible "y"
+    batch = q.get_batch(0, key=lambda it: it[0], max_items=10)
+    assert [it[2] for it in batch] == [2]
+    batch = q.get_batch(0, key=lambda it: it[0], max_items=10)
+    assert [it[2] for it in batch] == [3]
+
+
+def test_priority_queue_close_drains():
+    q = BoundedPriorityQueue(4)
+    q.put(1)
+    q.put(2)
+    leftovers = q.close()
+    assert leftovers == [1, 2]
+    with pytest.raises(QueueClosed):
+        q.put(3)
+    with pytest.raises(QueueClosed):
+        q.get(0)
+
+
+def test_client_caps():
+    caps = ClientCaps(2)
+    caps.acquire("a")
+    caps.acquire("a")
+    with pytest.raises(ServerOverloaded) as ei:
+        caps.acquire("a")
+    assert ei.value.reason == "client_inflight"
+    caps.acquire("b")            # other clients unaffected
+    caps.release("a")
+    caps.acquire("a")            # freed slot reusable
+    assert caps.inflight("a") == 2
+
+
+# ------------------------------------------------------------- server serving
+
+
+def test_server_stress_concurrent_clients(two_graphs):
+    """Acceptance: 8 concurrent clients x 2 graph sessions, oracle-validated
+    results, bounded queue depth, zero per-query recompiles (trace proof),
+    with micro-batch coalescing active."""
+    names = sorted(two_graphs)
+    # max_batch_roots == the pow2 bucket of a 4-root query: coalesced
+    # dispatches (4 or 8 roots) reuse the same fused executable.
+    server = BFSServer(two_graphs, max_queue_depth=64, max_batch_roots=8)
+    errors = []
+
+    def client(cid):
+        try:
+            rng = np.random.default_rng(cid)
+            handles = []
+            for i in range(4):
+                name = names[(cid + i) % len(names)]
+                cand = np.flatnonzero(two_graphs[name].degrees > 0)
+                roots = rng.choice(cand, 4, replace=False)
+                handles.append(server.submit(name, roots,
+                                             client=f"client-{cid}",
+                                             priority=cid % 2))
+            for h in handles:
+                res = h.result(timeout=300)
+                g = two_graphs[h.session]
+                assert res.batch_size == 4
+                for b in range(res.batch_size):
+                    ref.validate_parents(g, int(res.roots[b]),
+                                         res.parent[b], res.level[b])
+        except Exception as e:  # noqa: BLE001 — surfaced to the main thread
+            errors.append((cid, e))
+
+    def load():
+        threads = [threading.Thread(target=client, args=(c,))
+                   for c in range(8)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+
+    try:
+        load()
+        assert not errors, errors
+        traces1 = {n: s.total_traces for n, s in server.sessions.items()}
+        # every session compiled exactly one fused plan, however many
+        # queries/coalesced dispatch sizes it served
+        assert traces1 == {n: 1 for n in names}, traces1
+        load()                                  # identical second wave
+        assert not errors, errors
+        traces2 = {n: s.total_traces for n, s in server.sessions.items()}
+        assert traces2 == traces1, (traces1, traces2)
+        stats = server.stats()
+        assert stats["totals"]["served"] == 64
+        assert stats["totals"]["rejected"] == 0
+        # the depth bound held under full load
+        for name, c in stats["sessions"].items():
+            assert c["queue_high_water"] <= server.max_queue_depth
+        # micro-batching actually coalesced (strictly fewer dispatches
+        # than queries would be flaky; <= is the invariant)
+        assert stats["totals"]["batches"] <= stats["totals"]["served"]
+    finally:
+        server.close()
+
+
+def test_admission_control_rejects_typed(two_graphs):
+    """Over-capacity submits must reject with ServerOverloaded — both the
+    queue-depth bound and the per-client in-flight cap — and every admitted
+    query must still complete once workers start."""
+    g = two_graphs["g0"]
+    server = BFSServer({"g": g}, max_queue_depth=3,
+                       max_inflight_per_client=2, autostart=False)
+    try:
+        admitted, reasons = [], []
+        for i in range(4):
+            for cl in ("hog", "other"):
+                try:
+                    admitted.append(server.submit("g", [i], client=cl))
+                except ServerOverloaded as e:
+                    reasons.append(e.reason)
+        assert "queue_full" in reasons and "client_inflight" in reasons
+        assert len(admitted) == 3
+        assert server.stats()["totals"]["rejected"] == len(reasons)
+        server.start()
+        for h in admitted:
+            h.result(timeout=300).validate(g)
+        # load drained -> the same client admits again
+        h = server.submit("g", [0], client="hog")
+        h.result(timeout=300)
+    finally:
+        server.close()
+
+
+def test_streamed_levels_match_final_stats(two_graphs):
+    g = two_graphs["g0"]
+    server = BFSServer({"g": g})
+    try:
+        root = int(np.argmax(g.degrees))
+        h = server.submit("g", root, stream=True)
+        events = list(h.stream(timeout=300))
+        res = h.result(timeout=10)
+        assert res.backend == "stepper"
+        stats = res.per_level_stats[0]
+        assert len(events) == len(stats) == res.num_levels[0] + 1
+        assert events == [dict(row, root=root) for row in stats]
+        assert [e["level"] for e in events] == list(range(1, len(events) + 1))
+        # stream=False handles refuse to stream
+        h2 = server.submit("g", root)
+        h2.result(timeout=300)
+        with pytest.raises(ValueError):
+            list(h2.stream())
+        # explicit non-stepper backend + stream is a synchronous error
+        with pytest.raises(ValueError):
+            server.submit("g", root, backend="fused", stream=True)
+    finally:
+        server.close()
+
+
+def test_server_submit_errors_and_close(two_graphs):
+    g = two_graphs["g0"]
+    server = BFSServer({"g": g})
+    with pytest.raises(KeyError):
+        server.submit("nope", [0])
+    with pytest.raises(ValueError):
+        server.submit("g", [g.num_vertices])          # root out of range
+    with pytest.raises(ValueError):
+        server.submit("g", np.array([], np.int64))    # empty batch
+    with pytest.raises(ValueError):
+        server.register("g", g)                       # duplicate name
+    server.close()
+    with pytest.raises(ServerClosed):
+        server.submit("g", [0])
+    server.close()                                    # idempotent
+
+
+def test_close_fails_queued_queries(two_graphs):
+    g = two_graphs["g0"]
+    server = BFSServer({"g": g}, autostart=False)
+    h = server.submit("g", [1])
+    server.close()
+    with pytest.raises(ServerClosed):
+        h.result(timeout=10)
+
+
+def test_coalesced_results_split_correctly(two_graphs):
+    """Queries merged into one dispatch get their own roots back, identical
+    to running them alone."""
+    g = two_graphs["g1"]
+    server = BFSServer({"g": g}, autostart=False, max_batch_roots=8)
+    try:
+        cand = np.flatnonzero(g.degrees > 0)
+        h1 = server.submit("g", cand[:3], client="a")
+        h2 = server.submit("g", cand[3:8], client="b")
+        server.start()
+        r1, r2 = h1.result(timeout=300), h2.result(timeout=300)
+        assert (r1.roots == cand[:3]).all() and (r2.roots == cand[3:8]).all()
+        stats = server.stats()
+        assert stats["totals"]["batches"] == 1      # one fused dispatch
+        assert stats["totals"]["served"] == 2
+        from repro.engine import Engine
+        solo = Engine(g).bfs(cand[:3])
+        np.testing.assert_array_equal(r1.parent, solo.parent)
+        np.testing.assert_array_equal(r1.level, solo.level)
+        np.testing.assert_array_equal(r1.edges_traversed,
+                                      solo.edges_traversed)
+    finally:
+        server.close()
