@@ -14,6 +14,15 @@ Measures the `BFSServer` under synthetic concurrent load:
 * **overload** — a deliberately tiny server (depth 2, in-flight cap 2,
   workers not started): counts `ServerOverloaded` rejections by reason,
   then starts the workers and proves every *admitted* query completes.
+* **cancellation** — `repro.launch.bfs_serve.run_cancel_probe`: submit N
+  long-path traversals, cancel every other one after its first level, and
+  prove the survivors' wall time matches a no-cancellation baseline
+  (cancelled queries free the session worker within one level), every
+  admission slot frees, and the worker survives.
+* **driver overhead** — one streamed stepper query per session records the
+  unified `LevelDriver` loop's host-side cost per level
+  (`timings.driver_overhead_s`), so the one-loop refactor's overhead is
+  visible next to the per-level device times.
 
 Usage: python benchmarks/bench_serve.py [--scale 12] [--smoke]
 """
@@ -75,7 +84,8 @@ def main(argv=None):
 
     import jax
     from repro.engine.engine import _bucket_batch
-    from repro.launch.bfs_serve import build_server, run_load
+    from repro.launch.bfs_serve import (build_server, run_cancel_probe,
+                                        run_load)
 
     t0 = time.time()
     # max_batch_roots == bucket(batch): every coalesced dispatch lands in
@@ -90,9 +100,31 @@ def main(argv=None):
                         queries_per_client=args.queries, batch=args.batch,
                         seed=args.seed, stream_every=args.stream_every,
                         validate=1)
+        # Per-level driver overhead: one streamed stepper query per session
+        # exposes `timings.driver_overhead_s` — the unified level loop's
+        # host-side cost outside the timed device work.
+        driver = {}
+        for name, g in sorted(graphs.items()):
+            root = int(np.argmax(g.degrees))
+            res = server.submit(name, root, stream=True,
+                                client="driver-probe").result(timeout=600)
+            t = res.timings[0]
+            n_levels = max(len(res.per_level_stats[0]), 1)
+            driver[name] = dict(
+                levels=n_levels,
+                overhead_us_per_level=t["driver_overhead_s"] / n_levels * 1e6,
+                level_us_mean=sum(r["seconds"]
+                                  for r in res.per_level_stats[0])
+                / n_levels * 1e6,
+                init_ms=t["init_s"] * 1e3, agg_ms=t["agg_s"] * 1e3)
+        # Snapshot load-phase stats/traces before the cancel probe adds its
+        # own session (the probe's streamed queries never coalesce and would
+        # skew the coalescing ratio).
         stats = server.stats()
         traces = {name: s.total_traces
                   for name, s in server.sessions.items()}
+        cancel = run_cancel_probe(server,
+                                  levels=512 if args.smoke else 2048)
     finally:
         server.close()
     probe = _overload_probe(graphs[sorted(graphs)[0]])
@@ -118,6 +150,8 @@ def main(argv=None):
             per_session_traces=traces,
             note="fused+stepper plans per session after full load; "
                  "independent of query count == zero per-query recompiles"),
+        driver=driver,
+        cancellation=cancel,
         overload=probe,
         smoke=args.smoke,
         wall_s=time.time() - t0,
@@ -136,12 +170,30 @@ def main(argv=None):
           f"traces {traces}")
     print(f"# overload probe: {probe['rejections']} rejected, "
           f"{probe['completed']}/{probe['admitted']} admitted completed")
+    print(f"# cancel probe: {cancel['cancelled']} cancelled / "
+          f"{cancel['served']} served, wall ratio "
+          f"{cancel['wall_ratio']:.2f} (1.0 = cancellation is free), "
+          f"partial levels {cancel['cancelled_partial_levels']} "
+          f"of {cancel['levels']}")
+    for name, d in sorted(driver.items()):
+        print(f"# driver overhead {name}: "
+              f"{d['overhead_us_per_level']:.0f} us/level over "
+              f"{d['levels']} levels (device level mean "
+              f"{d['level_us_mean']:.0f} us)")
     print(f"# wrote {args.out}")
 
     ok = (probe["completed"] == probe["admitted"]
           and probe["rejections"]["queue_full"] > 0
           and probe["rejections"]["client_inflight"] > 0
-          and load["teps_sustained"] > 0)
+          and load["teps_sustained"] > 0
+          # cancellation acceptance: every cancel landed, every slot freed,
+          # the worker survived, and the cancelled half cost ~no service
+          # time (generous 2x bound: CI timing noise, not a perf gate)
+          and cancel["cancelled"] == cancel["queries"] // 2
+          and cancel["served"] == cancel["queries"] - cancel["cancelled"]
+          and cancel["inflight_after"] == 0
+          and cancel["worker_alive"]
+          and cancel["wall_ratio"] < 2.0)
     if not ok:
         print("# ERROR: serving acceptance conditions not met",
               file=sys.stderr)

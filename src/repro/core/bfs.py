@@ -422,34 +422,18 @@ def bfs(g: Graph | DeviceGraph, root: int,
 
 def bfs_instrumented(g: Graph | DeviceGraph, root: int,
                      cfg: BFSConfig = BFSConfig()):
-    """Level-by-level driver (python loop over the jitted step).
+    """Level-by-level search over the shared `LevelDriver`.
 
-    Returns (parent, level, per_level_stats) where stats is a list of dicts
-    with keys: level, direction, frontier_size, frontier_edges, seconds.
-    Used by the Fig-1/Fig-4 benchmarks.
+    Returns (parent, level, per_level_stats) where stats rows follow the
+    driver schema (level, direction, frontier_size, frontier_edges,
+    seconds, compute_s, exchange_s). Used by the Fig-1/Fig-4 benchmarks.
+    The loop itself lives in `repro.engine.level_loop` (imported lazily:
+    `repro.engine` imports this module at package init).
     """
-    import time
+    from repro.engine.level_loop import LevelDriver, SingleStepBackend
     dg = g if isinstance(g, DeviceGraph) else DeviceGraph.from_graph(g)
-    step = make_level_step(dg, cfg)
-    st = jax.jit(lambda r: init_state(dg, r))(jnp.int32(root))
-    jax.block_until_ready(st.frontier)
-    stats = []
-    # One host sync per level: loop condition, stats row, and termination
-    # guard share a single device_get (separate `int(st.cur_level)` /
-    # `bool(st.bu_mode)` reads would each round-trip to the device).
-    nf, mf = (int(x) for x in jax.device_get((st.nf, st.mf)))
-    while nf > 0:
-        t0 = time.perf_counter()
-        st = step(st)
-        jax.block_until_ready(st.frontier)
-        dt = time.perf_counter() - t0
-        nf2, mf2, cur, bu = jax.device_get(
-            (st.nf, st.mf, st.cur_level, st.bu_mode))
-        stats.append(dict(level=int(cur), seconds=dt,
-                          direction="bu" if bool(bu) else "td",
-                          frontier_size=nf, frontier_edges=mf))
-        if int(cur) > dg.num_vertices:
-            raise RuntimeError("BFS failed to terminate")
-        nf, mf = int(nf2), int(mf2)
-    parent, level = finalize(st)
+    backend = SingleStepBackend(
+        jax.jit(lambda r: init_state(dg, r)), make_level_step(dg, cfg),
+        dg.num_vertices)
+    parent, level, stats, _timings = LevelDriver(backend).run(int(root))
     return parent, level, stats

@@ -553,40 +553,16 @@ def make_hybrid_stepper(pg: PartitionedGraph, hcfg: HybridConfig,
 def hybrid_bfs_instrumented(pg: PartitionedGraph, root_orig: int,
                             hcfg: HybridConfig = HybridConfig(),
                             mesh: Optional[Mesh] = None):
-    """Python-level BSP loop with per-level (compute, exchange) timing.
+    """Per-level BSP search over the shared `LevelDriver`.
 
-    Returns (parent_orig, level_orig, stats) where stats rows carry: level,
-    direction, frontier_size, compute_s, exchange_s.
+    Returns (parent_orig, level_orig, stats) where stats rows follow the
+    driver schema — the (compute_s, exchange_s) split times real
+    collectives per round. The loop itself lives in
+    `repro.engine.level_loop` (imported lazily: `repro.engine` imports this
+    module at package init).
     """
-    import time as _time
+    from repro.engine.level_loop import BSPStepBackend, LevelDriver
 
-    init_fn, compute_fn, exchange_fn, finalize_fn, root_mapper = \
-        make_hybrid_stepper(pg, hcfg, mesh)
-    state = init_fn(root_mapper(root_orig))
-    jax.block_until_ready(state["frontier"])
-    stats = []
-    # One host sync per level: loop condition, stats row (including the
-    # direction flag), and termination guard share a single device_get (the
-    # old loop's `int(state["cur"])` / `bool(bu)` reads each round-tripped,
-    # on top of reducing the V-byte frontier twice per round pre-PR2).
-    nf, mf = (int(x) for x in jax.device_get((state["nf"], state["mf"])))
-    while nf > 0:
-        t0 = _time.perf_counter()
-        nxt_stack, pc_stack, bu, bu_steps = compute_fn(state)
-        jax.block_until_ready(nxt_stack)
-        t1 = _time.perf_counter()
-        state = exchange_fn(state, nxt_stack, pc_stack, bu, bu_steps)
-        jax.block_until_ready(state["frontier"])
-        t2 = _time.perf_counter()
-        nf2, mf2, cur, bu_host = jax.device_get(
-            (state["nf"], state["mf"], state["cur"], bu))
-        stats.append(dict(level=int(cur),
-                          direction="bu" if bool(bu_host) else "td",
-                          frontier_size=nf, frontier_edges=mf,
-                          compute_s=t1 - t0, exchange_s=t2 - t1))
-        if int(cur) > pg.plan.v_pad:
-            raise RuntimeError("no termination")
-        nf, mf = int(nf2), int(mf2)
-    parent_new, level_new = finalize_fn(state)
-    parent, level = finalize_hybrid(pg.plan, parent_new, level_new)
+    backend = BSPStepBackend(make_hybrid_stepper(pg, hcfg, mesh), pg.plan)
+    parent, level, stats, _timings = LevelDriver(backend).run(int(root_orig))
     return parent, level, stats

@@ -38,6 +38,9 @@ from repro.core.bfs import BFSConfig
 from repro.core.graph import Graph
 from repro.core.hybrid_bfs import (HybridConfig, finalize_hybrid,
                                    make_hybrid_search, make_hybrid_stepper)
+from repro.engine.level_loop import (BSPStepBackend, LevelDriver,
+                                     QueryCancelled, QueryControl,
+                                     QueryDeadlineExceeded, SingleStepBackend)
 from repro.engine.result import TraversalResult, edges_traversed_from_levels
 from repro.engine.session import GraphSession
 
@@ -170,8 +173,8 @@ class Engine:
     def bfs(self, roots: RootsLike, cfg=None, *, backend: str = "auto",
             n_parts: Optional[int] = None, strategy: Optional[str] = None,
             hub_edge_fraction: Optional[float] = None, batched: bool = True,
-            validate: bool = False,
-            on_level: Optional[Callable] = None) -> TraversalResult:
+            validate: bool = False, on_level: Optional[Callable] = None,
+            control: Optional[QueryControl] = None) -> TraversalResult:
         """Run BFS from one root or a batch of roots.
 
         Args:
@@ -192,6 +195,12 @@ class Engine:
             `on_level(batch_index, stats_row)` the moment each level's stats
             land on the host, before the search finishes (the server's
             result-streaming hook).
+          control: cooperative `QueryControl` (cancel event + absolute
+            deadline). Checked before dispatch on every backend, between
+            roots on the per-root paths, and once per level on the stepper
+            backend (the `LevelDriver` hook); aborts raise the typed
+            `QueryCancelled` / `QueryDeadlineExceeded` carrying partial
+            per-level stats.
 
         Returns a `TraversalResult`; compile time is never inside the timed
         region (the first query per (config, backend, batch shape) warms the
@@ -200,17 +209,20 @@ class Engine:
         qp = self.plan(cfg, backend=backend, n_parts=n_parts,
                        strategy=strategy, hub_edge_fraction=hub_edge_fraction)
         return self.bfs_plan(roots, qp, batched=batched, validate=validate,
-                             on_level=on_level)
+                             on_level=on_level, control=control)
 
     def bfs_plan(self, roots: RootsLike, plan: QueryPlan, *,
                  batched: bool = True, validate: bool = False,
-                 on_level: Optional[Callable] = None) -> TraversalResult:
+                 on_level: Optional[Callable] = None,
+                 control: Optional[QueryControl] = None) -> TraversalResult:
         """Run a query whose knobs were already resolved by `plan()`."""
         backend, n_parts = plan.backend, plan.n_parts
         hcfg = plan.hcfg
         if on_level is not None and backend != "stepper":
             raise ValueError(
                 f"on_level streaming needs backend='stepper', got {backend!r}")
+        if control is not None:
+            control.check()
         roots_arr = self._normalize_roots(roots)
         if roots_arr.size == 0:
             v = self.graph.num_vertices
@@ -224,13 +236,13 @@ class Engine:
                 edges_traversed=np.empty((0,), np.int64))
 
         if backend == "fused":
-            res = self._bfs_fused(roots_arr, hcfg, batched)
+            res = self._bfs_fused(roots_arr, hcfg, batched, control)
         elif backend == "sharded":
             res = self._bfs_sharded(roots_arr, hcfg, n_parts, plan.strategy,
-                                    plan.hub_edge_fraction, batched)
+                                    plan.hub_edge_fraction, batched, control)
         else:
             res = self._bfs_stepper(roots_arr, hcfg, n_parts, plan.strategy,
-                                    plan.hub_edge_fraction, on_level)
+                                    plan.hub_edge_fraction, on_level, control)
         res.edges_traversed = edges_traversed_from_levels(self.graph.degrees,
                                                           res.level)
         if validate:
@@ -259,7 +271,8 @@ class Engine:
 
         return key, self.session.executable(key, build), bucket
 
-    def _bfs_fused(self, roots_arr, hcfg, batched) -> TraversalResult:
+    def _bfs_fused(self, roots_arr, hcfg, batched,
+                   control=None) -> TraversalResult:
         e_und = self.graph.num_undirected_edges
         if batched:
             b = len(roots_arr)
@@ -285,6 +298,8 @@ class Engine:
             key, lambda: fn(jnp.asarray(roots_arr[:1], jnp.int32)).frontier)
         parents, levels, per_root = [], [], []
         for r in roots_arr:
+            if control is not None:
+                control.check()
             t0 = time.perf_counter()
             st = fn(jnp.asarray([r], jnp.int32))
             jax.block_until_ready(st.frontier)
@@ -314,7 +329,7 @@ class Engine:
         return skey, fn, root_mapper, plan
 
     def _bfs_sharded(self, roots_arr, hcfg, n_parts, strategy, hub,
-                     batched) -> TraversalResult:
+                     batched, control=None) -> TraversalResult:
         skey, fn, root_mapper, plan = self._sharded_executable(
             hcfg, n_parts, strategy, hub)
         roots_new = [root_mapper(int(r)) for r in roots_arr]
@@ -331,6 +346,8 @@ class Engine:
         else:
             outs = []
             for rn in roots_new:
+                if control is not None:
+                    control.check()
                 t0 = time.perf_counter()
                 out = fn(jnp.int32(rn))
                 jax.block_until_ready(out[0])
@@ -348,20 +365,42 @@ class Engine:
                                "sharded", n_parts, e_und)
 
     # ------------------------------------------------------- stepper path --
+    #
+    # Both stepper variants are thin adapters now: they build a backend over
+    # session-cached pieces and hand it to the shared `LevelDriver`
+    # (repro.engine.level_loop), which owns the per-level loop, the single
+    # host sync per level, the stats rows, and the cancellation hook.
 
     def _bfs_stepper(self, roots_arr, hcfg, n_parts, strategy, hub,
-                     on_level=None) -> TraversalResult:
-        if n_parts == 1:
-            run_one = self._stepper_single(hcfg.bfs)
-        else:
-            run_one = self._stepper_sharded(hcfg, n_parts, strategy, hub)
+                     on_level=None, control=None) -> TraversalResult:
+        driver = LevelDriver(
+            self._stepper_backend_single(hcfg.bfs) if n_parts == 1
+            else self._stepper_backend_sharded(hcfg, n_parts, strategy, hub))
         wkey = ("stepper_warm", hcfg, n_parts, strategy, hub)
-        self.session.warm(wkey, lambda: run_one(int(roots_arr[0]))[0])
+        # The warm-up is a full traversal too: it honours the control so the
+        # first (cold) query on a plan can still abort per level. An aborted
+        # warm run never marks the key warmed (`GraphSession.warm` only
+        # records success), so the next query warms the plan normally.
+        try:
+            self.session.warm(wkey,
+                              lambda: driver.run(int(roots_arr[0]), None,
+                                                 control)[0])
+        except (QueryCancelled, QueryDeadlineExceeded) as e:
+            e.per_level_stats = [e.per_level_stats]     # per-root convention
+            raise
+        if control is not None:
+            control.check()             # the warm-up may outlive a deadline
         parents, levels, stats_all, timings, per_root = [], [], [], [], []
         for b, r in enumerate(roots_arr):
             cb = (lambda row, _b=b: on_level(_b, row)) if on_level else None
             t0 = time.perf_counter()
-            p, l, stats, extra = run_one(int(r), cb)
+            try:
+                p, l, stats, extra = driver.run(int(r), cb, control)
+            except (QueryCancelled, QueryDeadlineExceeded) as e:
+                # Promote the driver's flat row list to the engine's
+                # per-root convention: completed roots + the aborted one.
+                e.per_level_stats = stats_all + [e.per_level_stats]
+                raise
             per_root.append(time.perf_counter() - t0)
             parents.append(p); levels.append(l)
             stats_all.append(stats)
@@ -374,7 +413,7 @@ class Engine:
                                self.graph.num_undirected_edges,
                                per_level_stats=stats_all, timings=timings)
 
-    def _stepper_single(self, bcfg: BFSConfig):
+    def _stepper_backend_single(self, bcfg: BFSConfig) -> SingleStepBackend:
         dg = self.session.device_graph()
         ell = self.session.ell_tiles() if B.kernels_enabled(bcfg) else None
         step = self.session.cached(("stepper_step", bcfg),
@@ -382,44 +421,10 @@ class Engine:
         init = self.session.cached(
             ("stepper_init",),
             lambda: jax.jit(lambda r: B.init_state(dg, r)))
+        return SingleStepBackend(init, step, dg.num_vertices)
 
-        def run_one(root: int, on_level=None):
-            t0 = time.perf_counter()
-            st = init(jnp.int32(root))
-            jax.block_until_ready(st.frontier)
-            init_s = time.perf_counter() - t0
-            stats = []
-            # One host sync per level, for real: the loop condition, the
-            # stats row, and the termination guard all read from a single
-            # four-scalar device_get. (The old loop's `int(st.cur_level)` /
-            # `bool(st.bu_mode)` reads each issued their own round-trip, so
-            # "one sync per level" was actually four.)
-            nf, mf = (int(x) for x in jax.device_get((st.nf, st.mf)))
-            while nf > 0:
-                t0 = time.perf_counter()
-                st = step(st)
-                jax.block_until_ready(st.frontier)
-                dt = time.perf_counter() - t0
-                nf2, mf2, cur, bu = jax.device_get(
-                    (st.nf, st.mf, st.cur_level, st.bu_mode))
-                row = dict(level=int(cur), seconds=dt,
-                           compute_s=dt, exchange_s=0.0,
-                           direction="bu" if bool(bu) else "td",
-                           frontier_size=nf, frontier_edges=mf)
-                stats.append(row)
-                if on_level:
-                    on_level(row)
-                if int(cur) > dg.num_vertices:
-                    raise RuntimeError("BFS failed to terminate")
-                nf, mf = int(nf2), int(mf2)
-            t0 = time.perf_counter()
-            parent, level = B.finalize(st)
-            agg_s = time.perf_counter() - t0
-            return parent, level, stats, dict(init_s=init_s, agg_s=agg_s)
-
-        return run_one
-
-    def _stepper_sharded(self, hcfg, n_parts, strategy, hub):
+    def _stepper_backend_sharded(self, hcfg, n_parts, strategy,
+                                 hub) -> BSPStepBackend:
         plan, pg = self.session.partitioned(n_parts, strategy, hub)
         ell = (self.session.hybrid_ell(n_parts, strategy, hub)
                if B.kernels_enabled(hcfg.bfs) else None)
@@ -428,47 +433,4 @@ class Engine:
             lambda: make_hybrid_stepper(
                 pg, hcfg, self.session.mesh_for(n_parts, hcfg.axis_name),
                 ell=ell))
-        init_fn, compute_fn, exchange_fn, finalize_fn, root_mapper = pieces
-
-        def run_one(root: int, on_level=None):
-            t0 = time.perf_counter()
-            state = init_fn(root_mapper(root))
-            jax.block_until_ready(state["frontier"])
-            init_s = time.perf_counter() - t0
-            stats = []
-            # One host sync per level: loop condition, stats row (including
-            # the direction flag `bu` compute_fn returned), and termination
-            # guard all come from a single device_get — no separate
-            # `int(state["cur"])` / `bool(bu)` round-trips, and never a
-            # device->host copy of the whole V-byte frontier.
-            nf, mf = (int(x)
-                      for x in jax.device_get((state["nf"], state["mf"])))
-            while nf > 0:
-                t0 = time.perf_counter()
-                nxt, pc, bu, bs = compute_fn(state)
-                jax.block_until_ready(nxt)
-                t1 = time.perf_counter()
-                state = exchange_fn(state, nxt, pc, bu, bs)
-                jax.block_until_ready(state["frontier"])
-                t2 = time.perf_counter()
-                nf2, mf2, cur, bu_host = jax.device_get(
-                    (state["nf"], state["mf"], state["cur"], bu))
-                row = dict(level=int(cur),
-                           seconds=t2 - t0, compute_s=t1 - t0,
-                           exchange_s=t2 - t1,
-                           direction="bu" if bool(bu_host) else "td",
-                           frontier_size=nf, frontier_edges=mf)
-                stats.append(row)
-                if on_level:
-                    on_level(row)
-                if int(cur) > plan.v_pad:
-                    raise RuntimeError("BFS failed to terminate")
-                nf, mf = int(nf2), int(mf2)
-            t0 = time.perf_counter()
-            parent_new, level_new = finalize_fn(state)
-            jax.block_until_ready(parent_new)
-            parent, level = finalize_hybrid(plan, parent_new, level_new)
-            agg_s = time.perf_counter() - t0
-            return parent, level, stats, dict(init_s=init_s, agg_s=agg_s)
-
-        return run_one
+        return BSPStepBackend(pieces, plan)

@@ -1,0 +1,274 @@
+"""The canonical per-level BFS loop: one driver for every host-synced search.
+
+The paper's direction-optimized BFS is a level-synchronous BSP loop —
+compute, exchange, decide — and both Buluç & Madduri (arXiv:1104.4518) and
+Pan et al. (arXiv:1803.03922) structure their distributed BFS around exactly
+one such driver. This repo used to run it in four hand-duplicated copies
+(engine `_stepper_single` / `_stepper_sharded`, core `bfs_instrumented` /
+`hybrid_bfs_instrumented`), which drifted: PR 2 and PR 3 each patched the
+same host-sync bug four times. `LevelDriver` is the single copy; the four
+call sites are thin adapters over two backends.
+
+The driver owns everything the four loops duplicated:
+
+* init + the per-level step structure (compute, then exchange when the
+  backend splits them — the BSP timing breakdown of Fig. 3);
+* **one host sync per level**: the loop condition, the stats row, the
+  direction flag, and the termination bound all read from a single
+  four-scalar `jax.device_get` (this is the only such site in the repo);
+* the stats-row schema (level, direction, frontier_size, frontier_edges,
+  seconds, compute_s, exchange_s) and the `on_level` streaming hook;
+* the termination bound, checked *before* stepping: no BFS level can exceed
+  `depth_bound` = the TOTAL vertex count minus one (levels 0..V-1 all
+  non-empty pigeonholes every vertex into the visited set), so a frontier
+  sitting at that level is final — every neighbour is provably visited —
+  and the loop stops without the old wasted extra step (the two
+  pre-refactor guards disagreed — `cur > num_vertices` single vs
+  `cur > v_pad` sharded — and only fired *after* stepping);
+* cooperative cancellation: a `QueryControl` is checked once per level — the
+  single safe point between BSP rounds — and aborts with a typed
+  `QueryCancelled` / `QueryDeadlineExceeded` carrying the partial per-level
+  stats, so a stuck Scale-29-sized traversal cannot pin a worker forever.
+
+Backends only describe *what* runs per level, never the loop itself:
+
+    class ...Backend:            # duck-typed; see SingleStepBackend
+        depth_bound: int         # TOTAL vertex count - 1 (see above; a
+                                 # smaller bound breaks the pre-step stop)
+        has_exchange: bool       # True -> time compute/exchange separately
+        def init(root) -> state
+        def compute(state) -> work
+        def exchange(state, work) -> state      # identity when fused in
+        def scalars(state) -> (nf, mf, cur, bu) # device scalars, ONE get
+        def finalize(state) -> (parent, level)  # host numpy
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import bfs as B
+from repro.core.hybrid_bfs import finalize_hybrid
+
+
+# ------------------------------------------------------------ cancellation --
+
+
+class QueryCancelled(RuntimeError):
+    """Query aborted by `QueryControl.cancel()` (between two BFS levels).
+
+    `per_level_stats` holds the stats rows completed before the abort —
+    a flat row list when raised by the driver, a per-root list of row lists
+    once the engine re-raises it for a multi-root query.
+    """
+
+    def __init__(self, msg: str = "query cancelled", per_level_stats=None):
+        super().__init__(msg)
+        self.per_level_stats = per_level_stats if per_level_stats is not None \
+            else []
+
+
+class QueryDeadlineExceeded(RuntimeError):
+    """Query aborted because its `QueryControl.deadline` passed.
+
+    Carries `per_level_stats` exactly like `QueryCancelled`.
+    """
+
+    def __init__(self, msg: str = "query deadline exceeded",
+                 per_level_stats=None):
+        super().__init__(msg)
+        self.per_level_stats = per_level_stats if per_level_stats is not None \
+            else []
+
+
+class QueryControl:
+    """Cancel event + absolute deadline for one query (thread-safe).
+
+    The driver calls `check()` once per level — between BSP rounds, the one
+    point where aborting cannot corrupt device state. `deadline` is an
+    absolute `time.monotonic()` timestamp (`with_timeout` converts relative
+    seconds); `cancel()` may be called from any thread.
+    """
+
+    def __init__(self, deadline: Optional[float] = None):
+        self.deadline = deadline
+        self._cancelled = threading.Event()
+
+    @classmethod
+    def with_timeout(cls, seconds: Optional[float]) -> "QueryControl":
+        """Control whose deadline is `seconds` from now (None = no deadline)."""
+        return cls(None if seconds is None else time.monotonic() + seconds)
+
+    def cancel(self) -> None:
+        self._cancelled.set()
+
+    @property
+    def cancelled(self) -> bool:
+        return self._cancelled.is_set()
+
+    @property
+    def expired(self) -> bool:
+        return self.deadline is not None and time.monotonic() >= self.deadline
+
+    def poll(self) -> Optional[RuntimeError]:
+        """The pending abort, if any (None = keep running). Never raises."""
+        if self._cancelled.is_set():
+            return QueryCancelled()
+        if self.expired:
+            return QueryDeadlineExceeded(
+                f"deadline passed {time.monotonic() - self.deadline:.3f}s ago")
+        return None
+
+    def check(self) -> None:
+        """Raise the typed abort error if cancelled or past the deadline."""
+        err = self.poll()
+        if err is not None:
+            raise err
+
+
+# ----------------------------------------------------------------- backends --
+
+
+class SingleStepBackend:
+    """Single-partition backend: one jitted `state -> state` step per level.
+
+    Wraps `repro.core.bfs`'s `init_state`/`make_level_step` products (or any
+    functions with the same shapes). Compute and exchange are fused in the
+    one step, so the driver reports `exchange_s == 0.0`.
+    """
+
+    has_exchange = False
+
+    def __init__(self, init_fn: Callable, step_fn: Callable,
+                 num_vertices: int):
+        self._init = init_fn
+        self._step = step_fn
+        self.depth_bound = max(num_vertices - 1, 0)
+
+    def init(self, root: int):
+        return self._init(jnp.int32(root))
+
+    def compute(self, state):
+        return self._step(state)
+
+    def exchange(self, state, work):
+        return work                     # the step already merged the frontier
+
+    def scalars(self, state):
+        return (state.nf, state.mf, state.cur_level, state.bu_mode)
+
+    def finalize(self, state):
+        return B.finalize(state)
+
+
+class BSPStepBackend:
+    """Partitioned BSP backend over `make_hybrid_stepper` pieces.
+
+    `compute` runs every partition's local TD/BU work (no communication);
+    `exchange` is the per-round push/pull merge + state update — the driver
+    times them separately, reproducing the paper's computation-vs-
+    communication breakdown. Finalization maps padded new-id results back to
+    original ids through the partition plan.
+    """
+
+    has_exchange = True
+
+    def __init__(self, pieces, plan):
+        init_fn, compute_fn, exchange_fn, finalize_fn, root_mapper = pieces
+        self._init = init_fn
+        self._compute = compute_fn
+        self._exchange = exchange_fn
+        self._finalize = finalize_fn
+        self._root_mapper = root_mapper
+        self._plan = plan
+        self.depth_bound = max(plan.v_orig - 1, 0)
+
+    def init(self, root: int):
+        return self._init(self._root_mapper(int(root)))
+
+    def compute(self, state):
+        return self._compute(state)
+
+    def exchange(self, state, work):
+        return self._exchange(state, *work)
+
+    def scalars(self, state):
+        return (state["nf"], state["mf"], state["cur"], state["bu"])
+
+    def finalize(self, state):
+        parent_new, level_new = self._finalize(state)
+        jax.block_until_ready(parent_new)
+        return finalize_hybrid(self._plan, parent_new, level_new)
+
+
+# ------------------------------------------------------------------- driver --
+
+
+class LevelDriver:
+    """Run a whole search as host-synced per-level steps over a backend."""
+
+    def __init__(self, backend):
+        self.backend = backend
+
+    def _sync(self, state):
+        """THE per-level host sync — the repo's single `device_get` site.
+
+        Loop condition, stats row, direction flag, and the depth bound all
+        come from this one four-scalar read; separate `int()`/`bool()`
+        reads would each issue their own device round-trip.
+        """
+        nf, mf, cur, bu = jax.device_get(self.backend.scalars(state))
+        return int(nf), int(mf), int(cur), bool(bu)
+
+    def run(self, root: int, on_level: Optional[Callable] = None,
+            control: Optional[QueryControl] = None):
+        """One root -> (parent, level, per_level_stats, timings).
+
+        `on_level(row)` fires the moment each level's stats land on the
+        host (the server's streaming hook). `control` is checked once per
+        level before stepping; on abort the typed error carries the rows
+        completed so far. `timings` holds the out-of-loop phases (init_s,
+        agg_s) plus `driver_overhead_s` — wall time the host loop spent
+        outside the timed device work, the refactor's cost ledger.
+        """
+        b = self.backend
+        t_run = time.perf_counter()
+        state = b.init(root)
+        jax.block_until_ready(state)
+        init_s = time.perf_counter() - t_run
+        stats: list = []
+        nf, mf, cur, bu = self._sync(state)
+        while nf > 0 and cur < b.depth_bound:
+            if control is not None:
+                try:
+                    control.check()
+                except (QueryCancelled, QueryDeadlineExceeded) as e:
+                    e.per_level_stats = stats
+                    raise
+            t0 = time.perf_counter()
+            work = b.compute(state)
+            jax.block_until_ready(work)
+            t1 = time.perf_counter()
+            state = b.exchange(state, work)
+            jax.block_until_ready(state)
+            t2 = time.perf_counter()
+            nf2, mf2, cur, bu = self._sync(state)
+            row = dict(level=cur, seconds=t2 - t0, compute_s=t1 - t0,
+                       exchange_s=(t2 - t1) if b.has_exchange else 0.0,
+                       direction="bu" if bu else "td",
+                       frontier_size=nf, frontier_edges=mf)
+            stats.append(row)
+            if on_level:
+                on_level(row)
+            nf, mf = nf2, mf2
+        t0 = time.perf_counter()
+        parent, level = b.finalize(state)
+        agg_s = time.perf_counter() - t0
+        overhead = (time.perf_counter() - t_run) - init_s - agg_s \
+            - sum(r["seconds"] for r in stats)
+        return parent, level, stats, dict(init_s=init_s, agg_s=agg_s,
+                                          driver_overhead_s=max(overhead, 0.0))

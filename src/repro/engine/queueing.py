@@ -143,6 +143,23 @@ class BoundedPriorityQueue:
                 total_w += w
             return batch
 
+    def remove(self, pred: Callable[[Any], bool]) -> list:
+        """Remove (and return, in priority order) every item matching `pred`.
+
+        The cancellation path: a cancelled query still sitting in the queue
+        is withdrawn here, freeing its depth slot immediately instead of
+        waiting for a worker to pop and discard it. Items already popped are
+        simply not found — the caller falls back to in-flight cancellation.
+        """
+        with self._lock:
+            hit, keep = [], []
+            for entry in self._heap:
+                (hit if pred(entry[2]) else keep).append(entry)
+            if hit:
+                self._heap = keep
+                heapq.heapify(self._heap)
+            return [entry[2] for entry in sorted(hit)]
+
     def close(self) -> list:
         """Close the queue; returns (and removes) any undelivered items."""
         with self._lock:

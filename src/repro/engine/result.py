@@ -58,7 +58,8 @@ class TraversalResult:
         root (level, direction, frontier_size, frontier_edges, compute_s,
         exchange_s, seconds).
       timings: stepper backend only — one dict per root with out-of-loop
-        phase times (init_s, agg_s).
+        phase times (init_s, agg_s, driver_overhead_s — the level loop's
+        host-side cost outside the timed device work).
       edges_traversed: int64[B] undirected edges actually traversed per root
         (Graph500 accounting; the engine fills it from the reached set).
     """
@@ -97,10 +98,19 @@ class TraversalResult:
 
     @property
     def teps_hmean(self) -> float:
-        """Harmonic-mean per-root TEPS (the Graph500 reporting statistic)."""
-        if self.batch_size == 0:
+        """Harmonic-mean per-root TEPS (the Graph500 reporting statistic).
+
+        Zero-TEPS roots — isolated or edgeless roots that traversed no
+        edges — are excluded: the harmonic mean over any set containing a
+        zero is identically zero (and `statistics.harmonic_mean` raised on
+        some interpreter versions), which erases every other root's
+        throughput. A batch where *no* root traversed anything reports 0.0.
+        """
+        t = self.teps_per_root
+        pos = t[t > 0.0]
+        if pos.size == 0:
             return 0.0
-        return statistics.harmonic_mean(self.teps_per_root.tolist())
+        return float(statistics.harmonic_mean(pos.tolist()))
 
     @property
     def teps_global(self) -> float:

@@ -42,6 +42,8 @@ import numpy as np
 
 from repro.core.graph import Graph
 from repro.engine.engine import Engine, QueryPlan
+from repro.engine.level_loop import (QueryCancelled, QueryControl,
+                                     QueryDeadlineExceeded)
 from repro.engine.queueing import (BoundedPriorityQueue, ClientCaps,
                                    QueueClosed, QueueFull, ServerOverloaded)
 from repro.engine.result import TraversalResult
@@ -63,10 +65,19 @@ class QueryHandle:
     them — each row is the stepper's dict (level, direction, frontier_size,
     frontier_edges, seconds, ...) plus the `root` it belongs to — and ends
     when the search finishes; `result()` is available afterwards.
+
+    `cancel()` aborts the query: still-queued queries are withdrawn
+    immediately (freeing their queue-depth and admission slots); an
+    in-flight stepper/streamed query aborts at its next level boundary.
+    Either way `result()` raises `QueryCancelled`, and the per-level stats
+    completed before the abort remain on `partial_stats` (deadline expiry
+    behaves the same with `QueryDeadlineExceeded`). Cancelling a finished
+    query is a no-op.
     """
 
     def __init__(self, qid: int, session: str, roots: np.ndarray,
-                 plan: QueryPlan, client: Any, priority: int, stream: bool):
+                 plan: QueryPlan, client: Any, priority: int, stream: bool,
+                 control: Optional[QueryControl] = None):
         self.qid = qid
         self.session = session
         self.roots = roots
@@ -74,16 +85,26 @@ class QueryHandle:
         self.client = client
         self.priority = priority
         self.is_stream = stream
+        self.control = control if control is not None else QueryControl()
         self.submitted_at = time.perf_counter()
         self.latency_s: Optional[float] = None
+        self.partial_stats: Optional[list] = None
         self._done = threading.Event()
         self._result: Optional[TraversalResult] = None
         self._error: Optional[BaseException] = None
+        self._cancel_cb: Optional[callable] = None
         self._events: Optional[_pyqueue.Queue] = (
             _pyqueue.Queue() if stream else None)
 
     def done(self) -> bool:
         return self._done.is_set()
+
+    def cancel(self) -> None:
+        """Request cancellation (thread-safe, idempotent, best-effort)."""
+        self.control.cancel()
+        cb = self._cancel_cb
+        if cb is not None:
+            cb()
 
     def result(self, timeout: Optional[float] = None) -> TraversalResult:
         if not self._done.wait(timeout):
@@ -134,15 +155,18 @@ class QueryHandle:
 class _QueryItem:
     """Internal queue entry: the handle plus everything the worker needs."""
 
-    __slots__ = ("handle", "roots", "plan", "stream", "client", "batch_key")
+    __slots__ = ("handle", "roots", "plan", "stream", "client", "batch_key",
+                 "control")
 
     def __init__(self, handle: QueryHandle, roots: np.ndarray,
-                 plan: QueryPlan, stream: bool, client: Any):
+                 plan: QueryPlan, stream: bool, client: Any,
+                 control: QueryControl):
         self.handle = handle
         self.roots = roots
         self.plan = plan
         self.stream = stream
         self.client = client
+        self.control = control
         # Streamed queries never coalesce (each runs its own stepper loop
         # with its own callback), so their key is unique by identity.
         self.batch_key = ("stream", id(handle)) if stream else ("batch", plan)
@@ -205,6 +229,7 @@ class BFSServer:
             with self._stats_lock:
                 self._counters[name] = dict(served=0, rejected=0, batches=0,
                                             roots=0, edges_traversed=0,
+                                            cancelled=0, expired=0,
                                             busy_s=0.0)
             if self._started:
                 self._spawn_worker(name)
@@ -245,8 +270,13 @@ class BFSServer:
         """Stop serving: fail queued-but-unstarted queries, join workers.
 
         In-flight dispatches finish; undelivered queue entries get their
-        handles failed with `ServerClosed`.
+        handles failed with `ServerClosed`. `timeout` bounds the WHOLE
+        shutdown with one shared monotonic deadline — joining each of N
+        workers with the full timeout would make worst-case shutdown
+        N x timeout (the same stolen-wakeup pattern
+        `BoundedPriorityQueue.get_batch` guards against).
         """
+        deadline = None if timeout is None else time.monotonic() + timeout
         with self._state_lock:
             if self._closed:
                 return
@@ -259,7 +289,9 @@ class BFSServer:
                     ServerClosed("server closed before the query ran"))
                 self._caps.release(item.client)
         for t in threads:
-            t.join(timeout)
+            remaining = (None if deadline is None
+                         else max(0.0, deadline - time.monotonic()))
+            t.join(remaining)
 
     def __enter__(self) -> "BFSServer":
         return self
@@ -273,7 +305,8 @@ class BFSServer:
                n_parts: Optional[int] = None, strategy: Optional[str] = None,
                hub_edge_fraction: Optional[float] = None,
                client: Any = "anonymous", priority: int = 0,
-               stream: bool = False) -> QueryHandle:
+               stream: bool = False,
+               deadline: Optional[float] = None) -> QueryHandle:
         """Enqueue a traversal query; never blocks on load.
 
         Invalid input (unknown session, bad roots/backend) raises
@@ -283,6 +316,13 @@ class BFSServer:
         `priority`: lower runs first; FIFO within a priority class.
         `stream=True` resolves to the stepper backend and makes
         `handle.stream()` yield per-level stats as levels complete.
+        `deadline`: seconds from now (converted to one absolute monotonic
+        deadline in the query's `QueryControl`). An expired query is
+        rejected at dispatch time — without dispatching, so it cannot
+        poison the plan cache — and aborted between levels once running on
+        the stepper backend; either way `result()` raises
+        `QueryDeadlineExceeded`. `handle.cancel()` uses the same path with
+        `QueryCancelled`.
         """
         if self._closed:
             raise ServerClosed("server is closed")
@@ -293,6 +333,8 @@ class BFSServer:
             elif backend != "stepper":
                 raise ValueError(
                     f"stream=True runs on the stepper backend, got {backend!r}")
+        if deadline is not None and deadline < 0:
+            raise ValueError(f"deadline must be >= 0 seconds, got {deadline}")
         plan = eng.plan(cfg, backend=backend, n_parts=n_parts,
                         strategy=strategy,
                         hub_edge_fraction=hub_edge_fraction)
@@ -302,9 +344,10 @@ class BFSServer:
         with self._state_lock:
             self._qid += 1
             qid = self._qid
+        control = QueryControl.with_timeout(deadline)
         handle = QueryHandle(qid, session, roots_arr, plan, client, priority,
-                             stream)
-        item = _QueryItem(handle, roots_arr, plan, stream, client)
+                             stream, control)
+        item = _QueryItem(handle, roots_arr, plan, stream, client, control)
         try:
             self._caps.acquire(client)
         except ServerOverloaded:
@@ -319,7 +362,25 @@ class BFSServer:
         except QueueClosed:
             self._caps.release(client)
             raise ServerClosed("server is closed") from None
+        handle._cancel_cb = lambda: self._withdraw_cancelled(session, item)
         return handle
+
+    def _withdraw_cancelled(self, session: str, item: _QueryItem) -> None:
+        """Pull a cancelled query out of its queue, if it is still there.
+
+        Frees the queue-depth and admission slots immediately instead of
+        waiting for a worker to pop the dead item. Losing the race (the
+        worker already holds it) is fine: the control's cancel flag aborts
+        it pre-dispatch or at the next level boundary, and the worker does
+        the releasing — exactly one path ever fails the handle.
+        """
+        q = self._queues.get(session)
+        if q is None:
+            return
+        for it in q.remove(lambda queued: queued is item):
+            self._caps.release(it.client)
+            self._count(session, cancelled=1)
+            it.handle._fail(QueryCancelled("query cancelled while queued"))
 
     # -------------------------------------------------------------- worker --
 
@@ -338,14 +399,37 @@ class BFSServer:
                 return
             self._execute(name, eng, batch)
 
+    def _abort(self, name: str, item: _QueryItem, err: BaseException) -> None:
+        """Fail one query with a typed abort, preserving partial stats."""
+        self._caps.release(item.client)
+        item.handle.partial_stats = getattr(err, "per_level_stats", None)
+        self._count(name, cancelled=int(isinstance(err, QueryCancelled)),
+                    expired=int(isinstance(err, QueryDeadlineExceeded)))
+        item.handle._fail(err)
+
     def _execute(self, name: str, eng: Engine, batch: list) -> None:
+        # Dispatch gate: cancelled / deadline-expired queries are failed
+        # here, before any device work — an expired query never touches the
+        # engine, so it cannot trace, warm, or otherwise poison the plan
+        # cache. Per-level aborts (below) need the backend's cooperation and
+        # exist on the stepper/streamed path.
+        live = []
+        for it in batch:
+            err = it.control.poll()
+            if err is not None:
+                self._abort(name, it, err)
+            else:
+                live.append(it)
+        if not live:
+            return
+        batch = live
         t0 = time.perf_counter()
         try:
             first = batch[0]
             if first.stream:
                 h = first.handle
                 res = eng.bfs_plan(
-                    first.roots, first.plan,
+                    first.roots, first.plan, control=first.control,
                     on_level=lambda b, row, _r=first.roots: h._push(
                         dict(row, root=int(_r[b]))))
                 results = [res]
@@ -353,10 +437,19 @@ class BFSServer:
                 # Micro-batch: one fused dispatch for every coalesced query
                 # (the engine pads the merged batch to its pow2 bucket, so
                 # ragged coalesced sizes share one executable), split back
-                # per query below.
+                # per query below. A solo query keeps its control (per-root
+                # and per-level abort points); a coalesced dispatch is one
+                # shared executable run, so its members are only cancellable
+                # at the dispatch gate above.
                 merged = eng.bfs_plan(
-                    np.concatenate([it.roots for it in batch]), first.plan)
+                    np.concatenate([it.roots for it in batch]), first.plan,
+                    control=batch[0].control if len(batch) == 1 else None)
                 results = merged.split([len(it.roots) for it in batch])
+        except (QueryCancelled, QueryDeadlineExceeded) as e:
+            for it in batch:
+                self._abort(name, it, e)
+            self._count(name, busy_s=time.perf_counter() - t0)
+            return
         except Exception as e:  # noqa: BLE001 — every failure reaches clients
             for it in batch:
                 self._caps.release(it.client)

@@ -18,7 +18,7 @@ import time
 
 import numpy as np
 
-from repro.engine import BFSServer, ServerOverloaded
+from repro.engine import BFSServer, QueryCancelled, ServerOverloaded
 
 
 def _root_candidates(g) -> np.ndarray:
@@ -137,6 +137,73 @@ def run_load(server: BFSServer, graphs: dict, *, clients: int = 8,
     )
 
 
+def run_cancel_probe(server: BFSServer, *, levels: int = 2048,
+                     queries: int = 6, client: str = "cancel-probe",
+                     timeout: float = 600) -> dict:
+    """Prove cancellation frees capacity: cancelled queries must cost ~zero.
+
+    Registers a dedicated long-path session (every traversal is
+    `levels` level-synchronous rounds, so an uncancelled query is
+    expensive), measures a no-cancellation baseline of `queries // 2` full
+    traversals, then submits `queries` and cancels every other one right
+    after its first streamed level. The survivors' wall time should match
+    the baseline (`wall_ratio` ~ 1: cancelled queries release the worker
+    within one level instead of serving ~`levels` more), every admission
+    slot must free, and a follow-up query must still be served (no worker
+    leak).
+    """
+    from repro.core import graph as G
+    name = "__cancel_probe__"
+    path = G.from_edges(np.arange(levels), np.arange(1, levels + 1),
+                        levels + 1)
+    server.register(name, path)
+    # Warm-up pays the stepper compile outside both measured windows.
+    server.submit(name, 0, stream=True, client=client).result(timeout=timeout)
+
+    n_base = max(queries // 2, 1)
+    t0 = time.perf_counter()
+    base = [server.submit(name, 0, stream=True, client=client)
+            for _ in range(n_base)]
+    for h in base:
+        h.result(timeout=timeout)
+    baseline_wall = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    handles = [server.submit(name, 0, stream=True, client=client)
+               for _ in range(queries)]
+    for i, h in enumerate(handles):
+        if i % 2:
+            # Wait for the query's first level (it is provably in flight,
+            # not still queued), then cancel: it must abort within a level.
+            next(h.stream(timeout=timeout))
+            h.cancel()
+    served = cancelled = 0
+    partial_levels = []
+    for h in handles:
+        try:
+            h.result(timeout=timeout)
+            served += 1
+        except QueryCancelled:
+            cancelled += 1
+            partial_levels.append(
+                len(h.partial_stats[0]) if h.partial_stats else 0)
+    probe_wall = time.perf_counter() - t0
+
+    follow_up = server.submit(name, levels, client=client)
+    follow_up_ok = follow_up.result(timeout=timeout) is not None
+    return dict(
+        levels=levels, queries=queries, served=served, cancelled=cancelled,
+        cancelled_partial_levels=partial_levels,
+        baseline_wall_s=baseline_wall, probe_wall_s=probe_wall,
+        # survivors == baseline count, so ~1.0 when cancellation is free
+        wall_ratio=probe_wall / max(baseline_wall, 1e-9),
+        qps_survivors=served / max(probe_wall, 1e-9),
+        qps_baseline=n_base / max(baseline_wall, 1e-9),
+        inflight_after=server._caps.inflight(client),
+        worker_alive=follow_up_ok,
+    )
+
+
 def build_server(n_graphs: int, scale: int, *, edgefactor: int = 16,
                  seed: int = 0, **server_kw):
     """(server, {name: graph}) over `n_graphs` RMAT sessions."""
@@ -163,17 +230,23 @@ def main(argv=None):
                     help="per-client in-flight cap")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-validate", action="store_true")
+    ap.add_argument("--cancel-probe", action="store_true",
+                    help="after the load, prove cancelled queries free "
+                         "their worker within one level")
     args = ap.parse_args(argv)
 
     server, graphs = build_server(
         args.graphs, args.scale, edgefactor=args.edgefactor, seed=args.seed,
         max_queue_depth=args.queue_depth,
         max_inflight_per_client=args.inflight)
+    probe = None
     try:
         m = run_load(server, graphs, clients=args.clients,
                      queries_per_client=args.queries, batch=args.batch,
                      seed=args.seed, stream_every=args.stream_every,
                      validate=0 if args.no_validate else 1)
+        if args.cancel_probe:
+            probe = run_cancel_probe(server)
         stats = server.stats()
     finally:
         server.close()
@@ -189,6 +262,12 @@ def main(argv=None):
     for name, c in sorted(stats["sessions"].items()):
         print(f"[serve]   {name}: served={c['served']} "
               f"high_water={c['queue_high_water']}/{stats['max_queue_depth']}")
+    if probe is not None:
+        print(f"[serve] cancel probe: {probe['cancelled']} cancelled / "
+              f"{probe['served']} served, wall ratio "
+              f"{probe['wall_ratio']:.2f} vs baseline, "
+              f"inflight_after={probe['inflight_after']}, "
+              f"worker_alive={probe['worker_alive']}")
     return m, stats
 
 

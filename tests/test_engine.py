@@ -115,11 +115,29 @@ def test_component_teps_accounting():
     assert res.teps_global == pytest.approx(9 / res.seconds, rel=1e-9)
     per = res.teps_per_root
     assert per[2] == 0.0                      # isolated root traverses nothing
-    assert res.teps_hmean == 0.0              # hmean with a zero is zero
+    # zero-TEPS roots are excluded from the harmonic mean (a single isolated
+    # root would otherwise zero out the whole batch's reported throughput)
+    import statistics
+    assert res.teps_hmean == pytest.approx(
+        statistics.harmonic_mean(per[:2].tolist()))
     # single-component queries: both figures coincide
     res2 = Engine(g).bfs([3], validate=True)
     assert res2.edges_traversed.tolist() == [1]
     assert res2.teps == pytest.approx(res2.teps_global / 3, rel=1e-9)
+
+
+def test_teps_hmean_guards_zero_teps_roots():
+    """Regression: a batch containing an edgeless/isolated root used to
+    report hmean 0 (or raise, interpreter-dependent) — the zero-TEPS root
+    must be excluded, and an all-zero batch must report 0.0, not raise."""
+    g = G.from_edges(np.array([0, 1, 3]), np.array([1, 2, 4]), 6)
+    mixed = Engine(g).bfs([0, 5])             # one real root, one isolated
+    assert mixed.teps_hmean > 0.0
+    assert mixed.teps_hmean == pytest.approx(float(mixed.teps_per_root[0]))
+    only_isolated = Engine(g).bfs([5])
+    assert only_isolated.teps_hmean == 0.0
+    edgeless = G.from_edges(np.array([], np.int64), np.array([], np.int64), 4)
+    assert Engine(edgeless).bfs([0, 1, 2]).teps_hmean == 0.0
 
 
 def test_result_split():
@@ -160,7 +178,7 @@ def test_stepper_backend_stats(small_graph):
     assert stats[0]["direction"] == "td" and stats[0]["frontier_size"] == 1
     for s in stats:
         assert s["seconds"] >= s["compute_s"] >= 0
-    assert set(res.timings[0]) == {"init_s", "agg_s"}
+    assert set(res.timings[0]) == {"init_s", "agg_s", "driver_overhead_s"}
 
 
 def test_backend_validation_errors(small_graph):

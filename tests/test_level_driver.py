@@ -1,0 +1,299 @@
+"""`LevelDriver` parity + cancellation: the unified per-level loop must
+reproduce the four pre-refactor loops bitwise (parents/levels) and row-for-row
+(per-level stats), terminate at the depth bound without the old wasted extra
+step, and abort cooperatively through `QueryControl`."""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_in_devices
+from repro.core import graph as G, ref
+from repro.core.bfs import (BFSConfig, DeviceGraph, bfs_instrumented,
+                            finalize, init_state, make_level_step)
+from repro.engine import (Engine, LevelDriver, QueryCancelled, QueryControl,
+                          QueryDeadlineExceeded, SingleStepBackend)
+
+# The stats keys the four loops must agree on (timings are nondeterministic).
+KEYS = ("level", "direction", "frontier_size", "frontier_edges")
+
+
+def _rows(stats):
+    return [{k: r[k] for k in KEYS} for r in stats]
+
+
+def _oracle_single(g, root, cfg=BFSConfig()):
+    """The pre-refactor `bfs_instrumented` loop, kept verbatim as the parity
+    oracle (modulo timing): step -> one four-scalar device_get -> stats row
+    -> `cur > V` termination guard *after* the step."""
+    dg = DeviceGraph.from_graph(g)
+    step = make_level_step(dg, cfg)
+    st = jax.jit(lambda r: init_state(dg, r))(jnp.int32(root))
+    jax.block_until_ready(st.frontier)
+    stats = []
+    nf, mf = (int(x) for x in jax.device_get((st.nf, st.mf)))
+    while nf > 0:
+        st = step(st)
+        jax.block_until_ready(st.frontier)
+        nf2, mf2, cur, bu = jax.device_get(
+            (st.nf, st.mf, st.cur_level, st.bu_mode))
+        stats.append(dict(level=int(cur),
+                          direction="bu" if bool(bu) else "td",
+                          frontier_size=nf, frontier_edges=mf))
+        if int(cur) > dg.num_vertices:
+            raise RuntimeError("BFS failed to terminate")
+        nf, mf = int(nf2), int(mf2)
+    parent, level = finalize(st)
+    return parent, level, stats
+
+
+def _path_graph(n):
+    return G.from_edges(np.arange(n - 1), np.arange(1, n), n)
+
+
+def _parity_graphs():
+    star = G.from_edges(np.zeros(6, np.int64), np.arange(1, 7), 7)
+    return {
+        "rmat": (G.rmat(9, seed=7), None),       # None = highest-degree root
+        "star": (star, 0),
+        # mid-rooted path: diameter (n//2) < depth bound (n-1), so even the
+        # trailing empty-discovery round matches the oracle row-for-row
+        "path": (_path_graph(24), 12),
+        "edgeless": (G.from_edges(np.array([], np.int64),
+                                  np.array([], np.int64), 6), 3),
+    }
+
+
+@pytest.mark.parametrize("name", ["rmat", "star", "path", "edgeless"])
+def test_driver_matches_pre_refactor_single_loop(name):
+    g, root = _parity_graphs()[name]
+    if root is None:
+        root = int(np.argmax(g.degrees))
+    op, ol, ostats = _oracle_single(g, root)
+    dp, dl, dstats = bfs_instrumented(g, root)
+    np.testing.assert_array_equal(dp, op)
+    np.testing.assert_array_equal(dl, ol)
+    assert _rows(dstats) == _rows(ostats)
+    ref.validate_parents(g, root, dp, dl)
+
+
+def test_driver_matches_across_heuristics(small_graph):
+    root = int(np.argmax(small_graph.degrees))
+    for heuristic in ("paper", "beamer", "topdown", "bottomup"):
+        cfg = BFSConfig(heuristic=heuristic)
+        op, ol, ostats = _oracle_single(small_graph, root, cfg)
+        dp, dl, dstats = bfs_instrumented(small_graph, root, cfg)
+        np.testing.assert_array_equal(dp, op)
+        np.testing.assert_array_equal(dl, ol)
+        assert _rows(dstats) == _rows(ostats)
+
+
+def test_engine_stepper_matches_core_instrumented(small_graph):
+    """The engine's stepper backend and the core instrumented path are two
+    adapters over one driver: identical rows, identical trees."""
+    root = int(np.argmax(small_graph.degrees))
+    cp, cl, cstats = bfs_instrumented(small_graph, root)
+    res = Engine(small_graph).bfs(root, backend="stepper")
+    np.testing.assert_array_equal(res.parent[0], cp)
+    np.testing.assert_array_equal(res.level[0], cl)
+    assert _rows(res.per_level_stats[0]) == _rows(cstats)
+    assert set(res.timings[0]) == {"init_s", "agg_s", "driver_overhead_s"}
+
+
+def test_fused_matches_stepper(small_graph):
+    root = int(np.argmax(small_graph.degrees))
+    eng = Engine(small_graph)
+    rf = eng.bfs(root)                               # fused whole-search
+    rs = eng.bfs(root, backend="stepper")
+    np.testing.assert_array_equal(rf.parent, rs.parent)
+    np.testing.assert_array_equal(rf.level, rs.level)
+
+
+def test_depth_bound_stops_before_wasted_step():
+    """A path rooted at its end has diameter == depth bound (V-1). The old
+    loops stepped once more to *discover* the frontier was final; the driver
+    derives that from the bound and stops a level early — same tree, one
+    fewer row (the oracle's trailing row discovered nothing)."""
+    n = 24
+    g = _path_graph(n)
+    op, ol, ostats = _oracle_single(g, 0)
+    dp, dl, dstats = bfs_instrumented(g, 0)
+    np.testing.assert_array_equal(dp, op)
+    np.testing.assert_array_equal(dl, ol)
+    assert dl.max() == n - 1                        # full-diameter traversal
+    assert len(ostats) == n                         # oracle paid the extra step
+    assert len(dstats) == n - 1
+    assert _rows(dstats) == _rows(ostats)[:-1]
+    ref.validate_parents(g, 0, dp, dl)
+
+
+def test_single_vertex_graph_no_levels():
+    g = G.from_edges(np.array([], np.int64), np.array([], np.int64), 1)
+    parent, level, stats = bfs_instrumented(g, 0)
+    assert parent.tolist() == [0] and level.tolist() == [0]
+    assert stats == []                              # depth bound 0: no steps
+
+
+# -------------------------------------------------------------- cancellation
+
+
+def test_control_cancel_aborts_with_partial_stats():
+    n = 512
+    g = _path_graph(n)
+    control = QueryControl()
+    seen = []
+
+    def on_level(_b, row):
+        seen.append(row)
+        if len(seen) == 3:
+            control.cancel()
+
+    with pytest.raises(QueryCancelled) as ei:
+        Engine(g).bfs(0, backend="stepper", on_level=on_level,
+                      control=control)
+    # partial stats: per-root convention, aborted at the next level boundary
+    partial = ei.value.per_level_stats
+    assert len(partial) == 1 and partial[0] == seen
+    assert 3 <= len(seen) < n - 1
+
+
+def test_control_deadline_aborts_mid_traversal():
+    g = _path_graph(2048)
+    eng = Engine(g)
+    eng.bfs(0, backend="stepper")                   # pay warm-up outside
+    control = QueryControl.with_timeout(0.05)
+    t0 = time.perf_counter()
+    with pytest.raises(QueryDeadlineExceeded) as ei:
+        eng.bfs(0, backend="stepper", control=control)
+    assert time.perf_counter() - t0 < 30            # aborted, not a full run
+    assert isinstance(ei.value.per_level_stats, list)
+
+
+def test_control_aborts_cold_plan_warm_up():
+    """The first stepper query on a plan pays a full warm-up traversal —
+    it must honour the control too (the Scale-29 cold-session case), and an
+    aborted warm-up must not mark the plan warmed."""
+    g = _path_graph(2048)
+    eng = Engine(g)
+    control = QueryControl.with_timeout(0.05)   # expires inside the warm run
+    with pytest.raises(QueryDeadlineExceeded) as ei:
+        eng.bfs(0, backend="stepper", control=control)
+    assert isinstance(ei.value.per_level_stats, list)
+    res = eng.bfs(0, backend="stepper")         # plan still warms + serves
+    assert res.num_levels[0] == 2047
+
+
+def test_control_checked_before_dispatch(small_graph):
+    control = QueryControl()
+    control.cancel()
+    with pytest.raises(QueryCancelled):
+        Engine(small_graph).bfs(0, control=control)  # fused backend
+    assert QueryControl.with_timeout(None).poll() is None
+    expired = QueryControl(deadline=time.monotonic() - 1.0)
+    assert isinstance(expired.poll(), QueryDeadlineExceeded)
+
+
+def test_driver_backend_protocol_direct(small_graph):
+    """`LevelDriver` + `SingleStepBackend` are public: a hand-built backend
+    must run and stream rows exactly like the engine adapters."""
+    dg = DeviceGraph.from_graph(small_graph)
+    backend = SingleStepBackend(jax.jit(lambda r: init_state(dg, r)),
+                                make_level_step(dg, BFSConfig()),
+                                dg.num_vertices)
+    assert backend.depth_bound == dg.num_vertices - 1
+    streamed = []
+    root = int(np.argmax(small_graph.degrees))
+    parent, level, stats, timings = LevelDriver(backend).run(
+        root, on_level=streamed.append)
+    assert streamed == stats and stats
+    assert {"init_s", "agg_s", "driver_overhead_s"} <= set(timings)
+    ref.validate_parents(small_graph, root, parent, level)
+
+
+# ------------------------------------------------------------- sharded parity
+
+
+SHARDED_PARITY_CODE = """
+import jax
+import numpy as np
+from repro.core import graph as G, ref, partition as pt
+from repro.core.bfs import BFSConfig
+from repro.core.hybrid_bfs import (HybridConfig, finalize_hybrid,
+                                   hybrid_bfs_instrumented,
+                                   make_hybrid_stepper)
+from repro.engine import Engine
+
+KEYS = ("level", "direction", "frontier_size", "frontier_edges")
+rows = lambda stats: [{k: r[k] for k in KEYS} for r in stats]
+
+
+def oracle_bsp(pg, root_orig, hcfg=HybridConfig()):
+    # the pre-refactor hybrid_bfs_instrumented loop, verbatim modulo timing
+    init_fn, compute_fn, exchange_fn, finalize_fn, root_mapper = \\
+        make_hybrid_stepper(pg, hcfg)
+    state = init_fn(root_mapper(root_orig))
+    jax.block_until_ready(state["frontier"])
+    stats = []
+    nf, mf = (int(x) for x in jax.device_get((state["nf"], state["mf"])))
+    while nf > 0:
+        nxt, pc, bu, bs = compute_fn(state)
+        jax.block_until_ready(nxt)
+        state = exchange_fn(state, nxt, pc, bu, bs)
+        jax.block_until_ready(state["frontier"])
+        nf2, mf2, cur, bu_host = jax.device_get(
+            (state["nf"], state["mf"], state["cur"], bu))
+        stats.append(dict(level=int(cur),
+                          direction="bu" if bool(bu_host) else "td",
+                          frontier_size=nf, frontier_edges=mf))
+        if int(cur) > pg.plan.v_pad:
+            raise RuntimeError("no termination")
+        nf, mf = int(nf2), int(mf2)
+    pn, ln = finalize_fn(state)
+    parent, level = finalize_hybrid(pg.plan, pn, ln)
+    return parent, level, stats
+
+
+g = G.rmat(9, seed=3)
+root = int(np.argmax(g.degrees))
+plan = pt.make_plan(g, 4, "specialized")
+pg = pt.apply_plan(g, plan)
+
+# driver-backed core path vs the pre-refactor oracle loop
+op, ol, ostats = oracle_bsp(pg, root)
+dp, dl, dstats = hybrid_bfs_instrumented(pg, root)
+np.testing.assert_array_equal(dp, op)
+np.testing.assert_array_equal(dl, ol)
+assert rows(dstats) == rows(ostats)
+ref.validate_parents(g, root, dp, dl)
+
+# engine sharded stepper: same driver, same rows
+eng = Engine(g)
+res = eng.bfs(root, backend="stepper", n_parts=4)
+np.testing.assert_array_equal(res.parent[0], op)
+np.testing.assert_array_equal(res.level[0], ol)
+assert rows(res.per_level_stats[0]) == rows(ostats)
+
+# cross-partition-count parity: with the global coordinator the decision
+# statistic is the full frontier edge mass on both paths, so stats rows
+# (not just trees) coincide between 1 and 4 partitions
+hcfg = HybridConfig(coordinator="global")
+r1 = eng.bfs(root, hcfg, backend="stepper", n_parts=1)
+r4 = eng.bfs(root, hcfg, backend="stepper", n_parts=4)
+assert rows(r1.per_level_stats[0]) == rows(r4.per_level_stats[0])
+np.testing.assert_array_equal(r1.parent, r4.parent)
+np.testing.assert_array_equal(r1.level, r4.level)
+
+# fused/sharded/stepper trees all coincide
+rf = eng.bfs(root)
+np.testing.assert_array_equal(rf.parent[0], op)
+np.testing.assert_array_equal(rf.level[0], ol)
+print("DRIVER_SHARDED_PARITY_OK")
+"""
+
+
+@pytest.mark.slow
+def test_driver_sharded_parity_4dev():
+    out = run_in_devices(SHARDED_PARITY_CODE, 4, timeout=420)
+    assert "DRIVER_SHARDED_PARITY_OK" in out

@@ -1,7 +1,9 @@
 """BFSServer + queueing: concurrent multi-graph serving vs the oracle,
 micro-batch coalescing with trace-count proof, admission control, result
-streaming, and the bounded-priority-queue primitives."""
+streaming, query cancellation/deadlines, and the bounded-priority-queue
+primitives."""
 import threading
+import time
 
 import numpy as np
 import pytest
@@ -9,8 +11,12 @@ import pytest
 from repro.core import graph as G, ref
 from repro.core.bfs import BFSConfig
 from repro.engine import (BFSServer, BoundedPriorityQueue, ClientCaps,
-                          QueueClosed, QueueFull, ServerClosed,
-                          ServerOverloaded)
+                          QueryCancelled, QueryDeadlineExceeded, QueueClosed,
+                          QueueFull, ServerClosed, ServerOverloaded)
+
+
+def _path_graph(n):
+    return G.from_edges(np.arange(n - 1), np.arange(1, n), n)
 
 
 @pytest.fixture(scope="module")
@@ -49,6 +55,17 @@ def test_priority_queue_batch_coalescing():
     assert [it[2] for it in batch] == [2]
     batch = q.get_batch(0, key=lambda it: it[0], max_items=10)
     assert [it[2] for it in batch] == [3]
+
+
+def test_priority_queue_remove():
+    q = BoundedPriorityQueue(4)
+    for v in "abcd":
+        q.put(v, priority=1)
+    assert q.remove(lambda it: it in "bd") == ["b", "d"]
+    assert len(q) == 2                         # depth freed immediately
+    q.put("e")                                 # room again
+    assert q.remove(lambda it: False) == []
+    assert q.get_batch(0, key=lambda it: True, max_items=5) == ["e", "a", "c"]
 
 
 def test_priority_queue_close_drains():
@@ -219,6 +236,123 @@ def test_close_fails_queued_queries(two_graphs):
     server.close()
     with pytest.raises(ServerClosed):
         h.result(timeout=10)
+
+
+# --------------------------------------------------- cancellation + deadlines
+
+
+def test_cancel_mid_traversal_frees_slot_within_one_level():
+    """Acceptance: a cancelled in-flight query aborts at the next level
+    boundary, its admission slot frees, and its partial per-level stats stay
+    on the handle — a long traversal cannot pin the session worker."""
+    n = 3000                                     # ~n levels: cannot finish
+    server = BFSServer({"p": _path_graph(n)}, max_inflight_per_client=1)
+    try:
+        h = server.submit("p", 0, stream=True, client="a")
+        it = h.stream(timeout=300)
+        next(it)                                 # traversal provably running
+        h.cancel()
+        with pytest.raises(QueryCancelled):      # stream ends with the abort
+            for _ in it:
+                pass
+        with pytest.raises(QueryCancelled):
+            h.result(timeout=30)
+        assert h.partial_stats is not None
+        assert 1 <= len(h.partial_stats[0]) < n - 1
+        # the in-flight cap is 1: this submit only admits if the slot freed
+        h2 = server.submit("p", n - 1, client="a")
+        h2.result(timeout=300)
+        assert server.stats()["totals"]["cancelled"] == 1
+    finally:
+        server.close()
+
+
+def test_cancel_while_queued_frees_queue_depth():
+    g = G.rmat(9, seed=7)
+    server = BFSServer({"g": g}, max_queue_depth=2, autostart=False)
+    try:
+        h1 = server.submit("g", [0], client="a")
+        h2 = server.submit("g", [1], client="b")
+        with pytest.raises(ServerOverloaded):
+            server.submit("g", [2], client="c")  # queue full
+        h1.cancel()                              # withdrawn -> depth freed
+        with pytest.raises(QueryCancelled):
+            h1.result(timeout=5)                 # failed without any worker
+        h3 = server.submit("g", [2], client="c")
+        server.start()
+        h2.result(timeout=300).validate(g)
+        h3.result(timeout=300).validate(g)
+        assert server.stats()["totals"]["cancelled"] == 1
+        # cancelling a finished query is a no-op
+        h2.cancel()
+        assert h2.result(timeout=5) is not None
+    finally:
+        server.close()
+
+
+def test_deadline_rejects_without_poisoning_plan_cache(two_graphs):
+    """An expired query is failed at the dispatch gate — no trace, no warm —
+    so the plan cache serves the next query exactly as before."""
+    g = two_graphs["g0"]
+    server = BFSServer({"g": g}, autostart=False)
+    try:
+        session = server.sessions["g"]
+        h = server.submit("g", [1], client="a", deadline=0.0)
+        time.sleep(0.01)                         # provably expired
+        server.start()
+        with pytest.raises(QueryDeadlineExceeded):
+            h.result(timeout=30)
+        assert session.total_traces == 0         # never reached the engine
+        h2 = server.submit("g", [1], client="a")
+        h2.result(timeout=300).validate(g)
+        assert session.total_traces == 1         # the normal single trace
+        stats = server.stats()["totals"]
+        assert stats["expired"] == 1 and stats["served"] == 1
+    finally:
+        server.close()
+
+
+def test_deadline_aborts_streaming_mid_traversal():
+    n = 3000
+    server = BFSServer({"p": _path_graph(n)})
+    try:
+        # generous enough to start streaming, far too tight to finish
+        h = server.submit("p", 0, stream=True, client="a", deadline=30.0)
+        it = h.stream(timeout=300)
+        next(it)
+        h.control.deadline = time.monotonic()    # force expiry mid-flight
+        with pytest.raises(QueryDeadlineExceeded):
+            h.result(timeout=60)
+        assert h.partial_stats is not None and len(h.partial_stats[0]) < n - 1
+        with pytest.raises(ValueError):
+            server.submit("p", 0, deadline=-1.0)
+    finally:
+        server.close()
+
+
+def test_close_timeout_is_a_shared_deadline():
+    """`close(timeout)` must bound the WHOLE shutdown, not timeout-per-worker:
+    with 3 sessions all busy on long traversals, the old per-join timeout
+    made worst-case shutdown 3x the bound."""
+    n = 4000
+    graphs = {f"p{i}": _path_graph(n) for i in range(3)}
+    server = BFSServer(graphs, max_inflight_per_client=4)
+    handles = []
+    for name in graphs:
+        h = server.submit(name, 0, stream=True, client="a")
+        next(h.stream(timeout=300))              # every worker provably busy
+        handles.append(h)
+    t0 = time.monotonic()
+    server.close(timeout=1.0)
+    elapsed = time.monotonic() - t0
+    assert elapsed < 2.4, f"close took {elapsed:.2f}s for a 1s shared deadline"
+    for h in handles:                            # let the workers drain
+        h.cancel()
+    for h in handles:                            # a fast worker may have
+        try:                                     # finished before the cancel
+            h.result(timeout=60)
+        except QueryCancelled:
+            pass
 
 
 def test_coalesced_results_split_correctly(two_graphs):
