@@ -8,9 +8,9 @@ Measures the `BFSServer` under synthetic concurrent load:
   (queries per dispatch), and the queue high-water mark vs its bound.
 * **trace proof** — per-session `GraphSession.total_traces` after the load:
   with a fixed per-query batch and `max_batch_roots` equal to its pow2
-  bucket, every dispatch (coalesced or not) reuses ONE fused executable per
-  session, so traces stay at 1 — zero per-query recompiles under
-  concurrency.
+  bucket, every dispatch (coalesced or not) reuses ONE cohort executable
+  set per session (init + td/bu/mixed steps + sync = 5 traces), so traces
+  stay constant — zero per-query recompiles under concurrency.
 * **overload** — a deliberately tiny server (depth 2, in-flight cap 2,
   workers not started): counts `ServerOverloaded` rejections by reason,
   then starts the workers and proves every *admitted* query completes.
@@ -19,6 +19,11 @@ Measures the `BFSServer` under synthetic concurrent load:
   prove the survivors' wall time matches a no-cancellation baseline
   (cancelled queries free the session worker within one level), every
   admission slot frees, and the worker survives.
+* **fused cancellation** — `run_fused_cancel_probe`: cancel an in-flight
+  FUSED batch (the cohort path runs on the level driver, so batched
+  dispatches — not just streamed stepper queries — abort between levels):
+  the abort must land within a few levels of a ~2048-level traversal and
+  cost a small fraction of its wall time.
 * **driver overhead** — one streamed stepper query per session records the
   unified `LevelDriver` loop's host-side cost per level
   (`timings.driver_overhead_s`), so the one-loop refactor's overhead is
@@ -85,7 +90,7 @@ def main(argv=None):
     import jax
     from repro.engine.engine import _bucket_batch
     from repro.launch.bfs_serve import (build_server, run_cancel_probe,
-                                        run_load)
+                                        run_fused_cancel_probe, run_load)
 
     t0 = time.time()
     # max_batch_roots == bucket(batch): every coalesced dispatch lands in
@@ -125,6 +130,8 @@ def main(argv=None):
                   for name, s in server.sessions.items()}
         cancel = run_cancel_probe(server,
                                   levels=512 if args.smoke else 2048)
+        fused_cancel = run_fused_cancel_probe(
+            server, levels=512 if args.smoke else 2048)
     finally:
         server.close()
     probe = _overload_probe(graphs[sorted(graphs)[0]])
@@ -148,10 +155,12 @@ def main(argv=None):
             queue_depth_bound=stats["max_queue_depth"]),
         trace_proof=dict(
             per_session_traces=traces,
-            note="fused+stepper plans per session after full load; "
-                 "independent of query count == zero per-query recompiles"),
+            note="cohort executable set (init + td/bu/mixed + sync) + "
+                 "stepper plan per session after full load; independent of "
+                 "query count == zero per-query recompiles"),
         driver=driver,
         cancellation=cancel,
+        fused_cancellation=fused_cancel,
         overload=probe,
         smoke=args.smoke,
         wall_s=time.time() - t0,
@@ -175,6 +184,10 @@ def main(argv=None):
           f"{cancel['wall_ratio']:.2f} (1.0 = cancellation is free), "
           f"partial levels {cancel['cancelled_partial_levels']} "
           f"of {cancel['levels']}")
+    print(f"# fused cancel probe: in-flight batch of "
+          f"{fused_cancel['batch']} aborted at level "
+          f"{fused_cancel['levels_before_abort']}/{fused_cancel['levels']} "
+          f"({fused_cancel['wall_fraction']:.2%} of the full batch's wall)")
     for name, d in sorted(driver.items()):
         print(f"# driver overhead {name}: "
               f"{d['overhead_us_per_level']:.0f} us/level over "
@@ -193,7 +206,13 @@ def main(argv=None):
           and cancel["served"] == cancel["queries"] - cancel["cancelled"]
           and cancel["inflight_after"] == 0
           and cancel["worker_alive"]
-          and cancel["wall_ratio"] < 2.0)
+          and cancel["wall_ratio"] < 2.0
+          # fused-batch cancellation acceptance: the in-flight batched
+          # dispatch aborted at level granularity (a few levels in, far
+          # from the end), freeing its admission slot
+          and fused_cancel["cancelled"]
+          and 1 <= fused_cancel["levels_before_abort"] < fused_cancel["levels"]
+          and fused_cancel["inflight_after"] == 0)
     if not ok:
         print("# ERROR: serving acceptance conditions not met",
               file=sys.stderr)

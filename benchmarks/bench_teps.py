@@ -14,7 +14,13 @@ Tracks, from this PR onward:
   `frontier_fused` kernel). The acceptance bar is >= 1.2x for the fused
   bookkeeping; both kernel and XLA numbers are reported.
 * **ragged_batch** — trace-count proof that ragged batch sizes (3/5/7) share
-  one bucketed executable instead of compiling one each.
+  one bucketed executable (set) instead of compiling one each.
+* **cohort** — the batch-native cohort fused path vs the old
+  vmap-of-whole-search baseline on a direction-mixed batch (hub + low-degree
+  + isolated roots): wall/TEPS for both, the per-level direction split
+  (td/bu/mixed cohort sizes), and the wasted-lane fraction the cohort model
+  reclaims (lane-levels where a lane is finished — work the vmap select
+  still paid for, in both directions).
 
 Usage: python benchmarks/bench_teps.py [--scale 16] [--smoke]
 """
@@ -104,10 +110,79 @@ def _ragged_proof(graph):
         engine.bfs(np.arange(b), BFSConfig(), backend="fused")
     counts = {repr(k): v for k, v in
               session.cache_info()["trace_counts"].items()}
-    fused_keys = [k for k in session.cache_info()["trace_counts"]
-                  if k[0] == "fused"]
-    return dict(batches=[3, 5, 7], fused_executables=len(fused_keys),
+    cohort_keys = [k for k in session.cache_info()["trace_counts"]
+                   if k[0] == "cohort"]
+    return dict(batches=[3, 5, 7],
+                cohort_executables=len(cohort_keys),
+                cohort_buckets=sorted({k[2] for k in cohort_keys}),
                 total_traces=session.total_traces, trace_counts=counts)
+
+
+def _cohort_vs_vmap(graph, seed):
+    """Direction-mixed fused batch: cohort path vs vmap-of-whole-search.
+
+    The baseline is the pre-cohort formulation this PR replaced: `vmap`
+    over `search_state`, whose per-level `lax.cond` lowers to a select —
+    every lane executes BOTH directions every level and the batch runs
+    until its slowest member finishes. The batch mixes a hub root, a few
+    low-degree roots, and isolated roots, so lanes disagree on direction
+    and finish at very different levels.
+    """
+    import jax
+    import jax.numpy as jnp
+    from repro.core import bfs as B
+    from repro.core.bfs import BFSConfig
+    from repro.engine import Engine, GraphSession
+
+    cfg = BFSConfig()
+    session = GraphSession(graph)
+    engine = Engine(session)
+    rng = np.random.default_rng(seed)
+    deg = graph.degrees
+    pos = np.flatnonzero(deg > 0)
+    iso = np.flatnonzero(deg == 0)
+    lows = pos[deg[pos] <= np.percentile(deg[pos], 30)]
+    roots = [int(np.argmax(deg))]
+    roots += rng.choice(lows, min(4, len(lows)), replace=False).tolist()
+    filler = iso if len(iso) >= 8 - len(roots) else pos
+    roots += rng.choice(filler, 8 - len(roots), replace=False).tolist()
+    roots = np.asarray(roots)
+
+    # backend pinned: "auto" would pick sharded on multi-device containers
+    # at full scale, and the comparison is fused-batching formulations.
+    engine.bfs(roots, cfg, backend="fused")      # warm the cohort plan
+    res = engine.bfs(roots, cfg, backend="fused")
+
+    dg = session.device_graph()
+    base = jax.jit(
+        lambda rr: jax.vmap(lambda r: B.search_state(dg, r, cfg))(rr))
+    dev_roots = jnp.asarray(roots, jnp.int32)
+    jax.block_until_ready(base(dev_roots).frontier)   # compile outside
+    t0 = time.perf_counter()
+    st = base(dev_roots)
+    jax.block_until_ready(st.frontier)
+    vmap_s = time.perf_counter() - t0
+    _, level_v = B.finalize(st)
+    np.testing.assert_array_equal(level_v, res.level)  # same answers
+
+    rows = res.batch_level_stats
+    per_level = [dict(level=r["level"], direction=r["direction"],
+                      td_lanes=r["td_lanes"], bu_lanes=r["bu_lanes"],
+                      active_lanes=r["active_lanes"], batch=r["batch"])
+                 for r in rows]
+    lane_levels = sum(r["batch"] for r in rows)
+    wasted = sum(r["batch"] - r["active_lanes"] for r in rows)
+    edges = float(res.edges_traversed.sum())
+    return dict(
+        batch=len(roots), roots=[int(r) for r in roots],
+        levels=len(rows),
+        vmap_seconds=vmap_s, cohort_seconds=res.seconds,
+        speedup_cohort=vmap_s / max(res.seconds, 1e-12),
+        teps_vmap=edges / max(vmap_s, 1e-12), teps_cohort=res.teps,
+        mixed_levels=sum(r["direction"] == "mixed" for r in per_level),
+        wasted_lane_fraction=wasted / max(lane_levels, 1),
+        per_level=per_level,
+    )
 
 
 def main(argv=None):
@@ -160,6 +235,7 @@ def main(argv=None):
 
     book = _bookkeeping(g.num_vertices, args.seed, args.iters)
     ragged = _ragged_proof(g)
+    cohort = _cohort_vs_vmap(g, args.seed)
 
     out = dict(
         graph=dict(scale=args.scale, edgefactor=args.edgefactor,
@@ -173,6 +249,7 @@ def main(argv=None):
         traversal=traversal,
         bookkeeping=book,
         ragged_batch=ragged,
+        cohort=cohort,
         smoke=args.smoke,
         wall_s=time.time() - t0,
     )
@@ -191,8 +268,18 @@ def main(argv=None):
     emit("frontier_bookkeeping_fused_pallas", book["fused_pallas_us"],
          f"speedup={book['speedup_fused_pallas']:.2f}x "
          f"({book['pallas_mode']})")
-    print(f"# ragged batches 3/5/7 -> {ragged['fused_executables']} fused "
-          f"executable(s), {ragged['total_traces']} trace(s)")
+    print(f"# ragged batches 3/5/7 -> {ragged['cohort_executables']} cohort "
+          f"executable(s) in bucket(s) {ragged['cohort_buckets']}, "
+          f"{ragged['total_traces']} trace(s)")
+    emit("fused_batch_vmap_baseline", cohort["vmap_seconds"] * 1e6,
+         f"TEPS={cohort['teps_vmap']:.3e}")
+    emit("fused_batch_cohort", cohort["cohort_seconds"] * 1e6,
+         f"TEPS={cohort['teps_cohort']:.3e} "
+         f"speedup={cohort['speedup_cohort']:.2f}x")
+    print(f"# cohort mixed batch: {cohort['mixed_levels']}/{cohort['levels']} "
+          f"mixed levels, wasted-lane fraction "
+          f"{cohort['wasted_lane_fraction']:.2f} "
+          f"(lane-levels the cohort model skips, vmap paid)")
     print(f"# wrote {args.out}")
 
     if book["speedup_fused_xla"] < 1.2 and book["speedup_fused_pallas"] < 1.2:

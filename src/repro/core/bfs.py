@@ -155,11 +155,17 @@ def init_state(dg: DeviceGraph, root) -> BFSState:
 
 # ---------------------------------------------------------------- top-down --
 
-def _top_down_step(dg: DeviceGraph, cfg: BFSConfig, st: BFSState):
-    """One push level: work ~ frontier edge mass, chunked."""
+def _top_down_step(dg: DeviceGraph, cfg: BFSConfig, frontier, visited, parent):
+    """One push level: work ~ frontier edge mass, chunked.
+
+    Takes the flat (frontier, visited, parent) triple rather than a
+    `BFSState` so the batched cohort path can `vmap` it per lane with a
+    masked frontier — a lane whose frontier is zeroed contributes zero edge
+    slots and therefore zero chunk iterations to the batched while-loop.
+    """
     v = dg.num_vertices
     c = cfg.td_chunk
-    queue, _n = fr.compact(st.frontier)          # fill entries == v
+    queue, _n = fr.compact(frontier)             # fill entries == v
     degq = dg.deg_ext[queue]                     # 0 for fill
     cum = jnp.cumsum(degq, dtype=jnp.int32)
     total = cum[-1] if v else jnp.int32(0)
@@ -176,7 +182,7 @@ def _top_down_step(dg: DeviceGraph, cfg: BFSConfig, st: BFSState):
         eidx = dg.indptr[src] + (slots - start)
         eidx = jnp.clip(eidx, 0, max(dg.num_directed_edges - 1, 0))
         dst = jnp.where(valid, dg.indices[eidx], 0)
-        fresh = valid & (st.visited[dst] == 0)
+        fresh = valid & (visited[dst] == 0)
         next_flags = next_flags.at[dst].max(fresh.astype(jnp.uint8))
         pcand = pcand.at[dst].min(jnp.where(fresh, src, INT_MAX))
         return base + c, next_flags, pcand
@@ -186,17 +192,25 @@ def _top_down_step(dg: DeviceGraph, cfg: BFSConfig, st: BFSState):
 
     init = (jnp.int32(0), jnp.zeros(v, jnp.uint8), jnp.full(v, INT_MAX, jnp.int32))
     _, next_flags, pcand = jax.lax.while_loop(cond, body, init)
-    parent = jnp.where(next_flags > 0, jnp.minimum(st.parent, pcand), st.parent)
+    parent = jnp.where(next_flags > 0, jnp.minimum(parent, pcand), parent)
     return next_flags, parent
 
 
 # --------------------------------------------------------------- bottom-up --
 
-def _bottom_up_step(dg: DeviceGraph, cfg: BFSConfig, st: BFSState):
-    """One pull level: row chunks x adjacency slabs with block early exit."""
+def _bottom_up_step(dg: DeviceGraph, cfg: BFSConfig, frontier, visited,
+                    parent_in, row_mask=None):
+    """One pull level: row chunks x adjacency slabs with block early exit.
+
+    `row_mask` (scalar/broadcastable bool, cohort membership under `vmap`)
+    masks the unvisited scan: a masked-out lane compacts an empty row queue
+    and contributes zero chunk iterations — no pull work at all.
+    """
     v = dg.num_vertices
     r, w = min(cfg.bu_chunk, dg.num_vertices), cfg.bu_slab
-    unvisited = (st.visited == 0).astype(jnp.uint8)
+    unvisited = (visited == 0).astype(jnp.uint8)
+    if row_mask is not None:
+        unvisited = unvisited * row_mask.astype(jnp.uint8)
     queue, m = fr.compact(unvisited)             # fill entries == v
 
     def chunk_body(carry):
@@ -217,7 +231,7 @@ def _bottom_up_step(dg: DeviceGraph, cfg: BFSConfig, st: BFSState):
             nvalid = (col[None, :] < rdeg[:, None]) & ~found[:, None]
             nidx = jnp.clip(nidx, 0, max(dg.num_directed_edges - 1, 0))
             nbr = jnp.where(nvalid, dg.indices[nidx], 0)
-            hit = nvalid & (st.frontier[nbr] > 0)
+            hit = nvalid & (frontier[nbr] > 0)
             anyhit = jnp.any(hit, axis=1)
             first = jnp.argmax(hit, axis=1)
             pcand = nbr[jnp.arange(r), first]
@@ -236,7 +250,7 @@ def _bottom_up_step(dg: DeviceGraph, cfg: BFSConfig, st: BFSState):
     def chunk_cond(carry):
         return carry[0] < m
 
-    init = (jnp.int32(0), jnp.zeros(v, jnp.uint8), st.parent)
+    init = (jnp.int32(0), jnp.zeros(v, jnp.uint8), parent_in)
     _, next_flags, parent = jax.lax.while_loop(chunk_cond, chunk_body, init)
     return next_flags, parent
 
@@ -326,8 +340,8 @@ def _advance(dg: DeviceGraph, cfg: BFSConfig, ell, st: BFSState) -> BFSState:
     else:
         next_flags, parent = jax.lax.cond(
             bu,
-            lambda s: _bottom_up_step(dg, cfg, s),
-            lambda s: _top_down_step(dg, cfg, s),
+            lambda s: _bottom_up_step(dg, cfg, s.frontier, s.visited, s.parent),
+            lambda s: _top_down_step(dg, cfg, s.frontier, s.visited, s.parent),
             st)
         nf = fr.count(next_flags)
         mf = fr.edge_count(next_flags, dg.deg_ext[:-1])
@@ -372,12 +386,15 @@ def make_level_step(dg: DeviceGraph, cfg: BFSConfig, ell=None):
 def search_state(dg: DeviceGraph, root, cfg: BFSConfig, ell=None) -> BFSState:
     """Whole-search body: init + level loop, as a pure traceable function.
 
-    This is the public building block for compiled search plans: wrap it in
-    `jax.jit` (cfg static) for a one-root executable, or `jax.vmap` over
-    `root` for a batched multi-root executable (`repro.engine` does both and
-    caches the result). Under vmap the per-level `lax.cond` lowers to a
-    select, so every level pays both directions' work — correct, and still a
-    single fused program for the whole batch.
+    This is the public building block for compiled one-root search plans:
+    wrap it in `jax.jit` (cfg static) for a whole-search executable whose
+    per-level `lax.cond` is a real branch (`repro.engine`'s unbatched
+    Graph500 mode). `jax.vmap` over `root` also works but is the WRONG way
+    to batch: under vmap the per-level cond lowers to a select, so every
+    lane pays both directions' work every level and the batch runs until
+    its slowest member finishes — batched multi-root queries should use the
+    cohort model (`init_batch`/`make_batch_step` below), which is what the
+    engine's batched fused path does.
 
     When `kernels_enabled(cfg)`, pass `ell` (degree-bucketed tiles from
     `repro.core.ell` / `GraphSession.ell_tiles`); it is closed over by the
@@ -397,8 +414,285 @@ def search_state(dg: DeviceGraph, root, cfg: BFSConfig, ell=None) -> BFSState:
 _bfs_jit = jax.jit(search_state, static_argnums=(2,))
 
 
+# ------------------------------------------------- batched cohort traversal --
+#
+# Batch-native multi-root search: structure-of-arrays `[B, ...]` state, the
+# direction decision as per-lane DATA, and one step executable per direction
+# *cohort* per level. Under `vmap`-of-whole-search the per-level `lax.cond`
+# lowers to a select, so every lane executes BOTH directions every level and
+# the batch runs until its slowest member finishes; here each level
+# partitions the batch into a top-down cohort, a bottom-up cohort, and a
+# finished cohort, and each direction kernel runs ONCE over its masked
+# cohort. Lanes outside a cohort (including pow2-bucket pad lanes, which
+# start inactive) contribute zero frontier/row mass, so they cost no
+# traversal work. The host-side per-level loop lives in
+# `repro.engine.level_loop.CohortBatchBackend`; this module provides the
+# traceable pieces (`init_batch`, `make_batch_step`, `batch_scalars`).
+
+BATCH_VARIANTS = ("td", "bu", "mixed")
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class BatchState:
+    """SoA state for a fused batch of B concurrent single-partition searches.
+
+    `bu_mode` holds the direction each lane will take on the NEXT step
+    (decided at the end of the previous step from the same carried nf/mf/mu
+    statistics the single-root `_advance` reads at step start — the
+    decisions coincide lane-for-lane). `active` gates every cohort mask:
+    a finished or pad lane is in no cohort and does no traversal work.
+    `used_td`/`used_bu` record the cohort sizes of the step that produced
+    this state (the per-level direction-split observability hook).
+    """
+    visited: jax.Array    # uint8[B, V]
+    frontier: jax.Array   # uint8[B, V]
+    parent: jax.Array     # int32[B, V], INT_MAX = undiscovered
+    level: jax.Array      # int32[B, V], INT_MAX = undiscovered
+    cur_level: jax.Array  # int32 scalar: shared level counter (synchronous)
+    active: jax.Array     # bool[B]: lane still traversing
+    bu_mode: jax.Array    # bool[B]: NEXT step's direction per lane
+    bu_steps: jax.Array   # int32[B]: bottom-up rounds taken per lane
+    mu: jax.Array         # int32[B]: unvisited edge mass per lane
+    nf: jax.Array         # int32[B]: frontier vertex count per lane
+    mf: jax.Array         # int32[B]: frontier edge mass per lane
+    used_td: jax.Array    # int32 scalar: top-down cohort size of LAST step
+    used_bu: jax.Array    # int32 scalar: bottom-up cohort size of LAST step
+
+    def tree_flatten(self):
+        return ((self.visited, self.frontier, self.parent, self.level,
+                 self.cur_level, self.active, self.bu_mode, self.bu_steps,
+                 self.mu, self.nf, self.mf, self.used_td, self.used_bu), None)
+
+    @classmethod
+    def tree_unflatten(cls, aux, leaves):
+        return cls(*leaves)
+
+
+def init_batch(dg: DeviceGraph, cfg: BFSConfig, roots, active) -> BatchState:
+    """Batched `init_state` with an activity mask.
+
+    `roots` is int32[B] (pad lanes may repeat any valid id); `active` is
+    bool[B]. Inactive (pad) lanes get an empty frontier, no visited root,
+    and INT_MAX parent/level everywhere: they traverse nothing and report
+    zero reached vertices. Active lanes match `init_state` bitwise. The
+    first step's per-lane direction is decided here, from the same inputs
+    the single-root path's first `_advance` sees.
+    """
+    v = dg.num_vertices
+    b = roots.shape[0]
+    roots = roots.astype(jnp.int32)
+    active = active.astype(jnp.bool_)
+    lanes = jnp.arange(b)
+    on = active.astype(jnp.uint8)
+    visited = jnp.zeros((b, v), jnp.uint8).at[lanes, roots].max(on)
+    parent = jnp.full((b, v), INT_MAX, jnp.int32).at[lanes, roots].min(
+        jnp.where(active, roots, INT_MAX))
+    level = jnp.full((b, v), INT_MAX, jnp.int32).at[lanes, roots].min(
+        jnp.where(active, 0, INT_MAX))
+    total_e = dg.deg_ext.sum(dtype=jnp.int32)
+    rdeg = dg.deg_ext[roots]
+    mu = jnp.where(active, total_e - rdeg, 0)
+    nf = jnp.where(active, 1, 0).astype(jnp.int32)
+    mf = jnp.where(active, rdeg, 0)
+    bu, bu_steps = _decide_direction_batch(
+        dg, cfg, jnp.zeros(b, jnp.bool_), jnp.zeros(b, jnp.int32), mu, nf, mf)
+    return BatchState(visited, visited, parent, level, jnp.int32(0), active,
+                      bu, bu_steps, mu, nf, mf, jnp.int32(0), jnp.int32(0))
+
+
+def _decide_direction_batch(dg: DeviceGraph, cfg: BFSConfig, bu_mode,
+                            bu_steps, mu, nf, mf):
+    """Vectorized `_decide_direction`: per-lane next direction + bu counter."""
+    v = dg.num_vertices
+    e = dg.num_directed_edges
+    if cfg.heuristic == "topdown":
+        return jnp.zeros_like(bu_mode), bu_steps
+    if cfg.heuristic == "bottomup":
+        return jnp.ones_like(bu_mode), bu_steps
+    if cfg.heuristic == "beamer":
+        go_down = ~bu_mode & (mf.astype(jnp.float32)
+                              > mu.astype(jnp.float32) / cfg.alpha)
+        go_up = bu_mode & (nf.astype(jnp.float32) < v / cfg.beta)
+        bu = (bu_mode | go_down) & ~go_up
+        return bu, jnp.where(bu, bu_steps + 1, 0)
+    go_down = ~bu_mode & (mf.astype(jnp.float32) > cfg.gamma * e)
+    stay_down = bu_mode & (bu_steps < cfg.fixed_bu_steps)
+    bu = go_down | stay_down
+    return bu, jnp.where(bu, bu_steps + 1, 0)
+
+
+def _top_down_step_batch(dg: DeviceGraph, cfg: BFSConfig, frontier, visited,
+                         parent, mask):
+    """XLA push over the top-down cohort: lanes outside `mask` get a zeroed
+    frontier, so they contribute zero edge slots to the batched while-loop
+    (its trip count is the max edge mass over the COHORT, not the batch)."""
+    masked = frontier * mask[:, None].astype(frontier.dtype)
+    return jax.vmap(
+        lambda f, vis, par: _top_down_step(dg, cfg, f, vis, par))(
+            masked, visited, parent)
+
+
+def _bottom_up_step_batch(dg: DeviceGraph, cfg: BFSConfig, frontier, visited,
+                          parent, mask):
+    """XLA pull over the bottom-up cohort: masked-out lanes compact an empty
+    row queue and contribute zero chunk iterations."""
+    return jax.vmap(
+        lambda f, vis, par, m: _bottom_up_step(dg, cfg, f, vis, par, m))(
+            frontier, visited, parent, mask)
+
+
+def _top_down_step_kernels_batch(dg: DeviceGraph, cfg: BFSConfig, ell,
+                                 frontier, visited, parent, mask):
+    """Kernel push over the top-down cohort: one `topdown_batch` invocation
+    per ELL bucket serves every lane; masked lanes carry zero degrees and
+    their tile blocks skip the visited-gather entirely."""
+    b, v = frontier.shape
+    next_flags = jnp.zeros((b, v), jnp.uint8)
+    pcand = jnp.full((b, v), INT_MAX, jnp.int32)
+    for rows, deg, nbrs in ell:
+        act = mask[:, None] & (frontier[:, rows] > 0)
+        act_deg = jnp.where(act, deg[None, :], 0)
+        fresh = K.topdown_batch(act_deg, nbrs, visited)      # uint8[B, R, W]
+        dst = jnp.clip(nbrs, 0, v - 1)                       # lane-invariant
+        next_flags = next_flags.at[:, dst].max(fresh)
+        src = jnp.broadcast_to(rows[:, None], nbrs.shape)
+        pcand = pcand.at[:, dst].min(
+            jnp.where(fresh > 0, src[None], INT_MAX))
+    parent = jnp.where(next_flags > 0, jnp.minimum(parent, pcand), parent)
+    return next_flags, parent
+
+
+def _bottom_up_step_kernels_batch(dg: DeviceGraph, cfg: BFSConfig, ell,
+                                  frontier, visited, parent, mask):
+    """Kernel pull over the bottom-up cohort: one `bottomup_batch` invocation
+    per ELL bucket; masked lanes exit after zero slabs."""
+    b, v = frontier.shape
+    next_flags = jnp.zeros((b, v), jnp.uint8)
+    for rows, deg, nbrs in ell:
+        act = mask[:, None] & (visited[:, rows] == 0)
+        act_deg = jnp.where(act, deg[None, :], 0)
+        found, par = K.bottomup_batch(act_deg, nbrs, frontier,
+                                      slab=min(cfg.bu_slab, nbrs.shape[1]))
+        next_flags = next_flags.at[:, rows].max(found)
+        parent = parent.at[:, rows].min(jnp.where(found > 0, par, INT_MAX))
+    return next_flags, parent
+
+
+def _advance_batch(dg: DeviceGraph, cfg: BFSConfig, ell, variant: str,
+                   st: BatchState) -> BatchState:
+    """One cohort level: at most one top-down plus one bottom-up pass, each
+    over its masked cohort — never both per lane.
+
+    `variant` selects which cohorts this executable contains: the host
+    driver dispatches "td" / "bu" when a level's batch is single-direction
+    (the traced program then contains NO code for the other direction) and
+    "mixed" when both cohorts are non-empty.
+    """
+    bu = st.bu_mode
+    td_mask = st.active & ~bu
+    bu_mask = st.active & bu
+    use_kernels = kernels_enabled(cfg)
+    b, v = st.frontier.shape
+    next_flags = jnp.zeros((b, v), jnp.uint8)
+    parent = st.parent
+    if variant in ("td", "mixed"):
+        if use_kernels:
+            flags, parent = _top_down_step_kernels_batch(
+                dg, cfg, ell, st.frontier, st.visited, parent, td_mask)
+        else:
+            flags, parent = _top_down_step_batch(
+                dg, cfg, st.frontier, st.visited, parent, td_mask)
+        next_flags = jnp.maximum(next_flags, flags)
+    if variant in ("bu", "mixed"):
+        if use_kernels:
+            flags, parent = _bottom_up_step_kernels_batch(
+                dg, cfg, ell, st.frontier, st.visited, parent, bu_mask)
+        else:
+            flags, parent = _bottom_up_step_batch(
+                dg, cfg, st.frontier, st.visited, parent, bu_mask)
+        next_flags = jnp.maximum(next_flags, flags)
+    if use_kernels:
+        _, nf, mf = K.frontier_fused_batch(next_flags, dg.deg_ext[:-1])
+    else:
+        nf = jnp.sum(next_flags, axis=1, dtype=jnp.int32)
+        mf = jnp.sum(jnp.where(next_flags > 0, dg.deg_ext[:-1][None, :], 0),
+                     axis=1, dtype=jnp.int32)
+    cur = st.cur_level + 1
+    visited = jnp.maximum(st.visited, next_flags)
+    level = jnp.where(next_flags > 0, cur, st.level)
+    mu = st.mu - mf
+    max_levels = cfg.max_levels or dg.num_vertices
+    active = st.active & (nf > 0) & (cur < max_levels)
+    bu2, steps2 = _decide_direction_batch(dg, cfg, bu, st.bu_steps, mu, nf, mf)
+    return BatchState(visited, next_flags, parent, level, cur, active,
+                      bu2, steps2, mu, nf, mf,
+                      jnp.sum(td_mask.astype(jnp.int32)),
+                      jnp.sum(bu_mask.astype(jnp.int32)))
+
+
+def reachable_variants(cfg: BFSConfig) -> tuple[str, ...]:
+    """Step variants `_decide_direction_batch` can actually produce.
+
+    The forced heuristics pin every lane to one direction, so only that
+    variant's executable can ever be dispatched — compiling the others
+    would be pure warm-up cost (the adaptive heuristics need all three).
+    """
+    if cfg.heuristic == "topdown":
+        return ("td",)
+    if cfg.heuristic == "bottomup":
+        return ("bu",)
+    return BATCH_VARIANTS
+
+
+def make_batch_step(dg: DeviceGraph, cfg: BFSConfig, variant: str, ell=None):
+    """Raw traceable `BatchState -> BatchState` for one cohort step variant.
+
+    `variant` is one of `BATCH_VARIANTS` ("td" | "bu" | "mixed"); the engine
+    compiles all three per (config, batch bucket) and the driver backend
+    dispatches whichever matches the level's cohort occupancy. Jit-wrap the
+    result yourself (`repro.engine` caches it on the session).
+    """
+    if variant not in BATCH_VARIANTS:
+        raise ValueError(f"variant must be one of {BATCH_VARIANTS}, "
+                         f"got {variant!r}")
+    ell = _resolve_ell(dg, cfg, ell)
+    return functools.partial(_advance_batch, dg, cfg, ell, variant)
+
+
+def batch_scalars(st: BatchState) -> dict:
+    """Per-level host-sync payload for the batched driver backend.
+
+    Everything the host needs each level — loop condition, next-step cohort
+    occupancy (the executable-variant choice), last-step direction split,
+    and the per-lane statistics for streaming/observability — in ONE
+    `jax.device_get`-able dict. `nf`/`mf` count ACTIVE lanes only, so the
+    driver's `nf > 0` loop condition terminates when every lane finished
+    even if finished lanes still hold a non-empty final frontier.
+    """
+    act = st.active
+    i32 = jnp.int32
+    return dict(
+        nf=jnp.sum(jnp.where(act, st.nf, 0), dtype=i32),
+        mf=jnp.sum(jnp.where(act, st.mf, 0), dtype=i32),
+        cur=st.cur_level,
+        bu=jnp.any(act & st.bu_mode),
+        td_next=jnp.sum((act & ~st.bu_mode).astype(i32)),
+        bu_next=jnp.sum((act & st.bu_mode).astype(i32)),
+        active_n=jnp.sum(act.astype(i32)),
+        used_td=st.used_td,
+        used_bu=st.used_bu,
+        nf_lanes=st.nf,
+        mf_lanes=st.mf,
+        bu_lanes=st.bu_mode,
+        active_lanes=act,
+    )
+
+
 def finalize(st: BFSState) -> tuple[np.ndarray, np.ndarray]:
-    """Sentinels -> Graph500 conventions (-1 for unreached)."""
+    """Sentinels -> Graph500 conventions (-1 for unreached).
+
+    Works on a `BFSState` ([V] arrays) or a `BatchState` ([B, V] arrays)."""
     parent = np.asarray(st.parent)
     level = np.asarray(st.level)
     parent = np.where(parent == INT_MAX, -1, parent)

@@ -11,9 +11,10 @@ surface; in short:
 """
 from repro.engine.engine import (AUTO_MAX_PARTS, AUTO_SHARD_MIN_EDGES,
                                  BACKENDS, Engine, QueryPlan)
-from repro.engine.level_loop import (BSPStepBackend, LevelDriver,
-                                     QueryCancelled, QueryControl,
-                                     QueryDeadlineExceeded, SingleStepBackend)
+from repro.engine.level_loop import (BSPStepBackend, CohortBatchBackend,
+                                     LevelDriver, QueryCancelled,
+                                     QueryControl, QueryDeadlineExceeded,
+                                     SingleStepBackend)
 from repro.engine.queueing import (BoundedPriorityQueue, ClientCaps,
                                    QueueClosed, QueueFull, ServerOverloaded)
 from repro.engine.result import TraversalResult, edges_traversed_from_levels
@@ -23,6 +24,7 @@ from repro.engine.session import GraphSession
 __all__ = ["Engine", "GraphSession", "TraversalResult", "BACKENDS",
            "AUTO_SHARD_MIN_EDGES", "AUTO_MAX_PARTS", "QueryPlan",
            "LevelDriver", "SingleStepBackend", "BSPStepBackend",
+           "CohortBatchBackend",
            "QueryControl", "QueryCancelled", "QueryDeadlineExceeded",
            "BFSServer", "QueryHandle", "ServerOverloaded", "ServerClosed",
            "BoundedPriorityQueue", "ClientCaps", "QueueFull", "QueueClosed",

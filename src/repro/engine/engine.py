@@ -8,9 +8,13 @@
 Three backends, auto-selected from partition count and available devices
 (explicit `backend=` always wins):
 
-* ``fused``   — single-partition whole-search XLA program
-  (`repro.core.bfs.search_state`), batched over roots with `vmap`: a batch
-  of B roots is ONE compiled program and one dispatch.
+* ``fused``   — single-partition path. A batch of B roots runs the
+  batch-native cohort model (`repro.core.bfs.init_batch`/`make_batch_step`
+  on the shared `LevelDriver`): per level the batch splits into a top-down
+  cohort, a bottom-up cohort, and a finished cohort, and each direction
+  pass runs ONCE over its masked cohort — with per-level streaming and
+  cancellation. Unbatched mode keeps one whole-search XLA program per root
+  (`repro.core.bfs.search_state`, the Graph500 measurement mode).
 * ``sharded`` — the paper's partitioned BSP search under `shard_map`
   (`repro.core.hybrid_bfs.make_hybrid_search`), pipelined over roots: all
   queries are dispatched asynchronously against one cached executable and
@@ -38,9 +42,10 @@ from repro.core.bfs import BFSConfig
 from repro.core.graph import Graph
 from repro.core.hybrid_bfs import (HybridConfig, finalize_hybrid,
                                    make_hybrid_search, make_hybrid_stepper)
-from repro.engine.level_loop import (BSPStepBackend, LevelDriver,
-                                     QueryCancelled, QueryControl,
-                                     QueryDeadlineExceeded, SingleStepBackend)
+from repro.engine.level_loop import (BSPStepBackend, CohortBatchBackend,
+                                     LevelDriver, QueryCancelled,
+                                     QueryControl, QueryDeadlineExceeded,
+                                     SingleStepBackend)
 from repro.engine.result import TraversalResult, edges_traversed_from_levels
 from repro.engine.session import GraphSession
 
@@ -191,16 +196,19 @@ class Engine:
             times roots one at a time against the same cached executable —
             the Graph500 measurement mode.
           validate: check every parent tree against the python oracle.
-          on_level: stepper backend only — streaming callback invoked as
+          on_level: streaming callback invoked as
             `on_level(batch_index, stats_row)` the moment each level's stats
             land on the host, before the search finishes (the server's
-            result-streaming hook).
+            result-streaming hook). Stepper backend: one row per root per
+            level (`batch_index` = root position). Batched fused (cohort)
+            backend: one batch-level row per level, `batch_index == -1`.
           control: cooperative `QueryControl` (cancel event + absolute
             deadline). Checked before dispatch on every backend, between
-            roots on the per-root paths, and once per level on the stepper
-            backend (the `LevelDriver` hook); aborts raise the typed
-            `QueryCancelled` / `QueryDeadlineExceeded` carrying partial
-            per-level stats.
+            roots on the per-root paths, and once per level on the
+            driver-backed paths — the stepper backend and the batched
+            fused (cohort) path (the `LevelDriver` hook); aborts raise the
+            typed `QueryCancelled` / `QueryDeadlineExceeded` carrying
+            partial per-level stats.
 
         Returns a `TraversalResult`; compile time is never inside the timed
         region (the first query per (config, backend, batch shape) warms the
@@ -218,9 +226,11 @@ class Engine:
         """Run a query whose knobs were already resolved by `plan()`."""
         backend, n_parts = plan.backend, plan.n_parts
         hcfg = plan.hcfg
-        if on_level is not None and backend != "stepper":
+        if on_level is not None and not (
+                backend == "stepper" or (backend == "fused" and batched)):
             raise ValueError(
-                f"on_level streaming needs backend='stepper', got {backend!r}")
+                "on_level streaming needs backend='stepper' or the batched "
+                f"fused path, got {backend!r} (batched={batched})")
         if control is not None:
             control.check()
         roots_arr = self._normalize_roots(roots)
@@ -236,7 +246,7 @@ class Engine:
                 edges_traversed=np.empty((0,), np.int64))
 
         if backend == "fused":
-            res = self._bfs_fused(roots_arr, hcfg, batched, control)
+            res = self._bfs_fused(roots_arr, hcfg, batched, control, on_level)
         elif backend == "sharded":
             res = self._bfs_sharded(roots_arr, hcfg, n_parts, plan.strategy,
                                     plan.hub_edge_fraction, batched, control)
@@ -250,62 +260,107 @@ class Engine:
         return res
 
     # --------------------------------------------------------- fused path --
+    #
+    # Batched fused queries run the batch-native cohort model: SoA [B, V]
+    # state on a `LevelDriver` over `CohortBatchBackend`, one direction
+    # kernel per cohort per level (never both directions per lane — the
+    # old vmap-of-whole-search lowered its per-level `lax.cond` to a select
+    # that executed both), finished and pad lanes out of every cohort, and
+    # the driver's per-level streaming/cancellation hooks for free.
+    # Unbatched (Graph500) mode keeps a whole-search executable per root —
+    # a scalar-root program whose `lax.cond` stays a real branch.
 
-    def _fused_executable(self, bcfg: BFSConfig, batch: int):
-        """Cached vmap-batched whole-search executable for a batch bucket.
+    def _fused_single_executable(self, bcfg: BFSConfig):
+        """Cached scalar-root whole-search executable (Graph500 mode)."""
+        dg = self.session.device_graph()
+        ell = self.session.ell_tiles() if B.kernels_enabled(bcfg) else None
+        key = ("fused", bcfg, 1)
+        fn = self.session.executable(
+            key, lambda: lambda r: B.search_state(dg, r, bcfg, ell=ell))
+        return key, fn
 
-        The key holds the *bucket*, not the raw batch size: ragged batches
-        round up to `_bucket_batch` and pad their roots, so e.g. batches of
-        3/5/7 all hit one size-8 executable (`trace_count` proves it).
+    def _cohort_backend(self, bcfg: BFSConfig,
+                        bucket: int) -> CohortBatchBackend:
+        """Cohort driver backend for a batch bucket, executables cached.
+
+        Five executables per (config, bucket): init, the three step
+        variants (td / bu / mixed — the host dispatches whichever matches
+        each level's cohort occupancy), and the sync payload; a forced
+        single-direction heuristic only compiles its one reachable
+        variant. The key holds the *bucket*: ragged batches round up to
+        `_bucket_batch` and pad their roots with inactive lanes, so e.g.
+        batches of 3/5/7 all share one size-8 executable set
+        (`trace_count` proves it).
         """
         dg = self.session.device_graph()
         ell = self.session.ell_tiles() if B.kernels_enabled(bcfg) else None
-        bucket = _bucket_batch(batch)
-        key = ("fused", bcfg, bucket)
+        init = self.session.executable(
+            ("cohort", bcfg, bucket, "init"),
+            lambda: lambda roots, active: B.init_batch(dg, bcfg, roots,
+                                                       active))
+        steps = {
+            var: self.session.executable(
+                ("cohort", bcfg, bucket, var),
+                lambda v=var: B.make_batch_step(dg, bcfg, v, ell=ell))
+            for var in B.reachable_variants(bcfg)
+        }
+        scalars = self.session.executable(("cohort", bcfg, bucket, "scalars"),
+                                          lambda: B.batch_scalars)
+        return CohortBatchBackend(init, steps, scalars, dg.num_vertices,
+                                  bucket)
 
-        def build():
-            def batched_search(roots_dev):
-                return jax.vmap(
-                    lambda r: B.search_state(dg, r, bcfg, ell=ell))(roots_dev)
-            return batched_search
-
-        return key, self.session.executable(key, build), bucket
-
-    def _bfs_fused(self, roots_arr, hcfg, batched,
-                   control=None) -> TraversalResult:
+    def _bfs_fused(self, roots_arr, hcfg, batched, control=None,
+                   on_level=None) -> TraversalResult:
         e_und = self.graph.num_undirected_edges
         if batched:
             b = len(roots_arr)
-            key, fn, bucket = self._fused_executable(hcfg.bfs, b)
-            # Pad to the bucket with a repeat of the first root (a valid
-            # query whose padded results are sliced off below).
+            bucket = _bucket_batch(b)
+            backend = self._cohort_backend(hcfg.bfs, bucket)
+            # Pad to the bucket with a repeat of the first root; pad lanes
+            # start INACTIVE (masked out of every cohort at level 0), so
+            # padding costs no traversal work — they are placeholders for
+            # the executable's batch shape, not extra queries.
             padded = np.full(bucket, roots_arr[0], dtype=np.int64)
             padded[:b] = roots_arr
             dev_roots = jnp.asarray(padded, jnp.int32)
-            self.session.warm(key, lambda: fn(dev_roots).frontier)
+            active0 = jnp.asarray(np.arange(bucket) < b)
+            self.session.warm(("cohort_warm", hcfg.bfs, bucket),
+                              lambda: backend.warm((dev_roots, active0)))
+            if control is not None:
+                control.check()      # the warm-up may outlive a deadline
+            driver = LevelDriver(backend)
+            cb = (lambda row: on_level(-1, row)) if on_level else None
             t0 = time.perf_counter()
-            st = fn(dev_roots)
-            jax.block_until_ready(st.frontier)
+            try:
+                parent, level, rows, _timings = driver.run(
+                    (dev_roots, active0), cb, control)
+            except (QueryCancelled, QueryDeadlineExceeded) as e:
+                # Batch-level rows -> the engine's per-root convention (one
+                # entry describing the whole merged batch).
+                e.per_level_stats = [e.per_level_stats]
+                raise
             dt = time.perf_counter() - t0
-            parent, level = B.finalize(st)
             parent, level = parent[:b], level[:b]
             per_root = np.full(b, dt / b)
-            return TraversalResult(roots_arr, parent, level, _tree_depth(level),
-                                   dt, per_root, "fused", 1, e_und)
-        # Graph500 mode: one root at a time against a batch-1 executable.
-        key, fn, _bucket = self._fused_executable(hcfg.bfs, 1)
+            return TraversalResult(roots_arr, parent, level,
+                                   _tree_depth(level), dt, per_root,
+                                   "fused", 1, e_und,
+                                   batch_level_stats=rows)
+        # Graph500 mode: one root at a time against a scalar-root
+        # whole-search executable (real per-level branch, one dispatch).
+        key, fn = self._fused_single_executable(hcfg.bfs)
         self.session.warm(
-            key, lambda: fn(jnp.asarray(roots_arr[:1], jnp.int32)).frontier)
+            key, lambda: fn(jnp.int32(roots_arr[0])).frontier)
         parents, levels, per_root = [], [], []
         for r in roots_arr:
             if control is not None:
                 control.check()
             t0 = time.perf_counter()
-            st = fn(jnp.asarray([r], jnp.int32))
+            st = fn(jnp.int32(r))
             jax.block_until_ready(st.frontier)
             per_root.append(time.perf_counter() - t0)
             p, l = B.finalize(st)
-            parents.append(p[0]); levels.append(l[0])
+            parents.append(p); levels.append(l)
         per_root = np.asarray(per_root)
         level = np.stack(levels)
         return TraversalResult(roots_arr, np.stack(parents), level,

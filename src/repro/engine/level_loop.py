@@ -15,7 +15,8 @@ The driver owns everything the four loops duplicated:
   backend splits them — the BSP timing breakdown of Fig. 3);
 * **one host sync per level**: the loop condition, the stats row, the
   direction flag, and the termination bound all read from a single
-  four-scalar `jax.device_get` (this is the only such site in the repo);
+  `jax.device_get` — four scalars, or one dict on the extended protocol
+  (this is the only such site in the repo);
 * the stats-row schema (level, direction, frontier_size, frontier_edges,
   seconds, compute_s, exchange_s) and the `on_level` streaming hook;
 * the termination bound, checked *before* stepping: no BFS level can exceed
@@ -41,6 +42,21 @@ Backends only describe *what* runs per level, never the loop itself:
         def exchange(state, work) -> state      # identity when fused in
         def scalars(state) -> (nf, mf, cur, bu) # device scalars, ONE get
         def finalize(state) -> (parent, level)  # host numpy
+
+Extended (batched-cohort) protocol, opted into per backend:
+
+* `scalars(state)` may return a DICT of device values instead of the
+  4-tuple; it must contain "nf"/"mf"/"cur"/"bu" and may add anything else
+  (cohort occupancy, per-lane vectors) — still ONE `jax.device_get`.
+* `needs_sync = True` makes the driver call `compute(state, sync)` with the
+  host dict from the most recent sync, so the backend can pick which
+  compiled step to dispatch from cohort occupancy without a second device
+  round-trip (`CohortBatchBackend` selects its td/bu/mixed executable
+  this way).
+* `row_extra(pre, post)` (optional) merges backend-specific fields into
+  the level's stats row — `pre` is the sync entering the step (per-lane
+  frontier stats, the directions the step used), `post` the one after it
+  (realized cohort sizes). It may override "direction" (e.g. "mixed").
 """
 from __future__ import annotations
 
@@ -205,6 +221,93 @@ class BSPStepBackend:
         return finalize_hybrid(self._plan, parent_new, level_new)
 
 
+class CohortBatchBackend:
+    """Batched cohort backend: SoA `[B, ...]` state, per-level cohort dispatch.
+
+    Drives `repro.core.bfs`'s batched pieces (`init_batch`,
+    `make_batch_step` x td/bu/mixed, `batch_scalars`) as a `LevelDriver`
+    backend: each level the host reads the next-step cohort occupancy from
+    the (single) sync and dispatches exactly ONE step executable — the
+    "td"/"bu" variant when the whole batch agrees (its traced program
+    contains no code for the other direction), "mixed" when both cohorts
+    are non-empty (one masked pass per direction over its cohort). Never
+    both directions per lane, which is the point: under `vmap` the
+    per-level `lax.cond` lowered to a select and every lane paid both.
+
+    `dispatched` counts executable dispatches per variant — the host-side
+    ledger tests use to prove a direction-mixed batch costs at most one
+    top-down plus one bottom-up pass per level regardless of batch size.
+
+    `root` for `init`/`run` is the pair `(roots, active)`: int32[B] device
+    roots (pad lanes repeat a valid id) and the bool[B] activity mask that
+    keeps pad lanes out of every cohort from level 0.
+    """
+
+    has_exchange = False
+    needs_sync = True
+
+    def __init__(self, init_fn: Callable, step_fns: dict,
+                 scalars_fn: Callable, num_vertices: int, bucket: int):
+        self._init = init_fn
+        self._steps = dict(step_fns)        # reachable variants only
+        self._scalars = scalars_fn
+        self.depth_bound = max(num_vertices - 1, 0)
+        self.bucket = bucket
+        self.dispatched = {v: 0 for v in self._steps}
+
+    @staticmethod
+    def variant_for(td_next: int, bu_next: int) -> str:
+        if td_next and bu_next:
+            return "mixed"
+        return "bu" if bu_next else "td"
+
+    def init(self, root):
+        roots, active = root
+        return self._init(roots, active)
+
+    def compute(self, state, sync):
+        variant = self.variant_for(int(sync["td_next"]), int(sync["bu_next"]))
+        self.dispatched[variant] += 1
+        return self._steps[variant](state)
+
+    def exchange(self, state, work):
+        return work
+
+    def scalars(self, state):
+        return self._scalars(state)
+
+    def finalize(self, state):
+        return B.finalize(state)
+
+    def warm(self, root):
+        """Trace/compile every executable this backend can dispatch.
+
+        Runs init once and each step variant once on the init state (the
+        results are discarded); returns the outputs so the caller can block
+        on them. Without this, the first level that flips the batch into a
+        new variant would pay its compile inside the timed/served region.
+        """
+        state = self.init(root)
+        outs = [state, self._scalars(state)]
+        outs += [self._steps[v](state) for v in self._steps]
+        return outs
+
+    def row_extra(self, pre, post) -> dict:
+        used_td, used_bu = int(post["used_td"]), int(post["used_bu"])
+        return dict(
+            direction=("mixed" if used_td and used_bu
+                       else ("bu" if used_bu else "td")),
+            td_lanes=used_td,
+            bu_lanes=used_bu,
+            active_lanes=int(pre["active_n"]),
+            batch=self.bucket,
+            lane_frontier=[int(x) for x in pre["nf_lanes"]],
+            lane_edges=[int(x) for x in pre["mf_lanes"]],
+            lane_direction=["bu" if x else "td" for x in pre["bu_lanes"]],
+            lane_active=[bool(x) for x in pre["active_lanes"]],
+        )
+
+
 # ------------------------------------------------------------------- driver --
 
 
@@ -218,11 +321,17 @@ class LevelDriver:
         """THE per-level host sync — the repo's single `device_get` site.
 
         Loop condition, stats row, direction flag, and the depth bound all
-        come from this one four-scalar read; separate `int()`/`bool()`
+        come from this one read — a four-scalar tuple, or a dict carrying
+        the same keys plus backend extras (the batched cohort backend's
+        occupancy counts and per-lane vectors); separate `int()`/`bool()`
         reads would each issue their own device round-trip.
         """
-        nf, mf, cur, bu = jax.device_get(self.backend.scalars(state))
-        return int(nf), int(mf), int(cur), bool(bu)
+        host = jax.device_get(self.backend.scalars(state))
+        if not isinstance(host, dict):
+            nf, mf, cur, bu = host
+            host = dict(nf=nf, mf=mf, cur=cur, bu=bu)
+        return (int(host["nf"]), int(host["mf"]), int(host["cur"]),
+                bool(host["bu"]), host)
 
     def run(self, root: int, on_level: Optional[Callable] = None,
             control: Optional[QueryControl] = None):
@@ -236,12 +345,14 @@ class LevelDriver:
         outside the timed device work, the refactor's cost ledger.
         """
         b = self.backend
+        needs_sync = getattr(b, "needs_sync", False)
+        row_extra = getattr(b, "row_extra", None)
         t_run = time.perf_counter()
         state = b.init(root)
         jax.block_until_ready(state)
         init_s = time.perf_counter() - t_run
         stats: list = []
-        nf, mf, cur, bu = self._sync(state)
+        nf, mf, cur, bu, pre = self._sync(state)
         while nf > 0 and cur < b.depth_bound:
             if control is not None:
                 try:
@@ -250,21 +361,23 @@ class LevelDriver:
                     e.per_level_stats = stats
                     raise
             t0 = time.perf_counter()
-            work = b.compute(state)
+            work = b.compute(state, pre) if needs_sync else b.compute(state)
             jax.block_until_ready(work)
             t1 = time.perf_counter()
             state = b.exchange(state, work)
             jax.block_until_ready(state)
             t2 = time.perf_counter()
-            nf2, mf2, cur, bu = self._sync(state)
+            nf2, mf2, cur, bu, post = self._sync(state)
             row = dict(level=cur, seconds=t2 - t0, compute_s=t1 - t0,
                        exchange_s=(t2 - t1) if b.has_exchange else 0.0,
                        direction="bu" if bu else "td",
                        frontier_size=nf, frontier_edges=mf)
+            if row_extra is not None:
+                row.update(row_extra(pre, post))
             stats.append(row)
             if on_level:
                 on_level(row)
-            nf, mf = nf2, mf2
+            nf, mf, pre = nf2, mf2, post
         t0 = time.perf_counter()
         parent, level = b.finalize(state)
         agg_s = time.perf_counter() - t0

@@ -100,7 +100,10 @@ class BoundedPriorityQueue:
                   key: Optional[Callable[[Any], Any]] = None,
                   max_items: int = 1,
                   weight: Optional[Callable[[Any], int]] = None,
-                  max_weight: Optional[int] = None) -> list:
+                  max_weight: Optional[int] = None,
+                  window_s: float = 0.0,
+                  extendable: Optional[Callable[[Any], bool]] = None,
+                  stop_wait: Optional[Callable[[list], bool]] = None) -> list:
         """Pop one item (blocking), then greedily coalesce compatible ones.
 
         After the first (blocking) pop, keeps popping while the queue head
@@ -108,6 +111,20 @@ class BoundedPriorityQueue:
         taken, and the summed `weight` stays <= `max_weight`. Only
         *consecutive in priority order* items coalesce — batching never
         reorders work past an incompatible or higher-priority query.
+
+        `window_s > 0` adds a dynamic batching window: when the queue drain
+        left the batch below its bounds, the call keeps waiting up to
+        `window_s` seconds for more compatible items to ARRIVE and folds
+        them in, instead of dispatching the moment the queue runs dry —
+        latency traded for batch occupancy. The window never delays a
+        batch that is already full, or blocked by an incompatible head,
+        or whose first item `extendable` (when given) rejects — e.g. a
+        streamed query that can never coalesce should not idle out the
+        window. Queue closure cuts the window short (the already-popped
+        items are returned and still served), and so does `stop_wait`
+        (polled on every wakeup, at most ~50 ms apart): the server passes
+        a cancellation/deadline check over the popped batch, so an aborted
+        query does not pin its worker for the rest of the window.
 
         Raises `TimeoutError` if no item arrives in `timeout` seconds and
         `QueueClosed` once the queue is closed *and* drained.
@@ -131,16 +148,43 @@ class BoundedPriorityQueue:
             if key is None:
                 return batch
             kfirst = key(first)
-            total_w = weight(first) if weight else 1
-            while self._heap and len(batch) < max_items:
-                head = self._heap[0][2]
-                if key(head) != kfirst:
-                    break
-                w = weight(head) if weight else 1
-                if max_weight is not None and total_w + w > max_weight:
-                    break
-                batch.append(self._pop_locked())
-                total_w += w
+            total_w = [weight(first) if weight else 1]
+
+            def extend() -> bool:
+                """Fold in compatible head items; False once un-extendable."""
+                while self._heap:
+                    if len(batch) >= max_items:
+                        return False
+                    head = self._heap[0][2]
+                    if key(head) != kfirst:
+                        return False
+                    w = weight(head) if weight else 1
+                    if max_weight is not None and total_w[0] + w > max_weight:
+                        return False
+                    batch.append(self._pop_locked())
+                    total_w[0] += w
+                # Drained the queue: still extendable only while both the
+                # item and weight budgets have room (weights are >= 1, so a
+                # saturated weight budget can never admit another item —
+                # waiting a window out on it would be pure added latency).
+                return (len(batch) < max_items
+                        and (max_weight is None or total_w[0] < max_weight))
+
+            more = extend()
+            if (window_s > 0 and more
+                    and (extendable is None or extendable(first))):
+                wdeadline = time.monotonic() + window_s
+                while more and not self._closed:
+                    remaining = wdeadline - time.monotonic()
+                    if remaining <= 0:
+                        break
+                    if stop_wait is not None and stop_wait(batch):
+                        break
+                    # Bounded slices so stop_wait (cancel/deadline on the
+                    # popped items) is noticed without anyone having to
+                    # notify this condition.
+                    self._not_empty.wait(min(remaining, 0.05))
+                    more = extend()
             return batch
 
     def remove(self, pred: Callable[[Any], bool]) -> list:

@@ -62,6 +62,13 @@ class TraversalResult:
         host-side cost outside the timed device work).
       edges_traversed: int64[B] undirected edges actually traversed per root
         (Graph500 accounting; the engine fills it from the reached set).
+      batch_level_stats: batched fused (cohort) path only — ONE flat list of
+        per-level rows describing the whole batch: the driver schema plus
+        `direction` in {"td","bu","mixed"}, cohort sizes
+        (`td_lanes`/`bu_lanes`/`active_lanes`/`batch`), and per-lane
+        vectors (`lane_frontier`, `lane_edges`, `lane_direction`,
+        `lane_active` — pad lanes included, always inactive). Dropped by
+        `split` (the rows describe the merged dispatch, not any slice).
     """
 
     roots: np.ndarray
@@ -76,6 +83,7 @@ class TraversalResult:
     per_level_stats: Optional[list] = None
     timings: Optional[list] = None
     edges_traversed: Optional[np.ndarray] = None
+    batch_level_stats: Optional[list] = None
 
     @property
     def batch_size(self) -> int:

@@ -11,10 +11,14 @@ per-root throughput. This module is that serving layer:
   depth is a hard cap, so overload *rejects* with a typed
   `ServerOverloaded` instead of stalling submitters;
 * **automatic micro-batching**: consecutive queued queries with equal
-  `QueryPlan`s are coalesced into one fused dispatch (the engine pads the
-  merged batch to its pow2 bucket, so coalesced sizes reuse the same
-  compiled executable — `Engine._fused_executable` via `Engine.bfs_plan`),
-  then split back per client with `TraversalResult.split`;
+  `QueryPlan`s are coalesced into one fused cohort dispatch (the engine
+  pads the merged batch to its pow2 bucket with inactive lanes, so
+  coalesced sizes reuse the same compiled executable set —
+  `Engine._cohort_backend` via `Engine.bfs_plan` — and each direction
+  runs at most once per level, not once per member), then split back per
+  client with `TraversalResult.split`; `batch_window_ms` optionally holds
+  an idle worker a bounded window to coalesce late-arriving compatible
+  queries;
 * **result streaming**: `submit(..., stream=True)` runs on the stepper
   backend and pushes each level's frontier stats to the handle the moment
   they land on the host — `handle.stream()` iterates levels while the
@@ -62,9 +66,11 @@ class QueryHandle:
     `result(timeout)` blocks for the final `TraversalResult` (re-raising the
     query's failure, `TimeoutError` on expiry). For streamed queries,
     `stream(timeout)` iterates per-level stats rows as the worker produces
-    them — each row is the stepper's dict (level, direction, frontier_size,
-    frontier_edges, seconds, ...) plus the `root` it belongs to — and ends
-    when the search finishes; `result()` is available afterwards.
+    them — each row is the driver's dict (level, direction, frontier_size,
+    frontier_edges, seconds, ...) plus the `root` it belongs to (stepper
+    backend; one row per root per level) or `root=-1` with per-lane vectors
+    (fused cohort backend; one row per level for the whole batch) — and
+    ends when the search finishes; `result()` is available afterwards.
 
     `cancel()` aborts the query: still-queued queries are withdrawn
     immediately (freeing their queue-depth and admission slots); an
@@ -184,6 +190,12 @@ class BFSServer:
         completion; beyond it `ServerOverloaded(reason="client_inflight")`.
       max_batch_queries / max_batch_roots: micro-batching bounds — at most
         this many compatible queries / total roots fuse into one dispatch.
+      batch_window_ms: dynamic batching window — after popping a
+        coalescible query from an otherwise-drained queue, the worker waits
+        up to this long for more compatible queries to arrive before
+        dispatching (0 = the old opportunistic queue-drain-only batching).
+        Bounded latency traded for batch occupancy; full batches, streamed
+        queries, and incompatible heads never wait.
       autostart: spawn worker threads immediately (False lets tests fill
         queues deterministically before serving begins; call `start()`).
     """
@@ -192,10 +204,15 @@ class BFSServer:
                  = None, *, max_queue_depth: int = 64,
                  max_inflight_per_client: int = 16,
                  max_batch_queries: int = 16, max_batch_roots: int = 64,
+                 batch_window_ms: float = 0.0,
                  autostart: bool = True):
+        if batch_window_ms < 0:
+            raise ValueError(
+                f"batch_window_ms must be >= 0, got {batch_window_ms}")
         self.max_queue_depth = max_queue_depth
         self.max_batch_queries = max_batch_queries
         self.max_batch_roots = max_batch_roots
+        self.batch_window_ms = batch_window_ms
         self._caps = ClientCaps(max_inflight_per_client)
         self._engines: Dict[str, Engine] = {}
         self._queues: Dict[str, BoundedPriorityQueue] = {}
@@ -330,9 +347,11 @@ class BFSServer:
         if stream:
             if backend == "auto":
                 backend = "stepper"
-            elif backend != "stepper":
+            elif backend not in ("stepper", "fused"):
                 raise ValueError(
-                    f"stream=True runs on the stepper backend, got {backend!r}")
+                    "stream=True runs on the stepper backend (per-root rows) "
+                    f"or the fused cohort backend (batch rows), got "
+                    f"{backend!r}")
         if deadline is not None and deadline < 0:
             raise ValueError(f"deadline must be >= 0 seconds, got {deadline}")
         plan = eng.plan(cfg, backend=backend, n_parts=n_parts,
@@ -394,7 +413,12 @@ class BFSServer:
                 batch = q.get_batch(key=lambda it: it.batch_key,
                                     max_items=self.max_batch_queries,
                                     weight=lambda it: len(it.roots),
-                                    max_weight=self.max_batch_roots)
+                                    max_weight=self.max_batch_roots,
+                                    window_s=self.batch_window_ms / 1e3,
+                                    extendable=lambda it: not it.stream,
+                                    stop_wait=lambda popped: any(
+                                        it.control.poll() is not None
+                                        for it in popped))
             except QueueClosed:
                 return
             self._execute(name, eng, batch)
@@ -427,11 +451,14 @@ class BFSServer:
         try:
             first = batch[0]
             if first.stream:
+                # Stepper streams per-root rows (b = root index); the fused
+                # cohort path streams batch-level rows (b == -1, per-lane
+                # vectors inside the row) — `root=-1` marks the latter.
                 h = first.handle
                 res = eng.bfs_plan(
                     first.roots, first.plan, control=first.control,
                     on_level=lambda b, row, _r=first.roots: h._push(
-                        dict(row, root=int(_r[b]))))
+                        dict(row, root=int(_r[b]) if b >= 0 else -1)))
                 results = [res]
             else:
                 # Micro-batch: one fused dispatch for every coalesced query

@@ -102,3 +102,83 @@ def bottomup_pallas(deg: jax.Array, nbrs: jax.Array, frontier: jax.Array,
         ],
         interpret=interpret,
     )(deg, nbrs, frontier)
+
+
+# ------------------------------------------------------------ batched (lane) --
+#
+# Cohort variant for batched multi-root traversal: the grid grows a lane
+# axis, the ELL tile is SHARED across lanes (index map ignores the lane),
+# and each lane scans against its own frontier. Per-lane masking rides the
+# degrees: a lane outside the bottom-up cohort (top-down, finished, or pad)
+# has all-zero degrees, so its while-loop exits after ZERO slabs — the same
+# block-granularity early exit the single-lane kernel uses for settled rows
+# extends to whole lanes, which is what makes one invocation per cohort per
+# level cheaper than one per query.
+
+
+def _bottomup_batch_kernel(deg_ref, nbrs_ref, frontier_ref, found_ref,
+                           parent_ref, *, slab: int, int_max: int):
+    deg = deg_ref[0]                         # [rblk] (lane-masked)
+    rblk, wmax = nbrs_ref.shape
+    v = frontier_ref.shape[1]
+    nslabs = wmax // slab
+
+    def cond(c):
+        s, found, _ = c
+        return jnp.any(jnp.logical_not(found) & (deg > s * slab)) & (s < nslabs)
+
+    def body(c):
+        s, found, par = c
+        nbr = jax.lax.dynamic_slice(nbrs_ref[...], (0, s * slab), (rblk, slab))
+        cols = s * slab + jax.lax.broadcasted_iota(jnp.int32, (rblk, slab), 1)
+        valid = (cols < deg[:, None]) & jnp.logical_not(found)[:, None]
+        safe = jnp.clip(nbr, 0, v - 1)
+        fbits = jnp.take(frontier_ref[0], safe.reshape(-1),
+                         axis=0).reshape(rblk, slab)
+        hit = valid & (fbits > 0)
+        anyhit = jnp.any(hit, axis=1)
+        first = jnp.argmax(hit, axis=1)
+        pcand = jnp.take_along_axis(safe, first[:, None], axis=1)[:, 0]
+        par = jnp.where(jnp.logical_not(found) & anyhit, pcand, par)
+        return s + 1, found | anyhit, par
+
+    found0 = jnp.zeros((rblk,), jnp.bool_)
+    par0 = jnp.full((rblk,), int_max, jnp.int32)
+    _, found, par = jax.lax.while_loop(cond, body, (jnp.int32(0), found0, par0))
+    found_ref[0] = found.astype(jnp.uint8)
+    parent_ref[0] = par
+
+
+def bottomup_batch_pallas(deg: jax.Array, nbrs: jax.Array, frontier: jax.Array,
+                          *, slab: int = 32, rblk: int = 128,
+                          int_max: int = 2**31 - 1,
+                          interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Returns (found uint8[B, R], parent int32[B, R]); deg [B, R]
+    lane-masked, nbrs [R, W] shared, frontier [B, V] per lane."""
+    b, r = deg.shape
+    w = nbrs.shape[1]
+    assert r % rblk == 0, f"rows {r} must pad to a multiple of rblk {rblk}"
+    wpad = (-w) % slab
+    if wpad:
+        nbrs = jnp.pad(nbrs, ((0, 0), (0, wpad)))
+    v = frontier.shape[1]
+    kernel = functools.partial(_bottomup_batch_kernel, slab=slab,
+                               int_max=int_max)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, r // rblk),
+        in_specs=[
+            pl.BlockSpec((1, rblk), lambda l, i: (l, i)),
+            pl.BlockSpec((rblk, nbrs.shape[1]), lambda l, i: (i, 0)),
+            pl.BlockSpec((1, v), lambda l, i: (l, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rblk), lambda l, i: (l, i)),
+            pl.BlockSpec((1, rblk), lambda l, i: (l, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, r), jnp.uint8),
+            jax.ShapeDtypeStruct((b, r), jnp.int32),
+        ],
+        interpret=interpret,
+    )(deg, nbrs, frontier)

@@ -73,3 +73,65 @@ def frontier_fused_pallas(flags: jax.Array, deg: jax.Array, *,
         interpret=interpret,
     )(flags, deg)
     return packed, nf[0], mf[0]
+
+
+# ------------------------------------------------------------ batched (lane) --
+#
+# Cohort variant for batched multi-root traversal: one pass emits every
+# lane's packed bitmap + (nf, mf) statistics. The degree array is shared
+# across lanes (index map ignores the lane axis); per-lane scalar outputs
+# use the same revisiting-accumulator idiom, re-initialized at each lane's
+# first flag block (the grid iterates lane-major, so block 0 of a lane
+# always precedes its other blocks).
+
+
+def _fused_batch_kernel(flags_ref, deg_ref, packed_ref, nf_ref, mf_ref):
+    i = pl.program_id(1)
+    flags = flags_ref[0].astype(jnp.uint32)          # [blk] this lane's chunk
+    deg = deg_ref[...]                                # [blk] shared degrees
+    blk32 = flags.shape[0]
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (blk32 // 32, 32), 1)
+    packed_ref[0] = jnp.sum(flags.reshape(-1, 32) << shifts, axis=1,
+                            dtype=jnp.uint32)
+    on = flags > 0
+    nf = jnp.sum(on.astype(jnp.int32))
+    mf = jnp.sum(jnp.where(on, deg, 0), dtype=jnp.int32)
+
+    @pl.when(i == 0)
+    def _init():
+        nf_ref[...] = jnp.zeros_like(nf_ref)
+        mf_ref[...] = jnp.zeros_like(mf_ref)
+
+    nf_ref[...] += nf
+    mf_ref[...] += mf
+
+
+def frontier_fused_batch_pallas(flags: jax.Array, deg: jax.Array, *,
+                                blk_words: int = 256,
+                                interpret: bool = True):
+    """Returns (packed uint32[B, V/32], nf int32[B], mf int32[B]);
+    flags [B, V] per lane, deg [V] shared. V must be a multiple of
+    32*blk_words (ops wrapper pads)."""
+    b, v = flags.shape
+    blk = blk_words * 32
+    assert v % blk == 0, f"V={v} must be a multiple of {blk}"
+    packed, nf, mf = pl.pallas_call(
+        _fused_batch_kernel,
+        grid=(b, v // blk),
+        in_specs=[
+            pl.BlockSpec((1, blk), lambda l, i: (l, i)),
+            pl.BlockSpec((blk,), lambda l, i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, blk_words), lambda l, i: (l, i)),
+            pl.BlockSpec((1, 1), lambda l, i: (l, 0)),
+            pl.BlockSpec((1, 1), lambda l, i: (l, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, v // 32), jnp.uint32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+            jax.ShapeDtypeStruct((b, 1), jnp.int32),
+        ],
+        interpret=interpret,
+    )(flags, deg)
+    return packed, nf[:, 0], mf[:, 0]

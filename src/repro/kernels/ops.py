@@ -34,6 +34,14 @@ def _pad_rows(x, mult, fill=0):
     return x, pad
 
 
+def _pad_axis1(x, mult, fill=0):
+    pad = (-x.shape[1]) % mult
+    if pad:
+        cfg = [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2)
+        x = jnp.pad(x, cfg, constant_values=fill)
+    return x, pad
+
+
 @functools.partial(jax.jit, static_argnames=("slab", "rblk", "interpret"))
 def bottomup(deg, nbrs, frontier, *, slab=32, rblk=128, interpret=None):
     """Bottom-up slab scan: (found uint8[R], parent int32[R]).
@@ -88,6 +96,77 @@ def topdown(deg, nbrs, visited, *, cblk=128, interpret=None):
         deg_p, nbrs_p, visited, cblk=cblk,
         interpret=_auto_interpret(interpret))
     return fresh[:c], dst[:c]
+
+
+# ----------------------------------------------------------- batched (lane) --
+#
+# Cohort variants for batched multi-root traversal: the lane axis rides the
+# kernel grid, the ELL tile / degree array is shared across lanes, and lane
+# membership in a cohort is encoded as zeroed degrees (masked lanes cost no
+# traversal work — zero bottom-up slabs, a skipped top-down gather). One
+# invocation serves the whole cohort, however many queries are in it.
+
+
+@functools.partial(jax.jit, static_argnames=("slab", "rblk", "interpret"))
+def bottomup_batch(deg, nbrs, frontier, *, slab=32, rblk=128, interpret=None):
+    """Batched bottom-up slab scan: (found uint8[B, R], parent int32[B, R]).
+
+    `deg` is int32[B, R] — the per-lane cohort-masked degrees; `nbrs`
+    int32[R, W] is the shared ELL tile; `frontier` uint8[B, V] per lane.
+    Ragged handling mirrors `bottomup` (row pad to an `rblk` multiple with
+    degree 0, W pad to a `slab` multiple inside the kernel wrapper, empty
+    tiles short-circuit).
+    """
+    b, r = deg.shape
+    if r == 0 or b == 0:
+        return (jnp.zeros((b, 0), jnp.uint8), jnp.zeros((b, 0), jnp.int32))
+    rblk = min(rblk, _ceil_to(r, 8))
+    deg_p, _ = _pad_axis1(deg, rblk)
+    nbrs_p, _ = _pad_rows(nbrs, rblk)
+    found, parent = _bu.bottomup_batch_pallas(
+        deg_p, nbrs_p, frontier, slab=slab, rblk=rblk,
+        interpret=_auto_interpret(interpret))
+    return found[:, :r], parent[:, :r]
+
+
+@functools.partial(jax.jit, static_argnames=("cblk", "interpret"))
+def topdown_batch(deg, nbrs, visited, *, cblk=128, interpret=None):
+    """Batched top-down expansion check: fresh uint8[B, C, W].
+
+    `deg` is int32[B, C] cohort-masked, `nbrs` int32[C, W] shared,
+    `visited` uint8[B, V] per lane. The lane-invariant destination ids
+    (`clip(nbrs, 0, V-1)`) are the caller's to compute once — only the
+    per-lane freshness mask comes back.
+    """
+    b, c = deg.shape
+    w = nbrs.shape[1]
+    if c == 0 or b == 0:
+        return jnp.zeros((b, c, w), jnp.uint8)
+    cblk = min(cblk, _ceil_to(c, 8))
+    deg_p, _ = _pad_axis1(deg, cblk)
+    nbrs_p, _ = _pad_rows(nbrs, cblk)
+    fresh = _td.topdown_batch_pallas(
+        deg_p, nbrs_p, visited, cblk=cblk,
+        interpret=_auto_interpret(interpret))
+    return fresh[:, :c]
+
+
+@functools.partial(jax.jit, static_argnames=("blk_words", "interpret"))
+def frontier_fused_batch(flags, deg, *, blk_words=256, interpret=None):
+    """Batched fused pack+count+edge-mass:
+    (packed uint32[B, ceil(V/32)], nf int32[B], mf int32[B])."""
+    b, v = flags.shape
+    if v == 0 or b == 0:
+        return (jnp.zeros((b, 0), jnp.uint32), jnp.zeros(b, jnp.int32),
+                jnp.zeros(b, jnp.int32))
+    blk_words = min(blk_words, _ceil_to((v + 31) // 32, 8))
+    blk = blk_words * 32
+    flags_p, _ = _pad_axis1(flags, blk)
+    deg_p, _ = _pad_rows(deg, blk)
+    packed, nf, mf = _ff.frontier_fused_batch_pallas(
+        flags_p, deg_p, blk_words=blk_words,
+        interpret=_auto_interpret(interpret))
+    return packed[:, : (v + 31) // 32], nf, mf
 
 
 @functools.partial(jax.jit, static_argnames=("blk", "logit_cap", "interpret"))

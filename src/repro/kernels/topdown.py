@@ -55,3 +55,59 @@ def topdown_pallas(deg: jax.Array, nbrs: jax.Array, visited: jax.Array,
         ],
         interpret=interpret,
     )(deg, nbrs, visited)
+
+
+# ------------------------------------------------------------ batched (lane) --
+#
+# Cohort variant for batched multi-root traversal: one kernel invocation
+# serves the whole top-down cohort of a query batch. The grid grows a lane
+# axis; the adjacency tile is SHARED across lanes (its index map ignores the
+# lane), so the batch never replicates the graph. Per-lane activity arrives
+# as the masked `deg` — lanes outside the cohort (bottom-up or finished,
+# including pad lanes) carry all-zero degrees, and `pl.when` skips the whole
+# visited-gather for their blocks: a finished lane costs zero traversal work.
+# The shared `dst = clip(nbrs)` is lane-invariant and stays in the wrapper.
+
+
+def _topdown_batch_kernel(deg_ref, nbrs_ref, visited_ref, fresh_ref):
+    deg = deg_ref[0]                          # [cblk] (lane-masked)
+    nbrs = nbrs_ref[...]                      # [cblk, w] (shared tile)
+    cblk, w = nbrs.shape
+    v = visited_ref.shape[1]
+    lane_active = jnp.any(deg > 0)
+
+    @pl.when(lane_active)
+    def _expand():
+        visited = visited_ref[0]              # [v] this lane's visited bytes
+        cols = jax.lax.broadcasted_iota(jnp.int32, (cblk, w), 1)
+        valid = cols < deg[:, None]
+        safe = jnp.clip(nbrs, 0, v - 1)
+        vbits = jnp.take(visited, safe.reshape(-1), axis=0).reshape(cblk, w)
+        fresh_ref[0] = (valid & (vbits == 0)).astype(jnp.uint8)
+
+    @pl.when(jnp.logical_not(lane_active))
+    def _skip():
+        fresh_ref[0] = jnp.zeros((cblk, w), jnp.uint8)
+
+
+def topdown_batch_pallas(deg: jax.Array, nbrs: jax.Array, visited: jax.Array,
+                         *, cblk: int = 128,
+                         interpret: bool = True) -> jax.Array:
+    """Returns fresh uint8[B, C, W]; deg [B, C] lane-masked, nbrs [C, W]
+    shared, visited [B, V] per lane."""
+    b, c = deg.shape
+    w = nbrs.shape[1]
+    assert c % cblk == 0, f"rows {c} must pad to a multiple of cblk {cblk}"
+    v = visited.shape[1]
+    return pl.pallas_call(
+        _topdown_batch_kernel,
+        grid=(b, c // cblk),
+        in_specs=[
+            pl.BlockSpec((1, cblk), lambda l, i: (l, i)),
+            pl.BlockSpec((cblk, w), lambda l, i: (i, 0)),
+            pl.BlockSpec((1, v), lambda l, i: (l, 0)),
+        ],
+        out_specs=[pl.BlockSpec((1, cblk, w), lambda l, i: (l, i, 0))],
+        out_shape=[jax.ShapeDtypeStruct((b, c, w), jnp.uint8)],
+        interpret=interpret,
+    )(deg, nbrs, visited)[0]

@@ -204,6 +204,53 @@ def run_cancel_probe(server: BFSServer, *, levels: int = 2048,
     )
 
 
+def run_fused_cancel_probe(server: BFSServer, *, levels: int = 2048,
+                           client: str = "fused-cancel",
+                           timeout: float = 600) -> dict:
+    """Prove an in-flight FUSED batch aborts at level granularity.
+
+    The cohort fused path runs on the level driver, so a batched dispatch —
+    not just a streamed stepper query — honours cancellation between
+    levels. Registers a long-path session, measures one full fused batch as
+    the baseline, then cancels a second one right after its first streamed
+    level: it must abort within a level (partial batch rows on the handle)
+    and cost a small fraction of the full traversal.
+    """
+    from repro.core import graph as G
+    name = "__fused_cancel_probe__"
+    path = G.from_edges(np.arange(levels), np.arange(1, levels + 1),
+                        levels + 1)
+    server.register(name, path)
+    roots = [0, 1]
+    # Warm-up pays the cohort compile outside both measured windows.
+    server.submit(name, roots, client=client).result(timeout=timeout)
+    t0 = time.perf_counter()
+    server.submit(name, roots, client=client).result(timeout=timeout)
+    full_wall = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    h = server.submit(name, roots, backend="fused", stream=True,
+                      client=client)
+    next(h.stream(timeout=timeout))       # provably in flight, not queued
+    h.cancel()
+    try:
+        h.result(timeout=timeout)
+        cancelled = False
+    except QueryCancelled:
+        cancelled = True
+    cancel_wall = time.perf_counter() - t0
+    levels_done = (len(h.partial_stats[0])
+                   if h.partial_stats and h.partial_stats[0] else 0)
+    return dict(
+        levels=levels, batch=len(roots), cancelled=cancelled,
+        levels_before_abort=levels_done,
+        abort_level_fraction=levels_done / levels,
+        full_wall_s=full_wall, cancel_wall_s=cancel_wall,
+        wall_fraction=cancel_wall / max(full_wall, 1e-9),
+        inflight_after=server._caps.inflight(client),
+    )
+
+
 def build_server(n_graphs: int, scale: int, *, edgefactor: int = 16,
                  seed: int = 0, **server_kw):
     """(server, {name: graph}) over `n_graphs` RMAT sessions."""
@@ -228,6 +275,10 @@ def main(argv=None):
     ap.add_argument("--queue-depth", type=int, default=64)
     ap.add_argument("--inflight", type=int, default=16,
                     help="per-client in-flight cap")
+    ap.add_argument("--batch-window-ms", type=float, default=0.0,
+                    help="dynamic batching window: wait up to this long to "
+                         "coalesce compatible queries into one dispatch "
+                         "(0 = opportunistic queue-drain batching only)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--no-validate", action="store_true")
     ap.add_argument("--cancel-probe", action="store_true",
@@ -238,7 +289,8 @@ def main(argv=None):
     server, graphs = build_server(
         args.graphs, args.scale, edgefactor=args.edgefactor, seed=args.seed,
         max_queue_depth=args.queue_depth,
-        max_inflight_per_client=args.inflight)
+        max_inflight_per_client=args.inflight,
+        batch_window_ms=args.batch_window_ms)
     probe = None
     try:
         m = run_load(server, graphs, clients=args.clients,

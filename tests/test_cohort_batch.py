@@ -1,0 +1,253 @@
+"""Batched cohort traversal (the batch-native fused path).
+
+Acceptance gates for the cohort execution model:
+
+* bitwise parity (parents, levels) of the batched path vs the per-root
+  fused oracle on DIRECTION-MIXED batches — one composite graph holding a
+  star, a long path, and an RMAT blob as components, so concurrent lanes
+  genuinely disagree about direction per level;
+* per-lane per-level stats parity vs the stepper backend's rows;
+* the single-dispatch proof: a direction-mixed batch executes exactly ONE
+  step executable per level (at most one top-down plus one bottom-up pass,
+  each over its masked cohort — never both per lane), with kernel
+  invocation counts independent of batch size;
+* pad lanes (pow2-bucket padding) are inactive from level 0 and traverse
+  zero edges;
+* all-finished early exit: the batch stops when its last live lane does,
+  not at the depth bound;
+* level-granularity cancellation of an in-flight fused batch.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import bfs as CB
+from repro.core import graph as G, ref
+from repro.core.bfs import BFSConfig
+from repro.engine import (Engine, GraphSession, LevelDriver, QueryCancelled,
+                          QueryControl)
+
+INT_MAX = np.iinfo(np.int32).max
+
+
+def _undirected_edges(g):
+    src = np.repeat(np.arange(g.num_vertices, dtype=np.int64), g.degrees)
+    dst = g.indices.astype(np.int64)
+    keep = src < dst
+    return src[keep], dst[keep]
+
+
+def _composite():
+    """One graph, disjoint components with opposite direction profiles:
+    a star, a long path (top-down every level), an RMAT blob (flips
+    bottom-up mid-search), and one isolated vertex. Roots in each give a
+    direction-mixed batch whose lanes also finish at very different
+    levels."""
+    star_n, path_n = 40, 60
+    rmat = G.rmat(7, seed=3)
+    rs, rd = _undirected_edges(rmat)
+    off_path = star_n
+    off_rmat = star_n + path_n
+    src = np.concatenate([np.zeros(star_n - 1, np.int64),
+                          off_path + np.arange(path_n - 1), off_rmat + rs])
+    dst = np.concatenate([np.arange(1, star_n),
+                          off_path + np.arange(1, path_n), off_rmat + rd])
+    n = off_rmat + rmat.num_vertices + 1          # +1: isolated vertex
+    g = G.from_edges(src, dst, n)
+    roots = dict(star_center=0, star_leaf=1, path_start=off_path,
+                 rmat_hub=off_rmat + int(np.argmax(rmat.degrees)),
+                 isolated=n - 1)
+    return g, roots
+
+
+COMPOSITE, ROOTS = _composite()
+MIXED_BATCH = [ROOTS["star_center"], ROOTS["path_start"], ROOTS["rmat_hub"],
+               ROOTS["isolated"]]
+
+
+@pytest.mark.parametrize("heuristic", ["paper", "beamer"])
+@pytest.mark.parametrize("kernels", [False, True], ids=["xla", "pallas"])
+def test_cohort_bitwise_matches_per_root_fused(heuristic, kernels):
+    """Acceptance: batched parents/levels are bitwise-identical to the
+    per-root fused oracle on a direction-mixed batch."""
+    cfg = BFSConfig(heuristic=heuristic, backend_kernels=kernels)
+    engine = Engine(COMPOSITE)
+    res_b = engine.bfs(MIXED_BATCH, cfg)                    # cohort path
+    res_1 = engine.bfs(MIXED_BATCH, cfg, batched=False)     # per-root oracle
+    np.testing.assert_array_equal(res_b.parent, res_1.parent)
+    np.testing.assert_array_equal(res_b.level, res_1.level)
+    for i, r in enumerate(MIXED_BATCH):
+        ref.validate_parents(COMPOSITE, int(r), res_b.parent[i],
+                             res_b.level[i])
+    # the batch genuinely mixed directions at some level
+    assert any(row["direction"] == "mixed"
+               for row in res_b.batch_level_stats), \
+        [row["direction"] for row in res_b.batch_level_stats]
+
+
+@pytest.mark.parametrize("kernels", [False, True], ids=["xla", "pallas"])
+def test_cohort_lane_stats_match_stepper_rows(kernels):
+    """Each lane's (level, direction, frontier size/edges) sequence in the
+    batch rows must equal the rows a solo stepper run of that root
+    produces."""
+    cfg = BFSConfig(backend_kernels=kernels)
+    engine = Engine(COMPOSITE)
+    res = engine.bfs(MIXED_BATCH, cfg)
+    rows = res.batch_level_stats
+    for i, r in enumerate(MIXED_BATCH):
+        solo = engine.bfs(int(r), cfg, backend="stepper").per_level_stats[0]
+        mine = [(row["level"], row["lane_direction"][i],
+                 row["lane_frontier"][i], row["lane_edges"][i])
+                for row in rows if row["lane_active"][i]]
+        want = [(s["level"], s["direction"], s["frontier_size"],
+                 s["frontier_edges"]) for s in solo]
+        assert mine == want, f"lane {i} (root {r})"
+
+
+def test_one_step_dispatch_per_level_and_kernel_count_independent_of_batch(
+        monkeypatch):
+    """Acceptance: a direction-mixed batch executes ONE step executable per
+    level — at most one top-down plus one bottom-up kernel pass (per ELL
+    bucket), NOT one per query: trace-time kernel invocation counts are
+    independent of the batch size."""
+    from repro.kernels import ops
+    calls = {"td": 0, "bu": 0}
+    orig_td, orig_bu = ops.topdown_batch, ops.bottomup_batch
+
+    def count_td(*a, **k):
+        calls["td"] += 1
+        return orig_td(*a, **k)
+
+    def count_bu(*a, **k):
+        calls["bu"] += 1
+        return orig_bu(*a, **k)
+
+    monkeypatch.setattr(ops, "topdown_batch", count_td)
+    monkeypatch.setattr(ops, "bottomup_batch", count_bu)
+
+    cfg = BFSConfig(backend_kernels=True)
+    session = GraphSession(COMPOSITE)
+    engine = Engine(session)
+    n_buckets = len(session.ell_tiles())
+    res = engine.bfs(MIXED_BATCH, cfg)
+    # Tracing the "td" and "mixed" variants each contains one topdown pass
+    # per bucket; "bu" and "mixed" one bottomup pass per bucket. No term
+    # scales with the number of lanes.
+    assert calls["td"] == 2 * n_buckets, (calls, n_buckets)
+    assert calls["bu"] == 2 * n_buckets, (calls, n_buckets)
+    # A second, differently ragged batch in the same bucket: zero new
+    # traces, so still zero per-query kernel invocations.
+    engine.bfs(MIXED_BATCH[:3], cfg)
+    assert calls["td"] == 2 * n_buckets and calls["bu"] == 2 * n_buckets
+    # Host-side ledger: exactly one step-executable dispatch per level, and
+    # the mixed variant actually ran.
+    backend = engine._cohort_backend(cfg, 8)
+    driver = LevelDriver(backend)
+    roots = np.full(8, MIXED_BATCH[0], np.int64)
+    roots[:len(MIXED_BATCH)] = MIXED_BATCH
+    parent, level, rows, _ = driver.run(
+        (jnp.asarray(roots, jnp.int32), jnp.asarray(np.arange(8) < 4)))
+    assert sum(backend.dispatched.values()) == len(rows)
+    assert backend.dispatched["mixed"] >= 1
+    np.testing.assert_array_equal(parent[:4], res.parent)
+    np.testing.assert_array_equal(level[:4], res.level)
+
+
+@pytest.mark.parametrize("kernels", [False, True], ids=["xla", "pallas"])
+def test_pad_lanes_are_inactive_and_traverse_nothing(kernels):
+    """Satellite: pow2-bucket pad lanes start inactive — empty frontier,
+    nothing visited, zero frontier edges at every level (the old path
+    repeated roots[0] and traversed the duplicate fully)."""
+    cfg = BFSConfig(backend_kernels=kernels)
+    dg = CB.DeviceGraph.from_graph(COMPOSITE)
+    roots = jnp.asarray([ROOTS["rmat_hub"]] * 8, jnp.int32)
+    active = jnp.asarray(np.arange(8) < 3)
+    st = CB.init_batch(dg, cfg, roots, active)
+    assert np.asarray(st.frontier)[3:].sum() == 0
+    assert np.asarray(st.visited)[3:].sum() == 0
+    assert (np.asarray(st.nf)[3:] == 0).all()
+    assert (np.asarray(st.level)[3:] == INT_MAX).all()
+    # end-to-end: every level's row shows pad lanes inactive with zero
+    # frontier mass — zero edges traversed by padding
+    res = Engine(COMPOSITE).bfs([ROOTS["rmat_hub"], ROOTS["star_center"],
+                                 ROOTS["path_start"]], cfg)
+    for row in res.batch_level_stats:
+        assert row["batch"] == 8
+        assert row["lane_active"][3:] == [False] * 5
+        assert row["lane_frontier"][3:] == [0] * 5
+        assert row["lane_edges"][3:] == [0] * 5
+
+
+def test_all_finished_early_exit():
+    """The batch stops when its last live lane finishes — finished lanes
+    (and the whole batch) never run to the depth bound."""
+    engine = Engine(COMPOSITE)
+    # star leaf: 3 rows (leaf->center, center->leaves, final empty round);
+    # isolated: 1 row. Batch must stop after 3, not V-1 = 228.
+    leaf = engine.bfs(int(ROOTS["star_leaf"]),
+                      backend="stepper").per_level_stats[0]
+    res = engine.bfs([ROOTS["star_leaf"], ROOTS["isolated"]])
+    rows = res.batch_level_stats
+    assert len(rows) == len(leaf) == 3
+    assert rows[0]["active_lanes"] == 2
+    assert rows[-1]["active_lanes"] == 1          # isolated lane exited first
+    only_isolated = engine.bfs([ROOTS["isolated"]])
+    assert len(only_isolated.batch_level_stats) == 1
+
+
+@pytest.mark.parametrize("kernels", [False, True], ids=["xla", "pallas"])
+def test_cohort_edgeless_graph(kernels):
+    g = G.from_edges(np.array([], np.int64), np.array([], np.int64), 9)
+    res = Engine(g).bfs([0, 4, 8], BFSConfig(backend_kernels=kernels))
+    for i, r in enumerate([0, 4, 8]):
+        assert res.level[i, r] == 0
+        assert (np.delete(res.level[i], r) == -1).all()
+        ref.validate_parents(g, r, res.parent[i], res.level[i])
+
+
+def test_forced_direction_heuristics_single_variant():
+    """heuristic="topdown"/"bottomup" plans only build (and dispatch) their
+    one reachable direction's executable — no warm-up compile of variants
+    the decision function can never produce."""
+    session = GraphSession(COMPOSITE)
+    engine = Engine(session)
+    for heur, used in (("topdown", "td"), ("bottomup", "bu")):
+        cfg = BFSConfig(heuristic=heur)
+        backend = engine._cohort_backend(cfg, 8)
+        assert set(backend.dispatched) == {used}
+        roots = np.full(8, MIXED_BATCH[0], np.int64)
+        roots[:4] = MIXED_BATCH
+        parent, level, rows, _ = LevelDriver(backend).run(
+            (jnp.asarray(roots, jnp.int32), jnp.asarray(np.arange(8) < 4)))
+        assert backend.dispatched == {used: len(rows)} and rows
+        for i, r in enumerate(MIXED_BATCH):
+            ref.validate_parents(COMPOSITE, int(r), parent[i], level[i])
+        keys = [k for k in session.cache_info()["trace_counts"]
+                if k[0] == "cohort" and k[1] == cfg]
+        # init + the single reachable variant + sync = 3 executables
+        assert {k[3] for k in keys} == {"init", used, "scalars"}
+
+
+def test_fused_batch_cancels_at_level_granularity():
+    """Streaming + cancellation on the fused path: an in-flight batched
+    dispatch aborts between levels, carrying the batch-level partial
+    rows."""
+    n = 500
+    path = G.from_edges(np.arange(n - 1), np.arange(1, n), n)
+    engine = Engine(path)
+    control = QueryControl()
+    seen = []
+
+    def on_level(b, row):
+        assert b == -1                    # batch-level rows
+        seen.append(row)
+        if row["level"] >= 3:
+            control.cancel()
+
+    with pytest.raises(QueryCancelled) as ei:
+        engine.bfs([0, 1], backend="fused", control=control,
+                   on_level=on_level)
+    rows = ei.value.per_level_stats[0]
+    assert 3 <= len(rows) < n - 1
+    assert rows == seen

@@ -15,6 +15,15 @@ def _fused_keys(session):
     return [k for k in session.cache_info()["trace_counts"] if k[0] == "fused"]
 
 
+def _cohort_keys(session):
+    return [k for k in session.cache_info()["trace_counts"]
+            if k[0] == "cohort"]
+
+
+# One cohort plan = init + 3 step variants (td/bu/mixed) + the sync payload.
+COHORT_EXECUTABLES = 5
+
+
 def test_batched_multiroot_matches_reference(medium_graph):
     g = medium_graph
     rng = np.random.default_rng(0)
@@ -28,25 +37,27 @@ def test_batched_multiroot_matches_reference(medium_graph):
 
 
 def test_batch_of_8_roots_single_trace(small_graph):
-    """Acceptance: a >=8-root batch compiles exactly once per (config,
-    backend) pair, and identical follow-up queries never retrace."""
+    """Acceptance: a >=8-root batch compiles its cohort executable set
+    exactly once per (config, bucket), and identical follow-up queries
+    never retrace anything."""
     session = GraphSession(small_graph)
     engine = Engine(session)
     cfg = BFSConfig(heuristic="paper")
     roots = np.arange(8)
     engine.bfs(roots, cfg)
-    keys = _fused_keys(session)
-    assert len(keys) == 1
-    assert session.trace_count(keys[0]) == 1
+    keys = _cohort_keys(session)
+    assert len(keys) == COHORT_EXECUTABLES, keys
+    assert all(session.trace_count(k) == 1 for k in keys)
     # same config + batch shape, different roots: pure cache hit
     engine.bfs(roots + 100, cfg)
     engine.bfs(roots, BFSConfig(heuristic="paper"))  # equal config, new object
-    assert session.trace_count(keys[0]) == 1
-    assert session.total_traces == 1
-    # a different config is a different plan: one more trace, old key untouched
+    assert all(session.trace_count(k) == 1 for k in keys)
+    assert session.total_traces == COHORT_EXECUTABLES
+    # a different config is a different plan: one more executable set,
+    # old keys untouched
     engine.bfs(roots, BFSConfig(heuristic="beamer"))
-    assert session.trace_count(keys[0]) == 1
-    assert session.total_traces == 2
+    assert all(session.trace_count(k) == 1 for k in keys)
+    assert session.total_traces == 2 * COHORT_EXECUTABLES
 
 
 def test_unbatched_mode_shares_one_executable(small_graph):

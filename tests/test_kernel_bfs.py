@@ -105,7 +105,9 @@ def test_ell_edgeless_graph_has_no_buckets():
 # ----------------------------------------------------- batched ragged roots --
 
 def test_ragged_batches_share_one_executable(small_graph):
-    """Acceptance: batches of 3/5/7 pad to one bucket-8 executable."""
+    """Acceptance: batches of 3/5/7 pad (with inactive lanes) to ONE
+    bucket-8 cohort executable set — init + td/bu/mixed steps + sync —
+    traced once each, however many ragged sizes run."""
     g = small_graph
     session = GraphSession(g)
     engine = Engine(session)
@@ -117,10 +119,11 @@ def test_ragged_batches_share_one_executable(small_graph):
         for i, r in enumerate(roots):
             ref.validate_parents(g, int(r), res.parent[i], res.level[i])
     keys = [k for k in session.cache_info()["trace_counts"]
-            if k[0] == "fused"]
-    assert len(keys) == 1, keys
-    assert session.trace_count(keys[0]) == 1
-    assert session.total_traces == 1
+            if k[0] == "cohort"]
+    assert len(keys) == 5, keys
+    assert {k[2] for k in keys} == {8}           # every ragged size: bucket 8
+    assert all(session.trace_count(k) == 1 for k in keys)
+    assert session.total_traces == 5
 
 
 def test_batch_bucket_boundaries():

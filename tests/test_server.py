@@ -139,9 +139,10 @@ def test_server_stress_concurrent_clients(two_graphs):
         load()
         assert not errors, errors
         traces1 = {n: s.total_traces for n, s in server.sessions.items()}
-        # every session compiled exactly one fused plan, however many
-        # queries/coalesced dispatch sizes it served
-        assert traces1 == {n: 1 for n in names}, traces1
+        # every session compiled exactly one cohort executable set (init +
+        # td/bu/mixed steps + sync), however many queries/coalesced
+        # dispatch sizes it served
+        assert traces1 == {n: 5 for n in names}, traces1
         load()                                  # identical second wave
         assert not errors, errors
         traces2 = {n: s.total_traces for n, s in server.sessions.items()}
@@ -205,9 +206,117 @@ def test_streamed_levels_match_final_stats(two_graphs):
         h2.result(timeout=300)
         with pytest.raises(ValueError):
             list(h2.stream())
-        # explicit non-stepper backend + stream is a synchronous error
+        # sharded backend + stream is a synchronous error
         with pytest.raises(ValueError):
-            server.submit("g", root, backend="fused", stream=True)
+            server.submit("g", root, backend="sharded", stream=True)
+    finally:
+        server.close()
+
+
+def test_fused_stream_yields_batch_rows(two_graphs):
+    """stream=True on the fused cohort backend yields one batch-level row
+    per level (root=-1, per-lane vectors) while the search runs."""
+    g = two_graphs["g0"]
+    server = BFSServer({"g": g})
+    try:
+        cand = np.flatnonzero(g.degrees > 0)
+        roots = cand[:3]
+        h = server.submit("g", roots, backend="fused", stream=True)
+        events = list(h.stream(timeout=300))
+        res = h.result(timeout=10)
+        assert res.backend == "fused"
+        assert events, "no levels streamed"
+        assert events == [dict(row, root=-1)
+                          for row in res.batch_level_stats]
+        for row in events:
+            assert row["direction"] in ("td", "bu", "mixed")
+            assert len(row["lane_frontier"]) == row["batch"] >= len(roots)
+        ref.validate_parents(g, int(roots[0]), res.parent[0], res.level[0])
+    finally:
+        server.close()
+
+
+def test_cancel_inflight_fused_batch_at_level_granularity():
+    """Acceptance: an in-flight FUSED batch (not just a streamed stepper
+    query) aborts at the next level boundary, with the batch-level partial
+    stats on the handle."""
+    n = 3000
+    server = BFSServer({"p": _path_graph(n)}, max_inflight_per_client=1)
+    try:
+        h = server.submit("p", [0, 1], backend="fused", stream=True,
+                          client="a")
+        it = h.stream(timeout=300)
+        next(it)                                 # provably in flight
+        h.cancel()
+        with pytest.raises(QueryCancelled):
+            h.result(timeout=60)
+        assert h.partial_stats is not None
+        assert 1 <= len(h.partial_stats[0]) < n - 1   # level granularity
+        # the admission slot freed within one level, not after ~n levels
+        h2 = server.submit("p", n - 1, client="a")
+        h2.result(timeout=300)
+        assert server.stats()["totals"]["cancelled"] == 1
+    finally:
+        server.close()
+
+
+def test_batch_window_coalesces_trickled_queries(two_graphs):
+    """With batch_window_ms, two compatible queries submitted a beat apart
+    coalesce into ONE dispatch even though the worker was idle when the
+    first arrived; with window 0 the first dispatches alone."""
+    g = two_graphs["g0"]
+    cand = np.flatnonzero(g.degrees > 0)
+
+    # Window leg: a wide window so a second query arriving a beat later
+    # must fold into the first, still-waiting batch. Weight saturation
+    # (4 + 4 == max_batch_roots) then closes the window immediately, so
+    # the passing path never sleeps the window out.
+    server = BFSServer({"g": g}, batch_window_ms=2000.0, max_batch_roots=8)
+    try:
+        server.submit("g", cand[:4], client="w").result(timeout=300)  # warm
+        h1 = server.submit("g", cand[:4], client="a")
+        time.sleep(0.05)
+        h2 = server.submit("g", cand[4:8], client="b")
+        r1, r2 = h1.result(timeout=300), h2.result(timeout=300)
+        assert r1.batch_size == 4 and r2.batch_size == 4
+        assert server.stats()["totals"]["batches"] - 1 == 1  # one + warm
+    finally:
+        server.close()
+
+    # Cancellation cuts the window short: a popped query waiting out the
+    # window must not pin the worker once cancelled — the wait polls the
+    # batch's controls (~50 ms slices), so the abort lands well before the
+    # window would have elapsed.
+    server = BFSServer({"g": g}, batch_window_ms=30_000.0, max_batch_roots=8)
+    try:
+        server.submit("g", cand[:4], client="w").result(timeout=300)  # warm
+        h = server.submit("g", cand[:4], client="a")
+        deadline = time.monotonic() + 60
+        while len(server._queues["g"]) and time.monotonic() < deadline:
+            time.sleep(0.001)                    # popped -> window waiting
+        t0 = time.monotonic()
+        h.cancel()
+        with pytest.raises(QueryCancelled):
+            h.result(timeout=30)
+        assert time.monotonic() - t0 < 5.0       # not the 30s window
+    finally:
+        server.close()
+
+    # Window-0 leg, deterministic: wait until the worker has POPPED the
+    # first query (queue depth 0 is only observable after get_batch
+    # returned — both read under the queue lock, and with no window there
+    # is no wait between pop and return), so the second query provably
+    # cannot join its batch.
+    server = BFSServer({"g": g}, batch_window_ms=0.0, max_batch_roots=8)
+    try:
+        server.submit("g", cand[:4], client="w").result(timeout=300)  # warm
+        h1 = server.submit("g", cand[:4], client="a")
+        deadline = time.monotonic() + 60
+        while len(server._queues["g"]) and time.monotonic() < deadline:
+            time.sleep(0.001)
+        h2 = server.submit("g", cand[4:8], client="b")
+        h1.result(timeout=300), h2.result(timeout=300)
+        assert server.stats()["totals"]["batches"] - 1 == 2  # two + warm
     finally:
         server.close()
 
@@ -305,7 +414,8 @@ def test_deadline_rejects_without_poisoning_plan_cache(two_graphs):
         assert session.total_traces == 0         # never reached the engine
         h2 = server.submit("g", [1], client="a")
         h2.result(timeout=300).validate(g)
-        assert session.total_traces == 1         # the normal single trace
+        # the normal cohort executable set, nothing extra from the expiry
+        assert session.total_traces == 5
         stats = server.stats()["totals"]
         assert stats["expired"] == 1 and stats["served"] == 1
     finally:
