@@ -28,13 +28,20 @@ Measures the `BFSServer` under synthetic concurrent load:
   unified `LevelDriver` loop's host-side cost per level
   (`timings.driver_overhead_s`), so the one-loop refactor's overhead is
   visible next to the per-level device times.
+* **restart probe** — `repro.launch.bfs_serve.run_restart_probe`: two
+  child processes attach the same graph against a shared artifact cache
+  (`--cache-dir`, default a fresh temp dir). Records `cold_start_s`,
+  `warm_start_s`, `hit_rate`; acceptance requires the warm restart to
+  perform ZERO retraces and start faster than the cold one.
 
 Usage: python benchmarks/bench_serve.py [--scale 12] [--smoke]
 """
 import argparse
 import json
 import os
+import shutil
 import sys
+import tempfile
 import time
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -82,6 +89,9 @@ def main(argv=None):
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--smoke", action="store_true",
                     help="CI-sized run: scale 9, fewer queries")
+    ap.add_argument("--cache-dir", default=None,
+                    help="artifact-cache dir for the restart probe "
+                         "(default: fresh temp dir, deleted afterwards)")
     ap.add_argument("--out", default=os.path.join(RESULTS, "BENCH_serve.json"))
     args = ap.parse_args(argv)
     if args.smoke:
@@ -90,7 +100,8 @@ def main(argv=None):
     import jax
     from repro.engine.engine import _bucket_batch
     from repro.launch.bfs_serve import (build_server, run_cancel_probe,
-                                        run_fused_cancel_probe, run_load)
+                                        run_fused_cancel_probe, run_load,
+                                        run_restart_probe)
 
     t0 = time.time()
     # max_batch_roots == bucket(batch): every coalesced dispatch lands in
@@ -126,7 +137,7 @@ def main(argv=None):
         # own session (the probe's streamed queries never coalesce and would
         # skew the coalescing ratio).
         stats = server.stats()
-        traces = {name: s.total_traces
+        traces = {name: s.total_materialized
                   for name, s in server.sessions.items()}
         cancel = run_cancel_probe(server,
                                   levels=512 if args.smoke else 2048)
@@ -135,6 +146,22 @@ def main(argv=None):
     finally:
         server.close()
     probe = _overload_probe(graphs[sorted(graphs)[0]])
+
+    # Cold-vs-warm restart accounting: two child processes share one
+    # artifact cache; the warm child must retrace nothing.
+    cache_dir = args.cache_dir
+    tmp_cache = cache_dir is None
+    if tmp_cache:
+        cache_dir = tempfile.mkdtemp(prefix="bench-serve-cache-")
+    try:
+        restart = run_restart_probe(cache_dir,
+                                    scale=9 if args.smoke
+                                    else min(args.scale, 10),
+                                    edgefactor=args.edgefactor,
+                                    seed=args.seed)
+    finally:
+        if tmp_cache:
+            shutil.rmtree(cache_dir, ignore_errors=True)
 
     out = dict(
         config=dict(graphs=args.graphs, scale=args.scale,
@@ -156,12 +183,17 @@ def main(argv=None):
         trace_proof=dict(
             per_session_traces=traces,
             note="cohort executable set (init + td/bu/mixed + sync) + "
-                 "stepper plan per session after full load; independent of "
-                 "query count == zero per-query recompiles"),
+                 "stepper plan per session after full load (traces + disk "
+                 "loads); independent of query count == zero per-query "
+                 "recompiles"),
         driver=driver,
         cancellation=cancel,
         fused_cancellation=fused_cancel,
         overload=probe,
+        cold_start=restart,
+        cold_start_s=restart["cold_start_s"],
+        warm_start_s=restart["warm_start_s"],
+        hit_rate=restart["hit_rate"],
         smoke=args.smoke,
         wall_s=time.time() - t0,
     )
@@ -188,6 +220,11 @@ def main(argv=None):
           f"{fused_cancel['batch']} aborted at level "
           f"{fused_cancel['levels_before_abort']}/{fused_cancel['levels']} "
           f"({fused_cancel['wall_fraction']:.2%} of the full batch's wall)")
+    print(f"# restart probe: cold {restart['cold_start_s']:.2f}s "
+          f"({restart['cold_traces']} traces) -> warm "
+          f"{restart['warm_start_s']:.2f}s ({restart['warm_traces']} traces, "
+          f"{restart['warm_loads']} loads, hit rate "
+          f"{restart['hit_rate']:.2f}) = {restart['speedup']:.1f}x")
     for name, d in sorted(driver.items()):
         print(f"# driver overhead {name}: "
               f"{d['overhead_us_per_level']:.0f} us/level over "
@@ -212,7 +249,13 @@ def main(argv=None):
           # from the end), freeing its admission slot
           and fused_cancel["cancelled"]
           and 1 <= fused_cancel["levels_before_abort"] < fused_cancel["levels"]
-          and fused_cancel["inflight_after"] == 0)
+          and fused_cancel["inflight_after"] == 0
+          # restart acceptance: the warm process retraced NOTHING (every
+          # plan materialized from the shared artifact cache) and started
+          # faster than the cold one
+          and restart["warm_traces"] == 0
+          and restart["warm_loads"] > 0
+          and restart["warm_start_s"] < restart["cold_start_s"])
     if not ok:
         print("# ERROR: serving acceptance conditions not met",
               file=sys.stderr)

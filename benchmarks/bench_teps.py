@@ -108,14 +108,13 @@ def _ragged_proof(graph):
     engine = Engine(session)
     for b in (3, 5, 7):
         engine.bfs(np.arange(b), BFSConfig(), backend="fused")
-    counts = {repr(k): v for k, v in
-              session.cache_info()["trace_counts"].items()}
-    cohort_keys = [k for k in session.cache_info()["trace_counts"]
+    cohort_keys = [k for k in session.cache_info()["plan_sources"]
                    if k[0] == "cohort"]
+    counts = {repr(k): session.materialize_count(k) for k in cohort_keys}
     return dict(batches=[3, 5, 7],
                 cohort_executables=len(cohort_keys),
                 cohort_buckets=sorted({k[2] for k in cohort_keys}),
-                total_traces=session.total_traces, trace_counts=counts)
+                total_traces=session.total_materialized, trace_counts=counts)
 
 
 def _cohort_vs_vmap(graph, seed):

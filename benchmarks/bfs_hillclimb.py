@@ -8,9 +8,74 @@ so the sweep only measures execution. Run under fake devices:
 
   XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
       python -m benchmarks.bfs_hillclimb --scale 13
+
+With a cache dir (`--cache-dir` or REPRO_CACHE_DIR), measured points
+persist under `<cache_dir>/hillclimb/` keyed by graph content hash +
+sweep shape: re-runs skip configs already measured (an interrupted sweep
+resumes where it died) and the climb seeds from the best known point
+instead of the paper baseline.
 """
 import argparse
 import json
+import os
+import tempfile
+
+
+class MeasurementStore:
+    """Persisted {config-key: TEPS} for one (graph, nparts, roots) sweep.
+
+    One JSON file per sweep shape, rewritten atomically (same-directory
+    temp + `os.replace`) after every measurement, so an interrupted sweep
+    loses at most the point in flight. A corrupt or unreadable file is
+    treated as empty, never fatal — it gets rewritten on the first new
+    measurement.
+    """
+
+    def __init__(self, cache_dir, graph_fp: str, nparts: int, roots: int):
+        self.path = None
+        self.points = {}
+        if cache_dir:
+            d = os.path.join(cache_dir, "hillclimb")
+            os.makedirs(d, exist_ok=True)
+            self.path = os.path.join(d, f"{graph_fp}-p{nparts}-r{roots}.json")
+            try:
+                with open(self.path) as f:
+                    data = json.load(f)
+                if isinstance(data, dict):
+                    self.points = {k: float(v)
+                                   for k, v in data.get("points", {}).items()}
+            except (OSError, ValueError):
+                self.points = {}
+
+    @staticmethod
+    def key(config: dict) -> str:
+        return json.dumps(config, sort_keys=True)
+
+    def get(self, config: dict):
+        return self.points.get(self.key(config))
+
+    def put(self, config: dict, teps: float) -> None:
+        self.points[self.key(config)] = float(teps)
+        if self.path is None:
+            return
+        fd, tmp = tempfile.mkstemp(dir=os.path.dirname(self.path),
+                                   prefix=".tmp-hillclimb-")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump({"points": self.points}, f)
+            os.replace(tmp, self.path)
+        except OSError:
+            try:
+                os.unlink(tmp)
+            except OSError:
+                pass
+
+    def best(self):
+        """(config, teps) of the best persisted point, or (None, None)."""
+        if not self.points:
+            return None, None
+        key = max(self.points, key=self.points.get)
+        return json.loads(key), self.points[key]
 
 
 def main(argv=None):
@@ -18,6 +83,10 @@ def main(argv=None):
     ap.add_argument("--scale", type=int, default=13)
     ap.add_argument("--nparts", type=int, default=4)
     ap.add_argument("--roots", type=int, default=5)
+    ap.add_argument("--cache-dir", default=None,
+                    help="persist measured points under "
+                         "<dir>/hillclimb/ and skip re-measuring "
+                         "(default: REPRO_CACHE_DIR if set)")
     args = ap.parse_args(argv)
 
     from repro.core import graph as G
@@ -25,16 +94,31 @@ def main(argv=None):
     from repro.core.hybrid_bfs import HybridConfig
     from repro.engine import Engine
     from repro.launch.bfs_run import sample_roots
+    from repro.runtime import get_runtime_config, graph_fingerprint
 
+    cache_dir = (args.cache_dir if args.cache_dir is not None
+                 else get_runtime_config().cache_dir)
     g = G.rmat(args.scale, seed=0)
     roots = sample_roots(g, args.roots)
     engine = Engine(g)
+    store = MeasurementStore(cache_dir, graph_fingerprint(g), args.nparts,
+                             args.roots)
+    if store.points:
+        print(f"# resuming: {len(store.points)} measured point(s) in "
+              f"{store.path}", flush=True)
 
-    def measure(label, strategy, hub_frac, hcfg):
-        res = engine.bfs(roots, hcfg, n_parts=args.nparts, strategy=strategy,
-                         hub_edge_fraction=hub_frac, batched=False)
+    def measure(label, config):
+        known = store.get(config)
+        if known is not None:
+            print(f"{label:58s} {known / 1e6:8.2f} MTEPS  (cached)",
+                  flush=True)
+            return known
+        res = engine.bfs(roots, cfg_of(config), n_parts=args.nparts,
+                         strategy=config["strategy"],
+                         hub_edge_fraction=config["hub_frac"], batched=False)
         res.validate(g, sample=1)
         hm = res.teps_hmean
+        store.put(config, hm)
         print(f"{label:58s} {hm / 1e6:8.2f} MTEPS", flush=True)
         return hm
 
@@ -50,8 +134,17 @@ def main(argv=None):
             exchange=d["exchange"], coordinator=d["coordinator"])
 
     results = {}
-    results["baseline(paper-faithful defaults)"] = measure(
-        "baseline", base["strategy"], base["hub_frac"], cfg_of(base))
+    results["baseline(paper-faithful defaults)"] = measure("baseline", base)
+
+    # Seed the climb from the best persisted point (when it beats the
+    # baseline) — a resumed sweep continues the climb instead of redoing it.
+    best, best_teps = dict(base), results["baseline(paper-faithful defaults)"]
+    stored_best, stored_teps = store.best()
+    if stored_best is not None and stored_teps > best_teps \
+            and set(stored_best) == set(base):
+        best, best_teps = stored_best, stored_teps
+        print(f"  -> seeded from store: {stored_teps / 1e6:.2f} MTEPS",
+              flush=True)
 
     sweeps = [
         ("strategy", ["random", "hub0"]),
@@ -64,14 +157,12 @@ def main(argv=None):
         ("fixed_bu", [2, 5]),
         ("coordinator", ["global"]),
     ]
-    best = dict(base)
-    best_teps = results["baseline(paper-faithful defaults)"]
     for knob, values in sweeps:
         for v in values:
             d = dict(best)
             d[knob] = v
             label = f"{knob}={v}"
-            t = measure(label, d["strategy"], d["hub_frac"], cfg_of(d))
+            t = measure(label, d)
             results[label] = t
             if t > best_teps * 1.02:
                 best_teps = t

@@ -75,8 +75,21 @@ class BFSConfig:
 
 
 def kernels_enabled(cfg: BFSConfig) -> bool:
-    """Resolve `cfg.backend_kernels` (None = auto: TPU only)."""
+    """Resolve `cfg.backend_kernels`.
+
+    None defers to `RuntimeConfig.kernel_backend` (REPRO_KERNELS):
+    'on'/'off' force the kernel path globally without touching per-query
+    configs; 'auto' keeps the old behavior — real Mosaic lowering on TPU
+    backends only. An explicit `BFSConfig.backend_kernels` always wins
+    (per-query beats process-wide).
+    """
     if cfg.backend_kernels is None:
+        from repro.runtime.config import get_runtime_config
+        mode = get_runtime_config().kernel_backend
+        if mode == "on":
+            return True
+        if mode == "off":
+            return False
         return jax.default_backend() == "tpu"
     return cfg.backend_kernels
 

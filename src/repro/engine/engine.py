@@ -380,7 +380,10 @@ class Engine:
             lambda: make_hybrid_search(
                 pg, hcfg, self.session.mesh_for(n_parts, hcfg.axis_name),
                 ell=ell))
-        fn = self.session.executable(skey, lambda: search_fn)
+        # Sharded searches close over a device mesh, so the executable is
+        # only valid under this session's device binding: keep it
+        # session-local and off the persistent store.
+        fn = self.session.executable(skey, lambda: search_fn, persist=False)
         return skey, fn, root_mapper, plan
 
     def _bfs_sharded(self, roots_arr, hcfg, n_parts, strategy, hub,

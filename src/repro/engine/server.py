@@ -506,9 +506,16 @@ class BFSServer:
 
     def stats(self) -> dict:
         """Live counters per session + totals (served/rejected/batches/...,
-        queue depth and high-water mark — the depth-bound proof)."""
+        queue depth and high-water mark — the depth-bound proof).
+
+        Each session also reports its `runtime` block — cold-start
+        accounting from `GraphSession.runtime_stats()`: traces vs disk
+        loads vs registry-shared plans, pre-warm progress, and the shared
+        artifact-cache counters (hit rate, evictions, load/store seconds).
+        """
         with self._state_lock:
             queues = list(self._queues.items())
+            engines = list(self._engines.items())
         with self._stats_lock:
             per = {name: dict(c) for name, c in self._counters.items()}
         for name, q in queues:
@@ -519,6 +526,9 @@ class BFSServer:
             for k, v in c.items():
                 if k not in ("queue_depth", "queue_high_water"):
                     totals[k] = totals.get(k, 0) + v
+        for name, engine in engines:
+            if name in per:
+                per[name]["runtime"] = engine.session.runtime_stats()
         return dict(sessions=per, totals=totals,
                     max_queue_depth=self.max_queue_depth,
                     clients_capped_at=self._caps.max_inflight)

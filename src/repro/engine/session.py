@@ -19,19 +19,44 @@ Executables are wrapped so *tracing* (not calling) bumps a per-key counter;
 `trace_count` lets tests assert that repeated queries with an identical
 config never retrace.
 
+Three cache tiers back `executable()` (each consulted before the next, the
+`repro.runtime` layer):
+
+1. **in-process cross-session registry** — plans are keyed by the graph's
+   *content hash* (`runtime.fingerprint.graph_fingerprint`), not session
+   identity, so two sessions over the same graph — or over a rebuilt,
+   byte-identical graph — share one compiled copy (zero traces for the
+   second; `RuntimeConfig.share_plans`);
+2. **persistent artifact cache** — when `RuntimeConfig.cache_dir` is set,
+   a cache miss consults the disk store before tracing, and a fresh trace
+   is AOT-compiled and serialized back
+   (`jax.experimental.serialize_executable`), so a restarted process
+   re-attaches with zero traces (`load_count`/`materialize_count` make
+   both tiers observable);
+3. **trace + compile** — the cold path, exactly the old behavior.
+
+On attach, a session with a persistent cache **pre-warms** in a background
+thread: disk entries whose metadata matches this graph + environment are
+deserialized into a preload pool ahead of the first query
+(`prewarm_progress` is the observable handle; `prewarm_wait()` blocks).
+
 Sessions are **thread-safe**: every cache (partitions, executables, helper
-objects, warm set, trace counters) is guarded by one per-session `RLock`
-with double-checked builds, so concurrent queries — the `BFSServer` case —
+objects, warm set) is guarded by one per-session `RLock` with
+double-checked builds, so concurrent queries — the `BFSServer` case —
 build/trace each plan at most once instead of racing check-then-set on
 plain dicts. The lock is re-entrant because builders call back into the
 session (e.g. a fused executable build reads `device_graph()`); it is held
 across `build()`/`warm()` bodies, which serializes *first-time compiles*
 per session but never steady-state cache hits (readers check outside the
 lock first) and never cross-session work (each session has its own lock).
+Counters live under a separate leaf-level `_stats_lock` (a plan resolving
+inside another session's `warm()` must be able to bump its builder's
+counters without that session's lock).
 """
 from __future__ import annotations
 
 import threading
+import time
 from typing import Any, Callable, Optional
 
 import jax
@@ -42,6 +67,121 @@ from repro.core import partition as PT
 from repro.core.bfs import DeviceGraph
 from repro.core.graph import Graph
 from repro.core.hybrid_bfs import default_mesh
+from repro.runtime.artifact_cache import artifact_cache_for
+from repro.runtime.config import RuntimeConfig, get_runtime_config
+from repro.runtime.fingerprint import (canonical_plan_key,
+                                       environment_fingerprint,
+                                       graph_fingerprint, plan_fingerprint)
+from repro.runtime.plan_registry import registry_get, registry_put
+
+
+class _PlanExecutable:
+    """One plan's executable, resolved lazily on first call.
+
+    Resolution order: the owning session's preload pool (filled by the
+    background pre-warm), then the disk artifact cache, then trace +
+    AOT-compile (persisting the result). Any failure along the
+    AOT/serialization path falls back to a plain `jax.jit` wrapper — the
+    exact pre-runtime-layer behavior — so persistence can never break a
+    query. The wrapper may be shared across sessions via the plan
+    registry; its internal lock makes the first resolution process-wide
+    exclusive, and trace/load counters always land on the *builder*
+    session.
+    """
+
+    __slots__ = ("_key", "_build", "_static", "_session", "_fp", "_lock",
+                 "_fn", "source", "resolve_s")
+
+    def __init__(self, key, build: Callable[[], Callable], static_argnums,
+                 session: "GraphSession", fingerprint: Optional[str]):
+        self._key = key
+        self._build = build
+        self._static = tuple(static_argnums)
+        self._session = session
+        self._fp = fingerprint          # None = never persisted to disk
+        self._lock = threading.Lock()
+        self._fn: Optional[Callable] = None
+        self.source: Optional[str] = None   # traced | disk | prewarmed
+        self.resolve_s = 0.0
+
+    def __call__(self, *args):
+        fn = self._fn
+        if fn is None:
+            fn = self._resolve(args)
+        return fn(*args)
+
+    def _resolve(self, args) -> Callable:
+        with self._lock:
+            if self._fn is not None:
+                return self._fn
+            t0 = time.perf_counter()
+            sess = self._session
+            fn = source = None
+            if self._fp is not None:
+                fn = sess._take_preloaded(self._fp)
+                if fn is not None:
+                    source = "prewarmed"
+                elif sess._artifacts is not None:
+                    fn = sess._artifacts.load(self._fp)
+                    if fn is not None:
+                        source = "disk"
+            if fn is None:
+                fn, source = self._trace(args)
+            self._fn = fn
+            self.source = source
+            self.resolve_s = time.perf_counter() - t0
+            sess._note_resolved(self._key, source)
+            return fn
+
+    def _trace(self, args):
+        """Build + jit; AOT-compile and persist when the store is usable."""
+        sess = self._session
+        raw = self._build()
+        key = self._key
+
+        def counted(*a, _raw=raw, _key=key, _sess=sess):
+            _sess._bump_trace(_key)
+            return _raw(*a)
+
+        jitted = jax.jit(counted, static_argnums=self._static)
+        cache = sess._artifacts
+        if (self._fp is None or self._static or cache is None
+                or not cache.aot):
+            return jitted, "traced"
+        try:
+            compiled = jitted.lower(*args).compile()
+        except Exception:  # noqa: BLE001 — AOT unsupported here: plain jit
+            return jitted, "traced"
+        meta = dict(graph_hash=sess.graph_fingerprint,
+                    key=canonical_plan_key(key),
+                    **environment_fingerprint())
+        cache.store(self._fp, compiled, meta)
+        return compiled, "traced"
+
+
+class PrewarmProgress:
+    """Observable progress of one session's background pre-warm pass."""
+
+    def __init__(self):
+        self.total = 0              # matching disk entries found
+        self.loaded = 0             # deserialized into the preload pool
+        self.failed = 0             # corrupt/unloadable (evicted by cache)
+        self.skipped = 0            # beyond RuntimeConfig.prewarm_limit
+        self.seconds = 0.0
+        self._done = threading.Event()
+
+    def wait(self, timeout: Optional[float] = None) -> bool:
+        """Block until the pass finishes; True when it did."""
+        return self._done.wait(timeout)
+
+    @property
+    def done(self) -> bool:
+        return self._done.is_set()
+
+    def as_dict(self) -> dict:
+        return dict(total=self.total, loaded=self.loaded, failed=self.failed,
+                    skipped=self.skipped, seconds=self.seconds,
+                    done=self.done)
 
 
 class GraphSession:
@@ -49,18 +189,35 @@ class GraphSession:
 
     def __init__(self, graph: Graph, *, mesh=None,
                  default_strategy: str = "specialized",
-                 default_hub_edge_fraction: float = 0.5):
+                 default_hub_edge_fraction: float = 0.5,
+                 runtime: Optional[RuntimeConfig] = None,
+                 prewarm: Optional[bool] = None):
         self.graph = graph
         self.default_strategy = default_strategy
         self.default_hub_edge_fraction = default_hub_edge_fraction
         self._mesh = mesh
+        self.runtime = runtime if runtime is not None else get_runtime_config()
         self._lock = threading.RLock()
+        self._stats_lock = threading.Lock()
         self._device_graph: Optional[DeviceGraph] = None
         self._partitions: dict[tuple, tuple] = {}
         self._executables: dict[Any, Callable] = {}
         self._objects: dict[Any, Any] = {}
         self._trace_counts: dict[Any, int] = {}
+        self._load_counts: dict[Any, int] = {}
+        self._shared_counts: dict[Any, int] = {}
+        self._plan_sources: dict[Any, str] = {}
         self._warmed: set = set()
+        self._graph_fp: Optional[str] = None
+        self._artifacts = artifact_cache_for(self.runtime)
+        self._preloaded: dict[str, Callable] = {}
+        self.attached_at = time.time()
+        self.prewarm_progress: Optional[PrewarmProgress] = None
+        self._prewarm_thread: Optional[threading.Thread] = None
+        self._prewarm_stop = threading.Event()
+        do_prewarm = (self.runtime.prewarm if prewarm is None else prewarm)
+        if do_prewarm and self._artifacts is not None and self._artifacts.aot:
+            self._start_prewarm()
 
     # ------------------------------------------------------- preprocessing --
 
@@ -131,32 +288,66 @@ class GraphSession:
             return self._mesh
         return default_mesh(n_parts, axis_name)
 
+    # --------------------------------------------------------- fingerprint --
+
+    @property
+    def graph_fingerprint(self) -> str:
+        """Content hash of this session's CSR (memoized; identity of every
+        shared/persisted plan)."""
+        if self._graph_fp is None:
+            self._graph_fp = graph_fingerprint(self.graph)
+        return self._graph_fp
+
     # ------------------------------------------------------ compiled plans --
 
     def executable(self, key, build: Callable[[], Callable],
-                   static_argnums=()) -> Callable:
-        """Cached jitted callable for `key`; `build` runs at most once.
+                   static_argnums=(), persist: bool = True) -> Callable:
+        """Cached callable for `key`; `build` traces at most once
+        *process-wide* (registry) and at most once *ever* per artifact-cache
+        directory (disk).
 
         `build()` must return a pure traceable function. The wrapper bumps
         the key's trace counter from inside tracing, so a cache hit that
-        silently retraced (e.g. a weak-type or shape mismatch) is visible.
+        silently retraced (e.g. a weak-type or shape mismatch) is visible;
+        a disk load bumps `load_count` instead (`materialize_count` is
+        their sum — the "this session did first-time work" ledger).
+
+        `persist=False` keeps a plan session-local and off disk — the
+        sharded backend's executables close over a device mesh, so they are
+        only valid for the session's own device binding.
         """
         fn = self._executables.get(key)
-        if fn is None:
-            with self._lock:
-                fn = self._executables.get(key)
-                if fn is None:
-                    raw = build()
-
-                    def counted(*args, _raw=raw, _key=key):
-                        with self._lock:
-                            self._trace_counts[_key] = \
-                                self._trace_counts.get(_key, 0) + 1
-                        return _raw(*args)
-
-                    fn = jax.jit(counted, static_argnums=static_argnums)
-                    self._executables[key] = fn
+        if fn is not None:
+            return fn
+        with self._lock:
+            fn = self._executables.get(key)
+            if fn is None:
+                fn = self._make_executable(key, build, static_argnums,
+                                           persist)
+                self._executables[key] = fn
         return fn
+
+    def _make_executable(self, key, build, static_argnums, persist):
+        shareable = persist and not static_argnums
+        if not shareable:
+            return _PlanExecutable(key, build, static_argnums, self, None)
+        gh = self.graph_fingerprint
+        if self.runtime.share_plans:
+            shared = registry_get((gh, key))
+            if shared is not None:
+                with self._stats_lock:
+                    self._shared_counts[key] = \
+                        self._shared_counts.get(key, 0) + 1
+                    self._plan_sources[key] = "shared"
+                return shared
+        fp = (plan_fingerprint(gh, key)
+              if self._artifacts is not None else None)
+        wrapper = _PlanExecutable(key, build, static_argnums, self, fp)
+        if self.runtime.share_plans:
+            # First writer wins: a racing session's wrapper may already be
+            # registered — adopt it so the plan still compiles only once.
+            wrapper = registry_put((gh, key), wrapper)
+        return wrapper
 
     def cached(self, key, build: Callable[[], Any]) -> Any:
         """Cache for non-executable helper objects (steppers, mappers)."""
@@ -186,23 +377,145 @@ class GraphSession:
             jax.block_until_ready(run())
             self._warmed.add(key)
 
+    # ------------------------------------------------------------- prewarm --
+
+    def _start_prewarm(self) -> None:
+        self.prewarm_progress = PrewarmProgress()
+        self._prewarm_stop = threading.Event()
+        # Non-daemon: a daemon thread killed mid-XLA-deserialize at
+        # interpreter shutdown aborts the process from C++. The pass is
+        # bounded (prewarm_limit fast loads) and checks a stop flag, so
+        # joining at exit is cheap.
+        self._prewarm_thread = threading.Thread(
+            target=self._prewarm_pass, name="bfs-session-prewarm",
+            daemon=False)
+        self._prewarm_thread.start()
+
+    def _prewarm_pass(self) -> None:
+        """Deserialize this graph's disk entries into the preload pool.
+
+        Runs on a background thread started at attach: by the time the
+        first query resolves its executables, matching entries are already
+        in memory (`_take_preloaded`), so even the cold *query* path pays
+        no disk latency. Every step is observable on `prewarm_progress`.
+        """
+        progress = self.prewarm_progress
+        t0 = time.perf_counter()
+        try:
+            gh = self.graph_fingerprint
+            env = environment_fingerprint()
+            matches = [
+                fp for fp, meta in self._artifacts.scan()
+                if meta.get("graph_hash") == gh
+                and meta.get("jax_version") == env["jax_version"]
+                and meta.get("backend") == env["backend"]
+            ]
+            progress.total = len(matches)
+            limit = self.runtime.prewarm_limit
+            for i, fp in enumerate(matches):
+                if i >= limit or self._prewarm_stop.is_set():
+                    progress.skipped = len(matches) - i
+                    break
+                fn = self._artifacts.load(fp)
+                if fn is None:
+                    progress.failed += 1
+                    continue
+                with self._stats_lock:
+                    self._preloaded.setdefault(fp, fn)
+                progress.loaded += 1
+        finally:
+            progress.seconds = time.perf_counter() - t0
+            progress._done.set()
+
+    def prewarm_wait(self, timeout: Optional[float] = None) -> dict:
+        """Block until the attach-time pre-warm finishes; its report."""
+        if self.prewarm_progress is None:
+            return dict(total=0, loaded=0, failed=0, skipped=0, seconds=0.0,
+                        done=True)
+        self.prewarm_progress.wait(timeout)
+        return self.prewarm_progress.as_dict()
+
+    def _take_preloaded(self, fingerprint: str) -> Optional[Callable]:
+        with self._stats_lock:
+            return self._preloaded.pop(fingerprint, None)
+
+    # ---------------------------------------------- counter plumbing (leaf) --
+
+    def _bump_trace(self, key) -> None:
+        with self._stats_lock:
+            self._trace_counts[key] = self._trace_counts.get(key, 0) + 1
+
+    def _note_resolved(self, key, source: str) -> None:
+        with self._stats_lock:
+            self._plan_sources[key] = source
+            if source in ("disk", "prewarmed"):
+                self._load_counts[key] = self._load_counts.get(key, 0) + 1
+
     # ---------------------------------------------------------- inspection --
 
     def trace_count(self, key) -> int:
-        with self._lock:
+        with self._stats_lock:
             return self._trace_counts.get(key, 0)
+
+    def load_count(self, key) -> int:
+        """Times this session materialized `key` from disk (incl. pre-warm)."""
+        with self._stats_lock:
+            return self._load_counts.get(key, 0)
+
+    def materialize_count(self, key) -> int:
+        """trace_count + load_count: first-time work this session did for
+        `key` (0 = it reused a plan another session already built)."""
+        with self._stats_lock:
+            return (self._trace_counts.get(key, 0)
+                    + self._load_counts.get(key, 0))
 
     @property
     def total_traces(self) -> int:
-        with self._lock:
+        with self._stats_lock:
             return sum(self._trace_counts.values())
 
+    @property
+    def total_loads(self) -> int:
+        with self._stats_lock:
+            return sum(self._load_counts.values())
+
+    @property
+    def total_materialized(self) -> int:
+        with self._stats_lock:
+            return (sum(self._trace_counts.values())
+                    + sum(self._load_counts.values()))
+
     def cache_info(self) -> dict:
-        with self._lock:
+        with self._lock, self._stats_lock:
             return {
                 "graph": dict(V=self.graph.num_vertices,
                               E_undirected=self.graph.num_undirected_edges),
                 "partitions": sorted(self._partitions),
                 "executables": sorted(self._executables, key=repr),
                 "trace_counts": dict(self._trace_counts),
+                "load_counts": dict(self._load_counts),
+                "shared_counts": dict(self._shared_counts),
+                "plan_sources": dict(self._plan_sources),
             }
+
+    def runtime_stats(self) -> dict:
+        """Cold-start accounting: plan sources, cache counters, pre-warm."""
+        with self._stats_lock:
+            sources: dict = {}
+            for src in self._plan_sources.values():
+                sources[src] = sources.get(src, 0) + 1
+            loads = sum(self._load_counts.values())
+            traces = sum(self._trace_counts.values())
+            shared = sum(self._shared_counts.values())
+        out = dict(
+            cache_enabled=self._artifacts is not None,
+            traces=traces, loads=loads, shared=shared,
+            plan_sources=sources,
+            prewarm=(self.prewarm_progress.as_dict()
+                     if self.prewarm_progress is not None else None),
+        )
+        if self._artifacts is not None:
+            cache_stats = self._artifacts.stats()
+            cache_stats.pop("per_entry", None)   # bulky; fetch via the cache
+            out["artifact_cache"] = cache_stats
+        return out

@@ -17,7 +17,20 @@ from repro.kernels import topdown as _td
 
 
 def _auto_interpret(interpret):
+    """Resolve a kernel call's interpret flag.
+
+    None defers to `RuntimeConfig.interpret` (REPRO_INTERPRET): 'on'/'off'
+    force Pallas interpreter mode globally; 'auto' keeps the old rule —
+    interpret everywhere except real TPU backends. An explicit per-call
+    flag always wins.
+    """
     if interpret is None:
+        from repro.runtime.config import get_runtime_config
+        mode = get_runtime_config().interpret
+        if mode == "on":
+            return True
+        if mode == "off":
+            return False
         return jax.default_backend() != "tpu"
     return interpret
 

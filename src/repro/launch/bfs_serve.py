@@ -9,6 +9,11 @@ numbers to BENCH_serve.json.
 
   PYTHONPATH=src python -m repro.launch.bfs_serve --graphs 2 --scale 12 \
       --clients 8 --queries 6 --batch 4
+
+With `--cache-dir DIR --restart-probe`, also measures cold-vs-warm
+restart: two child processes attach the same graph against a shared
+artifact cache (`repro.runtime`); the second must load every compiled
+executable from disk with zero retraces.
 """
 from __future__ import annotations
 
@@ -261,6 +266,78 @@ def build_server(n_graphs: int, scale: int, *, edgefactor: int = 16,
     return BFSServer(graphs, **server_kw), graphs
 
 
+_RESTART_CHILD = """
+import json, sys, time
+from repro.core import graph as G
+from repro.engine.engine import Engine
+from repro.engine.session import GraphSession
+from repro.runtime import configure
+
+scale, edgefactor, seed, cache_dir = json.loads(sys.argv[1])
+configure(cache_dir=cache_dir)
+g = G.rmat(scale, edgefactor=edgefactor, seed=seed)
+t0 = time.perf_counter()
+s = GraphSession(g)
+e = Engine(s)
+root = int(g.degrees.argmax())
+e.bfs([root], backend="fused")
+first_query_s = time.perf_counter() - t0
+s.prewarm_wait(120)
+rt = s.runtime_stats()
+print(json.dumps(dict(first_query_s=first_query_s, traces=rt["traces"],
+                      loads=rt["loads"], prewarm=rt["prewarm"],
+                      cache=rt.get("artifact_cache"))))
+"""
+
+
+def run_restart_probe(cache_dir: str, *, scale: int = 10,
+                      edgefactor: int = 16, seed: int = 0,
+                      timeout: float = 600.0) -> dict:
+    """Cold-vs-warm restart accounting across real process boundaries.
+
+    Launches two child processes in sequence, each attaching a session over
+    the *same* deterministic RMAT graph with the artifact cache at
+    `cache_dir` and timing attach + first fused query. The first child
+    (cold, assuming a fresh directory) traces and populates the store; the
+    second restarts against it and must materialize every plan from disk —
+    `warm_traces == 0` is the zero-retrace proof, and
+    `warm_start_s < cold_start_s` the payoff. Pass a fresh directory for a
+    true cold phase; a pre-populated one just makes both phases warm.
+    """
+    import json
+    import os
+    import subprocess
+    import sys
+    src_dir = os.path.dirname(os.path.dirname(
+        os.path.dirname(os.path.abspath(__file__))))
+    env = dict(os.environ)
+    env["REPRO_CACHE_DIR"] = cache_dir
+    env["PYTHONPATH"] = src_dir + os.pathsep + env.get("PYTHONPATH", "")
+    payload = json.dumps([scale, edgefactor, seed, cache_dir])
+    phases = {}
+    for phase in ("cold", "warm"):
+        proc = subprocess.run(
+            [sys.executable, "-c", _RESTART_CHILD, payload],
+            capture_output=True, text=True, env=env, timeout=timeout)
+        if proc.returncode != 0:
+            raise RuntimeError(
+                f"restart probe {phase} child failed "
+                f"(rc={proc.returncode}):\n{proc.stderr[-2000:]}")
+        phases[phase] = json.loads(proc.stdout.strip().splitlines()[-1])
+    cold, warm = phases["cold"], phases["warm"]
+    cache = warm.get("cache") or {}
+    prewarm = warm.get("prewarm") or {}
+    return dict(
+        scale=scale, cache_dir=cache_dir,
+        cold_start_s=cold["first_query_s"], cold_traces=cold["traces"],
+        warm_start_s=warm["first_query_s"], warm_traces=warm["traces"],
+        warm_loads=warm["loads"],
+        hit_rate=cache.get("hit_rate", 0.0),
+        prewarm_loaded=prewarm.get("loaded", 0),
+        speedup=cold["first_query_s"] / max(warm["first_query_s"], 1e-9),
+    )
+
+
 def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--graphs", type=int, default=2)
@@ -284,8 +361,18 @@ def main(argv=None):
     ap.add_argument("--cancel-probe", action="store_true",
                     help="after the load, prove cancelled queries free "
                          "their worker within one level")
+    ap.add_argument("--cache-dir", default=None,
+                    help="persistent compiled-executable cache directory "
+                         "(default: REPRO_CACHE_DIR if set, else disabled)")
+    ap.add_argument("--restart-probe", action="store_true",
+                    help="after the load, measure cold-vs-warm restart via "
+                         "two child processes sharing the cache dir "
+                         "(requires --cache-dir or REPRO_CACHE_DIR)")
     args = ap.parse_args(argv)
 
+    from repro.runtime import configure, get_runtime_config
+    if args.cache_dir is not None:
+        configure(cache_dir=args.cache_dir)
     server, graphs = build_server(
         args.graphs, args.scale, edgefactor=args.edgefactor, seed=args.seed,
         max_queue_depth=args.queue_depth,
@@ -302,6 +389,14 @@ def main(argv=None):
         stats = server.stats()
     finally:
         server.close()
+    restart = None
+    if args.restart_probe:
+        cache_dir = get_runtime_config().cache_dir
+        if cache_dir is None:
+            ap.error("--restart-probe needs --cache-dir (or REPRO_CACHE_DIR)")
+        restart = run_restart_probe(cache_dir, scale=min(args.scale, 10),
+                                    edgefactor=args.edgefactor,
+                                    seed=args.seed)
     print(f"[serve] {args.graphs} session(s) scale={args.scale} | "
           f"{m['clients']} clients x {args.queries} queries "
           f"(batch {args.batch}): {m['qps']:.1f} QPS, "
@@ -320,6 +415,13 @@ def main(argv=None):
               f"{probe['wall_ratio']:.2f} vs baseline, "
               f"inflight_after={probe['inflight_after']}, "
               f"worker_alive={probe['worker_alive']}")
+    if restart is not None:
+        print(f"[serve] restart probe: cold {restart['cold_start_s']:.2f}s "
+              f"({restart['cold_traces']} traces) -> warm "
+              f"{restart['warm_start_s']:.2f}s ({restart['warm_traces']} "
+              f"traces, {restart['warm_loads']} loads, hit rate "
+              f"{restart['hit_rate']:.2f}) = {restart['speedup']:.1f}x")
+        stats["restart_probe"] = restart
     return m, stats
 
 

@@ -1,0 +1,258 @@
+"""`RuntimeConfig`: the one authoritative runtime-configuration object.
+
+Before this module the repo's runtime knobs were scattered: kernel backend
+selection lived in `BFSConfig.backend_kernels` + a TPU autodetect, Pallas
+interpret mode in `repro.kernels.ops._auto_interpret`, device counts in
+ad-hoc `XLA_FLAGS` strings, and there was nowhere to hang a cache directory
+or an eviction cap. `RuntimeConfig` folds them into one validated object
+(alpa's `GlobalConfig` pattern) with a strict precedence rule:
+
+    explicit argument  >  environment variable  >  built-in default
+
+Environment variables (all optional):
+
+=====================  =====================================================
+REPRO_CACHE_DIR        persistent artifact-cache directory ('' = disabled)
+REPRO_CACHE_MAX_BYTES  cache eviction cap; int bytes or '512MB'/'2GB'
+REPRO_PREWARM          '1'/'0': background pre-warm on `GraphSession` attach
+REPRO_PREWARM_LIMIT    max executables one pre-warm pass deserializes
+REPRO_SHARE_PLANS      '1'/'0': in-process cross-session plan sharing
+REPRO_KERNELS          'auto' | 'on' | 'off': Pallas kernel path when
+                       `BFSConfig.backend_kernels` is None (auto = TPU only)
+REPRO_INTERPRET        'auto' | 'on' | 'off': Pallas interpret mode when a
+                       kernel call leaves it unset (auto = off-TPU only)
+REPRO_DEVICE_COUNT     fake host device count `launch_env()` bakes into
+                       XLA_FLAGS (emulated-mesh runs; ignored when unset)
+=====================  =====================================================
+
+`launch_env()` documents the XLA/tcmalloc launch hygiene from the
+HomebrewNLP / olmax run.sh recipes as code: it returns the environment a
+launcher shell should export *before* the python process starts (tcmalloc
+must be LD_PRELOADed and XLA_FLAGS read at jax import, so a running process
+cannot apply them to itself — hence a helper that emits them, not sets them).
+
+The module keeps one process-wide singleton (`get_runtime_config`), replaced
+by `configure(...)` and scoped by the `runtime_scope(...)` context manager
+(tests); sessions may also carry a private `RuntimeConfig` instance.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import os
+import threading
+from typing import Optional
+
+_TRISTATE = ("auto", "on", "off")
+
+# SNIPPETS §2-3 launch hygiene: the conventional tcmalloc path on the
+# TPU-VM/linux images this repo targets, and the matching allocator knobs.
+DEFAULT_TCMALLOC = "/usr/lib/x86_64-linux-gnu/libtcmalloc.so.4"
+DEFAULT_CACHE_MAX_BYTES = 1 << 30            # 1 GiB
+DEFAULT_PREWARM_LIMIT = 64
+
+_SIZE_SUFFIXES = {"KB": 1 << 10, "MB": 1 << 20, "GB": 1 << 30,
+                  "K": 1 << 10, "M": 1 << 20, "G": 1 << 30, "B": 1}
+
+
+def _parse_size(text: str, *, name: str) -> int:
+    """'1048576' | '512MB' | '2gb' -> bytes (int)."""
+    s = str(text).strip().upper().replace(" ", "")
+    for suffix in sorted(_SIZE_SUFFIXES, key=len, reverse=True):
+        if s.endswith(suffix):
+            body = s[:-len(suffix)]
+            try:
+                return int(float(body) * _SIZE_SUFFIXES[suffix])
+            except ValueError:
+                break
+    try:
+        return int(s)
+    except ValueError:
+        raise ValueError(
+            f"{name}: cannot parse size {text!r}; want an integer byte "
+            f"count or a number with a KB/MB/GB suffix") from None
+
+
+def _parse_bool(text: str, *, name: str) -> bool:
+    s = str(text).strip().lower()
+    if s in ("1", "true", "yes", "on"):
+        return True
+    if s in ("0", "false", "no", "off", ""):
+        return False
+    raise ValueError(f"{name}: cannot parse boolean {text!r}")
+
+
+def _parse_tristate(text: str, *, name: str) -> str:
+    s = str(text).strip().lower()
+    if s in _TRISTATE:
+        return s
+    if s in ("1", "true", "yes"):
+        return "on"
+    if s in ("0", "false", "no"):
+        return "off"
+    raise ValueError(f"{name}: want one of {_TRISTATE}, got {text!r}")
+
+
+@dataclasses.dataclass(frozen=True)
+class RuntimeConfig:
+    """Validated, immutable runtime configuration (see module docstring).
+
+    Build with `RuntimeConfig.resolve(...)` so env overrides apply; the bare
+    constructor takes the values as final (the "explicit argument" tier).
+    """
+
+    # -- persistent artifact cache -------------------------------------------
+    cache_dir: Optional[str] = None          # None = persistence disabled
+    cache_max_bytes: int = DEFAULT_CACHE_MAX_BYTES
+    prewarm: bool = True                     # background pre-warm on attach
+    prewarm_limit: int = DEFAULT_PREWARM_LIMIT
+    # -- in-process plan sharing ---------------------------------------------
+    share_plans: bool = True                 # content-hash cross-session cache
+    # -- kernel / device selection -------------------------------------------
+    kernel_backend: str = "auto"             # BFSConfig.backend_kernels=None
+    interpret: str = "auto"                  # Pallas interpret when unset
+    device_count: Optional[int] = None       # fake host devices (launch_env)
+    # -- launch hygiene (SNIPPETS §2-3) --------------------------------------
+    tcmalloc_path: str = DEFAULT_TCMALLOC
+
+    def __post_init__(self):
+        if self.kernel_backend not in _TRISTATE:
+            raise ValueError(f"kernel_backend: want one of {_TRISTATE}, "
+                             f"got {self.kernel_backend!r}")
+        if self.interpret not in _TRISTATE:
+            raise ValueError(f"interpret: want one of {_TRISTATE}, "
+                             f"got {self.interpret!r}")
+        if self.cache_max_bytes <= 0:
+            raise ValueError(
+                f"cache_max_bytes must be > 0, got {self.cache_max_bytes}")
+        if self.prewarm_limit < 0:
+            raise ValueError(
+                f"prewarm_limit must be >= 0, got {self.prewarm_limit}")
+        if self.device_count is not None and self.device_count < 1:
+            raise ValueError(
+                f"device_count must be >= 1, got {self.device_count}")
+        if self.cache_dir is not None and not str(self.cache_dir):
+            object.__setattr__(self, "cache_dir", None)
+
+    # ------------------------------------------------------------ resolution --
+
+    @classmethod
+    def resolve(cls, env: Optional[dict] = None, **explicit) -> "RuntimeConfig":
+        """Defaults <- env <- explicit kwargs (later tiers win).
+
+        Explicit kwargs set to None mean "not given" and fall through to
+        the env/default tiers; pass `cache_dir=""` to explicitly disable a
+        cache the env enables (it normalizes to a disabled cache).
+        """
+        env = os.environ if env is None else env
+        values: dict = {}
+        if "REPRO_CACHE_DIR" in env:
+            values["cache_dir"] = env["REPRO_CACHE_DIR"] or None
+        if "REPRO_CACHE_MAX_BYTES" in env:
+            values["cache_max_bytes"] = _parse_size(
+                env["REPRO_CACHE_MAX_BYTES"], name="REPRO_CACHE_MAX_BYTES")
+        if "REPRO_PREWARM" in env:
+            values["prewarm"] = _parse_bool(env["REPRO_PREWARM"],
+                                            name="REPRO_PREWARM")
+        if "REPRO_PREWARM_LIMIT" in env:
+            values["prewarm_limit"] = int(env["REPRO_PREWARM_LIMIT"])
+        if "REPRO_SHARE_PLANS" in env:
+            values["share_plans"] = _parse_bool(env["REPRO_SHARE_PLANS"],
+                                                name="REPRO_SHARE_PLANS")
+        if "REPRO_KERNELS" in env:
+            values["kernel_backend"] = _parse_tristate(env["REPRO_KERNELS"],
+                                                       name="REPRO_KERNELS")
+        if "REPRO_INTERPRET" in env:
+            values["interpret"] = _parse_tristate(env["REPRO_INTERPRET"],
+                                                  name="REPRO_INTERPRET")
+        if "REPRO_DEVICE_COUNT" in env:
+            values["device_count"] = int(env["REPRO_DEVICE_COUNT"])
+        for key, val in explicit.items():
+            if val is None:
+                continue
+            values[key] = val
+        return cls(**values)
+
+    def replace(self, **changes) -> "RuntimeConfig":
+        return dataclasses.replace(self, **changes)
+
+    @property
+    def cache_enabled(self) -> bool:
+        return self.cache_dir is not None
+
+    # ---------------------------------------------------------- launch env --
+
+    def launch_env(self) -> dict:
+        """Env a launcher should export before starting python (SNIPPETS §2-3).
+
+        tcmalloc replaces glibc malloc (the CSR/ELL build path is large-
+        allocation heavy) and is only included when the library actually
+        exists on this machine; the allocation-report threshold silences
+        tcmalloc's large-alloc warnings for graph-sized buffers;
+        TF_CPP_MIN_LOG_LEVEL silences XLA's C++ chatter; XLA_FLAGS pins the
+        emulated host-device count when `device_count` is set (fake-mesh
+        runs — harmless and omitted otherwise).
+        """
+        env = {
+            "TF_CPP_MIN_LOG_LEVEL": "4",
+            "TCMALLOC_LARGE_ALLOC_REPORT_THRESHOLD": "60000000000",
+        }
+        if self.tcmalloc_path and os.path.exists(self.tcmalloc_path):
+            env["LD_PRELOAD"] = self.tcmalloc_path
+        if self.device_count is not None:
+            env["XLA_FLAGS"] = ("--xla_force_host_platform_device_count="
+                                f"{self.device_count}")
+        if self.cache_dir is not None:
+            env["REPRO_CACHE_DIR"] = self.cache_dir
+        return env
+
+
+# ------------------------------------------------------- process singleton --
+
+_lock = threading.Lock()
+_current: Optional[RuntimeConfig] = None
+
+
+def get_runtime_config() -> RuntimeConfig:
+    """The process-wide `RuntimeConfig` (env-resolved on first use)."""
+    global _current
+    if _current is None:
+        with _lock:
+            if _current is None:
+                _current = RuntimeConfig.resolve()
+    return _current
+
+
+def configure(**explicit) -> RuntimeConfig:
+    """Replace the process config: explicit args > env > defaults."""
+    global _current
+    with _lock:
+        _current = RuntimeConfig.resolve(**explicit)
+        return _current
+
+
+def reset_runtime_config() -> None:
+    """Drop the singleton; the next `get_runtime_config` re-reads the env."""
+    global _current
+    with _lock:
+        _current = None
+
+
+@contextlib.contextmanager
+def runtime_scope(**explicit):
+    """Temporarily install a config (tests); restores the previous one."""
+    global _current
+    with _lock:
+        prev = _current
+        _current = RuntimeConfig.resolve(**explicit)
+        cfg = _current
+    try:
+        yield cfg
+    finally:
+        with _lock:
+            _current = prev
+
+
+def launch_env(**explicit) -> dict:
+    """`RuntimeConfig.resolve(**explicit).launch_env()` — launcher shorthand."""
+    return RuntimeConfig.resolve(**explicit).launch_env()

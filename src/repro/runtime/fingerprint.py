@@ -1,0 +1,115 @@
+"""Canonical content fingerprints for compiled-plan identity.
+
+A compiled BFS executable is a pure function of
+
+    (graph CSR content, plan key, jax version, backend platform,
+     device kind, device count)
+
+so that tuple — hashed — is its identity everywhere: the in-process
+cross-session `plan_registry` keys on (graph hash, plan key); the on-disk
+`ArtifactCache` keys on the full `plan_fingerprint`, which folds the
+environment in so a jax upgrade or a platform change silently invalidates
+every stale entry (a lookup under the new environment simply never finds
+them) instead of loading an incompatible executable.
+
+The plan key is the `GraphSession` executable key — a tuple of strings,
+ints, and frozen config dataclasses (`BFSConfig`/`HybridConfig`, whose
+`repr` is deterministic and spells out every field, so *adding* a config
+field also changes every fingerprint: exactly the invalidation we want).
+
+Graph hashing reads the full CSR (`indptr` + `indices` bytes); ~GB/s via
+blake2b, paid once per graph per process (memoized on graph identity, with
+a weakref so dropped graphs do not pin their hash entries).
+"""
+from __future__ import annotations
+
+import hashlib
+import threading
+import weakref
+
+import numpy as np
+
+_lock = threading.Lock()
+_graph_hash_memo: dict = {}      # id(graph) -> (hexdigest, weakref.ref)
+_env_memo: list = []             # [dict] once computed
+
+
+def graph_fingerprint(graph) -> str:
+    """Content hash of a `Graph`'s CSR arrays (memoized per graph object).
+
+    Two separately built but identical graphs (same generator, same seed —
+    or one rebuilt from the same edge list) hash equal: this is what lets
+    sessions share plans across graph *objects*, not just references.
+    """
+    key = id(graph)
+    with _lock:
+        got = _graph_hash_memo.get(key)
+        if got is not None:
+            return got[0]
+    h = hashlib.blake2b(digest_size=16)
+    h.update(str(int(graph.num_vertices)).encode())
+    h.update(b"|")
+    h.update(np.ascontiguousarray(graph.indptr).view(np.uint8))
+    h.update(b"|")
+    h.update(np.ascontiguousarray(graph.indices).view(np.uint8))
+    digest = h.hexdigest()
+    with _lock:
+        try:
+            ref = weakref.ref(graph,
+                              lambda _r, _k=key: _graph_hash_memo.pop(_k, None))
+        except TypeError:         # non-weakrefable graph stand-in: no memo
+            return digest
+        _graph_hash_memo[key] = (digest, ref)
+    return digest
+
+
+def environment_fingerprint() -> dict:
+    """The jax/backend facts that invalidate serialized executables.
+
+    Computed once per process (imports jax lazily so config parsing never
+    forces device initialization).
+    """
+    with _lock:
+        if _env_memo:
+            return dict(_env_memo[0])
+    import jax
+    devices = jax.devices()
+    env = dict(
+        jax_version=jax.__version__,
+        backend=jax.default_backend(),
+        device_kind=devices[0].device_kind if devices else "none",
+        n_devices=len(devices),
+    )
+    with _lock:
+        if not _env_memo:
+            _env_memo.append(env)
+    return dict(env)
+
+
+def canonical_plan_key(key) -> str:
+    """Deterministic string form of a session executable key."""
+    return repr(key)
+
+
+def plan_fingerprint(graph_hash: str, key, extra=None) -> str:
+    """Disk identity of one compiled executable (hex, stable across runs)."""
+    env = environment_fingerprint()
+    parts = [
+        graph_hash,
+        canonical_plan_key(key),
+        env["jax_version"],
+        env["backend"],
+        env["device_kind"],
+        str(env["n_devices"]),
+    ]
+    if extra is not None:
+        parts.append(repr(extra))
+    h = hashlib.blake2b("\x1f".join(parts).encode(), digest_size=20)
+    return h.hexdigest()
+
+
+def reset_fingerprint_memos() -> None:
+    """Test hook: drop graph-hash and environment memos."""
+    with _lock:
+        _graph_hash_memo.clear()
+        _env_memo.clear()

@@ -27,6 +27,22 @@ def run_in_devices(code: str, n_devices: int, timeout: int = 420):
     return res.stdout
 
 
+@pytest.fixture(autouse=True)
+def _reset_plan_registry():
+    """Isolate cross-session plan sharing between tests.
+
+    The runtime layer's in-process registry shares compiled plans across
+    sessions by graph *content* hash — and the session-scoped graph
+    fixtures reuse one graph across many tests, so without this reset a
+    test's trace counts would depend on which tests ran before it.
+    Sharing-specific tests exercise the registry within their own body.
+    """
+    from repro.runtime import registry_reset
+    registry_reset()
+    yield
+    registry_reset()
+
+
 @pytest.fixture(scope="session")
 def small_graph():
     from repro.core import graph as G

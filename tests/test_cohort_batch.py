@@ -223,7 +223,7 @@ def test_forced_direction_heuristics_single_variant():
         assert backend.dispatched == {used: len(rows)} and rows
         for i, r in enumerate(MIXED_BATCH):
             ref.validate_parents(COMPOSITE, int(r), parent[i], level[i])
-        keys = [k for k in session.cache_info()["trace_counts"]
+        keys = [k for k in session.cache_info()["plan_sources"]
                 if k[0] == "cohort" and k[1] == cfg]
         # init + the single reachable variant + sync = 3 executables
         assert {k[3] for k in keys} == {"init", used, "scalars"}

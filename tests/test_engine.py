@@ -12,11 +12,12 @@ from repro.engine import Engine, GraphSession, TraversalResult
 
 
 def _fused_keys(session):
-    return [k for k in session.cache_info()["trace_counts"] if k[0] == "fused"]
+    return [k for k in session.cache_info()["plan_sources"]
+            if k[0] == "fused"]
 
 
 def _cohort_keys(session):
-    return [k for k in session.cache_info()["trace_counts"]
+    return [k for k in session.cache_info()["plan_sources"]
             if k[0] == "cohort"]
 
 
@@ -37,9 +38,10 @@ def test_batched_multiroot_matches_reference(medium_graph):
 
 
 def test_batch_of_8_roots_single_trace(small_graph):
-    """Acceptance: a >=8-root batch compiles its cohort executable set
-    exactly once per (config, bucket), and identical follow-up queries
-    never retrace anything."""
+    """Acceptance: a >=8-root batch materializes its cohort executable set
+    exactly once per (config, bucket) — one trace cold, one disk load under
+    a warm artifact cache, never both — and identical follow-up queries
+    never rebuild anything."""
     session = GraphSession(small_graph)
     engine = Engine(session)
     cfg = BFSConfig(heuristic="paper")
@@ -47,17 +49,17 @@ def test_batch_of_8_roots_single_trace(small_graph):
     engine.bfs(roots, cfg)
     keys = _cohort_keys(session)
     assert len(keys) == COHORT_EXECUTABLES, keys
-    assert all(session.trace_count(k) == 1 for k in keys)
+    assert all(session.materialize_count(k) == 1 for k in keys)
     # same config + batch shape, different roots: pure cache hit
     engine.bfs(roots + 100, cfg)
     engine.bfs(roots, BFSConfig(heuristic="paper"))  # equal config, new object
-    assert all(session.trace_count(k) == 1 for k in keys)
-    assert session.total_traces == COHORT_EXECUTABLES
+    assert all(session.materialize_count(k) == 1 for k in keys)
+    assert session.total_materialized == COHORT_EXECUTABLES
     # a different config is a different plan: one more executable set,
     # old keys untouched
     engine.bfs(roots, BFSConfig(heuristic="beamer"))
-    assert all(session.trace_count(k) == 1 for k in keys)
-    assert session.total_traces == 2 * COHORT_EXECUTABLES
+    assert all(session.materialize_count(k) == 1 for k in keys)
+    assert session.total_materialized == 2 * COHORT_EXECUTABLES
 
 
 def test_unbatched_mode_shares_one_executable(small_graph):
@@ -65,8 +67,8 @@ def test_unbatched_mode_shares_one_executable(small_graph):
     engine = Engine(session)
     res = engine.bfs([3, 5, 9], batched=False, validate=True)
     assert res.per_root_seconds.shape == (3,)
-    # 3 roots, one batch-1 executable, one trace
-    assert session.total_traces == 1
+    # 3 roots, one batch-1 executable, materialized once (trace or load)
+    assert session.total_materialized == 1
     assert res.teps_hmean > 0
 
 

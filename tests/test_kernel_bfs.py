@@ -118,12 +118,12 @@ def test_ragged_batches_share_one_executable(small_graph):
         assert res.parent.shape == (b, g.num_vertices)
         for i, r in enumerate(roots):
             ref.validate_parents(g, int(r), res.parent[i], res.level[i])
-    keys = [k for k in session.cache_info()["trace_counts"]
+    keys = [k for k in session.cache_info()["plan_sources"]
             if k[0] == "cohort"]
     assert len(keys) == 5, keys
     assert {k[2] for k in keys} == {8}           # every ragged size: bucket 8
-    assert all(session.trace_count(k) == 1 for k in keys)
-    assert session.total_traces == 5
+    assert all(session.materialize_count(k) == 1 for k in keys)
+    assert session.total_materialized == 5
 
 
 def test_batch_bucket_boundaries():

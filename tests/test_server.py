@@ -138,14 +138,17 @@ def test_server_stress_concurrent_clients(two_graphs):
     try:
         load()
         assert not errors, errors
-        traces1 = {n: s.total_traces for n, s in server.sessions.items()}
-        # every session compiled exactly one cohort executable set (init +
-        # td/bu/mixed steps + sync), however many queries/coalesced
-        # dispatch sizes it served
+        traces1 = {n: s.total_materialized
+                   for n, s in server.sessions.items()}
+        # every session materialized exactly one cohort executable set
+        # (init + td/bu/mixed steps + sync) — traced cold, loaded from a
+        # warm artifact cache — however many queries/coalesced dispatch
+        # sizes it served
         assert traces1 == {n: 5 for n in names}, traces1
         load()                                  # identical second wave
         assert not errors, errors
-        traces2 = {n: s.total_traces for n, s in server.sessions.items()}
+        traces2 = {n: s.total_materialized
+                   for n, s in server.sessions.items()}
         assert traces2 == traces1, (traces1, traces2)
         stats = server.stats()
         assert stats["totals"]["served"] == 64
@@ -411,11 +414,11 @@ def test_deadline_rejects_without_poisoning_plan_cache(two_graphs):
         server.start()
         with pytest.raises(QueryDeadlineExceeded):
             h.result(timeout=30)
-        assert session.total_traces == 0         # never reached the engine
+        assert session.total_materialized == 0   # never reached the engine
         h2 = server.submit("g", [1], client="a")
         h2.result(timeout=300).validate(g)
         # the normal cohort executable set, nothing extra from the expiry
-        assert session.total_traces == 5
+        assert session.total_materialized == 5
         stats = server.stats()["totals"]
         assert stats["expired"] == 1 and stats["served"] == 1
     finally:
