@@ -33,6 +33,12 @@ Measures the `BFSServer` under synthetic concurrent load:
   (`--cache-dir`, default a fresh temp dir). Records `cold_start_s`,
   `warm_start_s`, `hit_rate`; acceptance requires the warm restart to
   perform ZERO retraces and start faster than the cold one.
+* **chaos probe** — `repro.launch.bfs_serve.run_chaos_probe`: 8 clients
+  under a seeded fault schedule (worker crash, stragglers, dispatch and
+  trace faults), then degradation (pallas->xla, batch->scalar, bitwise
+  vs fault-free oracle), circuit-breaker trip+recovery, and artifact-cache
+  corruption. Acceptance: zero lost queries, availability >= 0.9, every
+  degradation/recovery gate green (`chaos.ok`).
 
 Usage: python benchmarks/bench_serve.py [--scale 12] [--smoke]
 """
@@ -100,6 +106,7 @@ def main(argv=None):
     import jax
     from repro.engine.engine import _bucket_batch
     from repro.launch.bfs_serve import (build_server, run_cancel_probe,
+                                        run_chaos_probe,
                                         run_fused_cancel_probe, run_load,
                                         run_restart_probe)
 
@@ -163,6 +170,14 @@ def main(argv=None):
         if tmp_cache:
             shutil.rmtree(cache_dir, ignore_errors=True)
 
+    # Chaos: the serving layer must self-heal under injected faults —
+    # supervised worker restart, bounded retry, degradation chain, breaker
+    # trip+recovery, cache-corruption eviction. Deterministic seeded
+    # schedule; gates are timing-invariant.
+    chaos = run_chaos_probe(scale=9 if args.smoke else min(args.scale, 10),
+                            edgefactor=min(args.edgefactor, 8),
+                            seed=args.seed)
+
     out = dict(
         config=dict(graphs=args.graphs, scale=args.scale,
                     edgefactor=args.edgefactor, clients=args.clients,
@@ -190,6 +205,7 @@ def main(argv=None):
         cancellation=cancel,
         fused_cancellation=fused_cancel,
         overload=probe,
+        chaos=chaos,
         cold_start=restart,
         cold_start_s=restart["cold_start_s"],
         warm_start_s=restart["warm_start_s"],
@@ -220,6 +236,17 @@ def main(argv=None):
           f"{fused_cancel['batch']} aborted at level "
           f"{fused_cancel['levels_before_abort']}/{fused_cancel['levels']} "
           f"({fused_cancel['wall_fraction']:.2%} of the full batch's wall)")
+    cl = chaos["load"]
+    print(f"# chaos probe: {'OK' if chaos['ok'] else 'FAILED'} | "
+          f"{cl['ok']}/{cl['submitted']} ok, lost {cl['lost']}, "
+          f"availability {cl['availability']:.2f}, crashes "
+          f"{cl['worker_crashes']}, restarts {cl['worker_restarts']}, "
+          f"retries {cl['retries']} | degraded backend="
+          f"{chaos['degrade']['degraded_backend']} scalar="
+          f"{chaos['degrade']['degraded_scalar']} | breaker trips="
+          f"{chaos['breaker']['trips']} recovered="
+          f"{chaos['breaker']['recovered']} | cache corrupt_evictions="
+          f"{chaos['cache']['corrupt_evictions']}")
     print(f"# restart probe: cold {restart['cold_start_s']:.2f}s "
           f"({restart['cold_traces']} traces) -> warm "
           f"{restart['warm_start_s']:.2f}s ({restart['warm_traces']} traces, "
@@ -255,7 +282,14 @@ def main(argv=None):
           # faster than the cold one
           and restart["warm_traces"] == 0
           and restart["warm_loads"] > 0
-          and restart["warm_start_s"] < restart["cold_start_s"])
+          and restart["warm_start_s"] < restart["cold_start_s"]
+          # chaos acceptance: zero lost queries under injected faults,
+          # availability floor, and every degradation/recovery gate green
+          # (worker restart, retry, pallas->xla and batch->scalar bitwise
+          # vs oracle, breaker trip+close, cache corruption evicted)
+          and chaos["ok"]
+          and chaos["load"]["zero_lost"]
+          and chaos["load"]["availability"] >= 0.9)
     if not ok:
         print("# ERROR: serving acceptance conditions not met",
               file=sys.stderr)

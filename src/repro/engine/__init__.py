@@ -15,8 +15,10 @@ from repro.engine.level_loop import (BSPStepBackend, CohortBatchBackend,
                                      LevelDriver, QueryCancelled,
                                      QueryControl, QueryDeadlineExceeded,
                                      SingleStepBackend)
-from repro.engine.queueing import (BoundedPriorityQueue, ClientCaps,
-                                   QueueClosed, QueueFull, ServerOverloaded)
+from repro.engine.queueing import (BatchPopError, BoundedPriorityQueue,
+                                   CircuitBreaker, ClientCaps, QueueClosed,
+                                   QueueFull, RetryPolicy, ServerOverloaded,
+                                   SessionUnavailable)
 from repro.engine.result import TraversalResult, edges_traversed_from_levels
 from repro.engine.server import BFSServer, QueryHandle, ServerClosed
 from repro.engine.session import GraphSession
@@ -28,4 +30,6 @@ __all__ = ["Engine", "GraphSession", "TraversalResult", "BACKENDS",
            "QueryControl", "QueryCancelled", "QueryDeadlineExceeded",
            "BFSServer", "QueryHandle", "ServerOverloaded", "ServerClosed",
            "BoundedPriorityQueue", "ClientCaps", "QueueFull", "QueueClosed",
+           "BatchPopError", "CircuitBreaker", "RetryPolicy",
+           "SessionUnavailable",
            "edges_traversed_from_levels"]

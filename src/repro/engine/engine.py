@@ -48,6 +48,7 @@ from repro.engine.level_loop import (BSPStepBackend, CohortBatchBackend,
                                      SingleStepBackend)
 from repro.engine.result import TraversalResult, edges_traversed_from_levels
 from repro.engine.session import GraphSession
+from repro.runtime.faults import fault_point
 
 BACKENDS = ("fused", "sharded", "stepper")
 
@@ -233,6 +234,10 @@ class Engine:
                 f"fused path, got {backend!r} (batched={batched})")
         if control is not None:
             control.check()
+        # Chaos hook: simulated device/memory pressure at query entry
+        # (non-transient `DevicePressure` — the degradation chain, not the
+        # retry loop, is the recovery path).
+        fault_point("device", backend=backend)
         roots_arr = self._normalize_roots(roots)
         if roots_arr.size == 0:
             v = self.graph.num_vertices
@@ -316,6 +321,12 @@ class Engine:
             b = len(roots_arr)
             bucket = _bucket_batch(b)
             backend = self._cohort_backend(hcfg.bfs, bucket)
+            # How the driver's chaos hooks describe this dispatch — the
+            # handle that lets schedules target e.g. [kernels=pallas] or
+            # [mode=batch] and leave the degraded paths clear.
+            backend.fault_ctx = dict(
+                mode="batch",
+                kernels="pallas" if B.kernels_enabled(hcfg.bfs) else "xla")
             # Pad to the bucket with a repeat of the first root; pad lanes
             # start INACTIVE (masked out of every cohort at level 0), so
             # padding costs no traversal work — they are placeholders for
@@ -352,9 +363,11 @@ class Engine:
         self.session.warm(
             key, lambda: fn(jnp.int32(roots_arr[0])).frontier)
         parents, levels, per_root = [], [], []
+        kernels = "pallas" if B.kernels_enabled(hcfg.bfs) else "xla"
         for r in roots_arr:
             if control is not None:
                 control.check()
+            fault_point("dispatch", mode="scalar", kernels=kernels)
             t0 = time.perf_counter()
             st = fn(jnp.int32(r))
             jax.block_until_ready(st.frontier)
@@ -393,9 +406,11 @@ class Engine:
         roots_new = [root_mapper(int(r)) for r in roots_arr]
         self.session.warm(skey, lambda: fn(jnp.int32(roots_new[0]))[0])
         e_und = self.graph.num_undirected_edges
+        kernels = "pallas" if B.kernels_enabled(hcfg.bfs) else "xla"
         per_root = []
         if batched:
             # Pipelined: dispatch every query before blocking once.
+            fault_point("dispatch", mode="sharded", kernels=kernels)
             t0 = time.perf_counter()
             outs = [fn(jnp.int32(rn)) for rn in roots_new]
             jax.block_until_ready([o[0] for o in outs])
@@ -406,6 +421,7 @@ class Engine:
             for rn in roots_new:
                 if control is not None:
                     control.check()
+                fault_point("dispatch", mode="sharded", kernels=kernels)
                 t0 = time.perf_counter()
                 out = fn(jnp.int32(rn))
                 jax.block_until_ready(out[0])
@@ -431,9 +447,13 @@ class Engine:
 
     def _bfs_stepper(self, roots_arr, hcfg, n_parts, strategy, hub,
                      on_level=None, control=None) -> TraversalResult:
-        driver = LevelDriver(
-            self._stepper_backend_single(hcfg.bfs) if n_parts == 1
-            else self._stepper_backend_sharded(hcfg, n_parts, strategy, hub))
+        backend = (self._stepper_backend_single(hcfg.bfs) if n_parts == 1
+                   else self._stepper_backend_sharded(hcfg, n_parts,
+                                                      strategy, hub))
+        backend.fault_ctx = dict(
+            mode="stepper",
+            kernels="pallas" if B.kernels_enabled(hcfg.bfs) else "xla")
+        driver = LevelDriver(backend)
         wkey = ("stepper_warm", hcfg, n_parts, strategy, hub)
         # The warm-up is a full traversal too: it honours the control so the
         # first (cold) query on a plan can still abort per level. An aborted

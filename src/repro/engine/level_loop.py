@@ -69,6 +69,7 @@ import jax.numpy as jnp
 
 from repro.core import bfs as B
 from repro.core.hybrid_bfs import finalize_hybrid
+from repro.runtime.faults import fault_point
 
 
 # ------------------------------------------------------------ cancellation --
@@ -360,6 +361,15 @@ class LevelDriver:
                 except (QueryCancelled, QueryDeadlineExceeded) as e:
                     e.per_level_stats = stats
                     raise
+            # Chaos hooks at the dispatch boundary: a straggler spec sleeps
+            # here (the per-level delay the paper's BSP model is most
+            # sensitive to), a dispatch spec raises — before the step runs,
+            # so device state is never half-advanced. `fault_ctx` is the
+            # engine's description of this dispatch (mode/kernels), the
+            # handle schedule filters like [kernels=pallas] select on.
+            fctx = getattr(b, "fault_ctx", None) or {}
+            fault_point("straggler", level=cur, **fctx)
+            fault_point("dispatch", level=cur, **fctx)
             t0 = time.perf_counter()
             work = b.compute(state, pre) if needs_sync else b.compute(state)
             jax.block_until_ready(work)

@@ -23,6 +23,7 @@ engine's compiled-executable caches are already lock-protected
 """
 from __future__ import annotations
 
+import dataclasses
 import heapq
 import itertools
 import threading
@@ -37,6 +38,25 @@ class QueueFull(Exception):
 
 class QueueClosed(Exception):
     """Queue was closed; no further puts/gets are possible."""
+
+
+class BatchPopError(Exception):
+    """`get_batch` failed *after* popping items off the queue.
+
+    The popped items ride on the exception (`items`, possibly empty) so the
+    consumer can recover them — without this, any exception between the
+    first pop and the return (a broken `key`/`weight`/`stop_wait` callback,
+    most likely) silently strands already-dequeued queries: their depth
+    slots are freed but no worker will ever serve them. `cause` is the
+    original exception.
+    """
+
+    def __init__(self, items: list, cause: BaseException):
+        self.items = list(items)
+        self.cause = cause
+        super().__init__(
+            f"get_batch failed with {len(self.items)} item(s) popped: "
+            f"{cause!r}")
 
 
 class ServerOverloaded(RuntimeError):
@@ -76,12 +96,20 @@ class BoundedPriorityQueue:
         with self._lock:
             return len(self._heap)
 
-    def put(self, item: Any, priority: int = 0) -> None:
-        """Enqueue without blocking; `QueueFull` when at capacity."""
+    def put(self, item: Any, priority: int = 0, *,
+            force: bool = False) -> None:
+        """Enqueue without blocking; `QueueFull` when at capacity.
+
+        `force=True` bypasses the depth cap (never the closed check): the
+        retry path re-enqueues a query that was ALREADY admitted — its
+        depth slot was consumed at submit time, so bouncing it off a
+        momentarily full queue would turn an admitted query into a lost
+        one.
+        """
         with self._lock:
             if self._closed:
                 raise QueueClosed("queue is closed")
-            if len(self._heap) >= self.maxsize:
+            if not force and len(self._heap) >= self.maxsize:
                 raise QueueFull(
                     f"queue depth {len(self._heap)} at maxsize {self.maxsize}")
             heapq.heappush(self._heap, (priority, next(self._seq), item))
@@ -147,45 +175,52 @@ class BoundedPriorityQueue:
             batch = [first]
             if key is None:
                 return batch
-            kfirst = key(first)
-            total_w = [weight(first) if weight else 1]
+            # Anything that fails from here on (the key/weight/stop_wait
+            # callbacks are caller code) has already dequeued `batch`;
+            # re-raise as `BatchPopError` carrying the items so the consumer
+            # can fail or requeue them instead of stranding them.
+            try:
+                kfirst = key(first)
+                total_w = [weight(first) if weight else 1]
 
-            def extend() -> bool:
-                """Fold in compatible head items; False once un-extendable."""
-                while self._heap:
-                    if len(batch) >= max_items:
-                        return False
-                    head = self._heap[0][2]
-                    if key(head) != kfirst:
-                        return False
-                    w = weight(head) if weight else 1
-                    if max_weight is not None and total_w[0] + w > max_weight:
-                        return False
-                    batch.append(self._pop_locked())
-                    total_w[0] += w
-                # Drained the queue: still extendable only while both the
-                # item and weight budgets have room (weights are >= 1, so a
-                # saturated weight budget can never admit another item —
-                # waiting a window out on it would be pure added latency).
-                return (len(batch) < max_items
-                        and (max_weight is None or total_w[0] < max_weight))
+                def extend() -> bool:
+                    """Fold in compatible head items; False once un-extendable."""
+                    while self._heap:
+                        if len(batch) >= max_items:
+                            return False
+                        head = self._heap[0][2]
+                        if key(head) != kfirst:
+                            return False
+                        w = weight(head) if weight else 1
+                        if max_weight is not None and total_w[0] + w > max_weight:
+                            return False
+                        batch.append(self._pop_locked())
+                        total_w[0] += w
+                    # Drained the queue: still extendable only while both the
+                    # item and weight budgets have room (weights are >= 1, so a
+                    # saturated weight budget can never admit another item —
+                    # waiting a window out on it would be pure added latency).
+                    return (len(batch) < max_items
+                            and (max_weight is None or total_w[0] < max_weight))
 
-            more = extend()
-            if (window_s > 0 and more
-                    and (extendable is None or extendable(first))):
-                wdeadline = time.monotonic() + window_s
-                while more and not self._closed:
-                    remaining = wdeadline - time.monotonic()
-                    if remaining <= 0:
-                        break
-                    if stop_wait is not None and stop_wait(batch):
-                        break
-                    # Bounded slices so stop_wait (cancel/deadline on the
-                    # popped items) is noticed without anyone having to
-                    # notify this condition.
-                    self._not_empty.wait(min(remaining, 0.05))
-                    more = extend()
-            return batch
+                more = extend()
+                if (window_s > 0 and more
+                        and (extendable is None or extendable(first))):
+                    wdeadline = time.monotonic() + window_s
+                    while more and not self._closed:
+                        remaining = wdeadline - time.monotonic()
+                        if remaining <= 0:
+                            break
+                        if stop_wait is not None and stop_wait(batch):
+                            break
+                        # Bounded slices so stop_wait (cancel/deadline on the
+                        # popped items) is noticed without anyone having to
+                        # notify this condition.
+                        self._not_empty.wait(min(remaining, 0.05))
+                        more = extend()
+                return batch
+            except BaseException as e:  # noqa: BLE001 — items must not strand
+                raise BatchPopError(batch, e) from e
 
     def remove(self, pred: Callable[[Any], bool]) -> list:
         """Remove (and return, in priority order) every item matching `pred`.
@@ -212,6 +247,133 @@ class BoundedPriorityQueue:
             self._heap.clear()
             self._not_empty.notify_all()
             return leftovers
+
+
+class SessionUnavailable(RuntimeError):
+    """Fast-fail rejection: the session's circuit breaker is open.
+
+    Raised by `BFSServer.submit` while a session is tripping (N consecutive
+    dispatch failures); clients back off instead of feeding a failing
+    session — the breaker admits a half-open probe after `reset_after_s`
+    and closes again on its success.
+    """
+
+    def __init__(self, session: str, state: str, detail: str = ""):
+        self.session = session
+        self.state = state
+        super().__init__(
+            f"session {session!r} unavailable (circuit {state})"
+            + (f": {detail}" if detail else ""))
+
+
+@dataclasses.dataclass(frozen=True)
+class RetryPolicy:
+    """Bounded retry-with-backoff for transient dispatch failures.
+
+    `max_retries` is per query (attempts beyond the first dispatch);
+    backoff is exponential from `backoff_initial_s`, capped at
+    `backoff_max_s`. The defaults are sized for the in-process engine —
+    tens of milliseconds, not the seconds an RPC service would use.
+    """
+
+    max_retries: int = 2
+    backoff_initial_s: float = 0.01
+    backoff_multiplier: float = 2.0
+    backoff_max_s: float = 0.25
+
+    def __post_init__(self):
+        if self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0, got {self.max_retries}")
+        if self.backoff_initial_s < 0 or self.backoff_max_s < 0:
+            raise ValueError("backoff seconds must be >= 0")
+        if self.backoff_multiplier < 1.0:
+            raise ValueError(
+                f"backoff_multiplier must be >= 1, "
+                f"got {self.backoff_multiplier}")
+
+    def backoff(self, attempt: int) -> float:
+        """Delay before retry number `attempt` (1-based)."""
+        return min(
+            self.backoff_initial_s
+            * self.backoff_multiplier ** max(attempt - 1, 0),
+            self.backoff_max_s)
+
+
+class CircuitBreaker:
+    """Per-session circuit breaker: closed -> open -> half_open -> closed.
+
+    `record_failure` counts CONSECUTIVE dispatch failures; at `threshold`
+    the breaker opens and `allow()` rejects until `reset_after_s` has
+    passed, after which exactly one caller is admitted as the half-open
+    probe (`_probing` makes concurrent submitters lose). The probe's
+    success closes the breaker; its failure re-opens it for another full
+    `reset_after_s`. `record_abort` releases the probe slot when the
+    admitted query dies before dispatch (cancelled/withdrawn) — neither
+    success nor failure, so the breaker stays half-open for the next probe.
+    """
+
+    def __init__(self, threshold: int = 5, reset_after_s: float = 1.0):
+        if threshold < 1:
+            raise ValueError(f"threshold must be >= 1, got {threshold}")
+        self.threshold = threshold
+        self.reset_after_s = reset_after_s
+        self._lock = threading.Lock()
+        self._failures = 0          # consecutive
+        self._opened_at: Optional[float] = None
+        self._probing = False
+        self.trips = 0              # times the breaker opened (cumulative)
+
+    @property
+    def state(self) -> str:
+        with self._lock:
+            return self._state_locked()
+
+    def _state_locked(self) -> str:
+        if self._opened_at is None:
+            return "closed"
+        if time.monotonic() - self._opened_at >= self.reset_after_s:
+            return "half_open"
+        return "open"
+
+    def allow(self) -> bool:
+        """May a new query enter? Claims the half-open probe slot."""
+        with self._lock:
+            state = self._state_locked()
+            if state == "closed":
+                return True
+            if state == "half_open" and not self._probing:
+                self._probing = True
+                return True
+            return False
+
+    def record_success(self) -> None:
+        with self._lock:
+            self._failures = 0
+            self._opened_at = None
+            self._probing = False
+
+    def record_failure(self) -> None:
+        with self._lock:
+            self._failures += 1
+            if self._probing or self._failures >= self.threshold:
+                # A failed half-open probe re-opens immediately; so does
+                # reaching the consecutive-failure threshold while closed.
+                if self._opened_at is None or self._probing:
+                    self.trips += 1
+                self._opened_at = time.monotonic()
+                self._probing = False
+
+    def record_abort(self) -> None:
+        """The admitted query died before dispatch: free the probe slot."""
+        with self._lock:
+            self._probing = False
+
+    def snapshot(self) -> dict:
+        with self._lock:
+            return dict(state=self._state_locked(),
+                        consecutive_failures=self._failures,
+                        trips=self.trips)
 
 
 class ClientCaps:

@@ -24,7 +24,20 @@ per-root throughput. This module is that serving layer:
   they land on the host — `handle.stream()` iterates levels while the
   search is still running, `handle.result()` returns the final tree;
 * **admission control**: bounded queue depth + per-client in-flight caps
-  (`queueing.ClientCaps`), both rejecting with `ServerOverloaded`.
+  (`queueing.ClientCaps`), both rejecting with `ServerOverloaded`;
+* **self-healing under partial failure** (chaos-tested via
+  `repro.runtime.faults`): a crashed session worker is restarted by its
+  supervisor with capped exponential backoff and the popped batch is
+  recovered (requeued through the retry budget, never stranded); transient
+  dispatch failures retry with bounded backoff at their original priority
+  through the normal dispatch gate; non-transient failures walk a
+  graceful-degradation chain — pallas kernels -> plain XLA, fused cohort
+  batch -> per-query scalar programs — before the client ever sees an
+  error; and a per-session circuit breaker trips after N consecutive
+  dispatch failures, fast-failing submits with a typed
+  `SessionUnavailable` until a half-open probe succeeds. Every event
+  (worker_crashes/restarts, retries, degraded_backend/scalar,
+  breaker state) is a counter in `stats()`.
 
 Threads, not asyncio: XLA computations release the GIL, per-session workers
 give cross-graph parallelism, and the session caches are already
@@ -37,6 +50,7 @@ thread-safe. Synchronous `submit` returns a `QueryHandle` future.
 """
 from __future__ import annotations
 
+import dataclasses
 import queue as _pyqueue
 import threading
 import time
@@ -44,14 +58,18 @@ from typing import Any, Dict, Optional, Union
 
 import numpy as np
 
+from repro.core.bfs import kernels_enabled
 from repro.core.graph import Graph
 from repro.engine.engine import Engine, QueryPlan
 from repro.engine.level_loop import (QueryCancelled, QueryControl,
                                      QueryDeadlineExceeded)
-from repro.engine.queueing import (BoundedPriorityQueue, ClientCaps,
-                                   QueueClosed, QueueFull, ServerOverloaded)
+from repro.engine.queueing import (BatchPopError, BoundedPriorityQueue,
+                                   CircuitBreaker, ClientCaps, QueueClosed,
+                                   QueueFull, RetryPolicy, ServerOverloaded,
+                                   SessionUnavailable)
 from repro.engine.result import TraversalResult
 from repro.engine.session import GraphSession
+from repro.runtime.faults import fault_point
 
 _STREAM_END = object()
 
@@ -96,6 +114,7 @@ class QueryHandle:
         self.latency_s: Optional[float] = None
         self.partial_stats: Optional[list] = None
         self._done = threading.Event()
+        self._term_lock = threading.Lock()
         self._result: Optional[TraversalResult] = None
         self._error: Optional[BaseException] = None
         self._cancel_cb: Optional[callable] = None
@@ -143,26 +162,37 @@ class QueryHandle:
         if self._events is not None:
             self._events.put(row)
 
-    def _finish(self, res: TraversalResult) -> None:
-        self._result = res
-        self.latency_s = time.perf_counter() - self.submitted_at
-        if self._events is not None:
-            self._events.put(_STREAM_END)
-        self._done.set()
+    def _finish(self, res: TraversalResult) -> bool:
+        # Terminal-once: with retries, worker restarts, and close() all able
+        # to settle a handle, the first terminal event wins and later ones
+        # are no-ops (False) — the caller skips its bookkeeping then.
+        with self._term_lock:
+            if self._done.is_set():
+                return False
+            self._result = res
+            self.latency_s = time.perf_counter() - self.submitted_at
+            if self._events is not None:
+                self._events.put(_STREAM_END)
+            self._done.set()
+            return True
 
-    def _fail(self, exc: BaseException) -> None:
-        self._error = exc
-        self.latency_s = time.perf_counter() - self.submitted_at
-        if self._events is not None:
-            self._events.put(_STREAM_END)
-        self._done.set()
+    def _fail(self, exc: BaseException) -> bool:
+        with self._term_lock:
+            if self._done.is_set():
+                return False
+            self._error = exc
+            self.latency_s = time.perf_counter() - self.submitted_at
+            if self._events is not None:
+                self._events.put(_STREAM_END)
+            self._done.set()
+            return True
 
 
 class _QueryItem:
     """Internal queue entry: the handle plus everything the worker needs."""
 
     __slots__ = ("handle", "roots", "plan", "stream", "client", "batch_key",
-                 "control")
+                 "control", "attempts")
 
     def __init__(self, handle: QueryHandle, roots: np.ndarray,
                  plan: QueryPlan, stream: bool, client: Any,
@@ -173,9 +203,26 @@ class _QueryItem:
         self.stream = stream
         self.client = client
         self.control = control
+        self.attempts = 0           # retry dispatches consumed (RetryPolicy)
         # Streamed queries never coalesce (each runs its own stepper loop
         # with its own callback), so their key is unique by identity.
         self.batch_key = ("stream", id(handle)) if stream else ("batch", plan)
+
+
+class _WorkerCrash(Exception):
+    """A session worker died with a popped batch in hand (supervisor-internal).
+
+    Carries the batch so the supervisor can recover it (requeue through the
+    retry budget or fail the handles — never strand them) and `served`, the
+    number of batches this worker incarnation completed before dying (a
+    productive worker resets the restart backoff).
+    """
+
+    def __init__(self, batch: list, cause: BaseException, served: int):
+        self.batch = batch
+        self.cause = cause
+        self.served = served
+        super().__init__(f"worker crashed after {served} batch(es): {cause!r}")
 
 
 class BFSServer:
@@ -196,6 +243,19 @@ class BFSServer:
         dispatching (0 = the old opportunistic queue-drain-only batching).
         Bounded latency traded for batch occupancy; full batches, streamed
         queries, and incompatible heads never wait.
+      retry: `RetryPolicy` for transient dispatch failures (None = the
+        default policy: 2 retries, 10 ms exponential backoff). Retried
+        queries requeue at their original priority and re-enter through
+        the normal dispatch gate (cancel/deadline still honoured).
+      breaker_threshold / breaker_reset_s: per-session circuit breaker —
+        this many CONSECUTIVE dispatch failures trip it; submits then
+        fast-fail with `SessionUnavailable` for `breaker_reset_s` seconds,
+        after which one probe query is admitted half-open.
+      max_worker_restarts: how many times a session worker may be
+        restarted after consecutive unproductive crashes before the
+        supervisor gives up and fails that session's queue (a served batch
+        resets the count). Restart backoff is exponential from
+        `restart_backoff_s`, capped at `restart_backoff_max_s`.
       autostart: spawn worker threads immediately (False lets tests fill
         queues deterministically before serving begins; call `start()`).
     """
@@ -205,21 +265,39 @@ class BFSServer:
                  max_inflight_per_client: int = 16,
                  max_batch_queries: int = 16, max_batch_roots: int = 64,
                  batch_window_ms: float = 0.0,
+                 retry: Optional[RetryPolicy] = None,
+                 breaker_threshold: int = 5, breaker_reset_s: float = 1.0,
+                 max_worker_restarts: int = 5,
+                 restart_backoff_s: float = 0.05,
+                 restart_backoff_max_s: float = 2.0,
                  autostart: bool = True):
         if batch_window_ms < 0:
             raise ValueError(
                 f"batch_window_ms must be >= 0, got {batch_window_ms}")
+        if max_worker_restarts < 0:
+            raise ValueError(
+                f"max_worker_restarts must be >= 0, got {max_worker_restarts}")
         self.max_queue_depth = max_queue_depth
         self.max_batch_queries = max_batch_queries
         self.max_batch_roots = max_batch_roots
         self.batch_window_ms = batch_window_ms
+        self.retry = retry if retry is not None else RetryPolicy()
+        self.breaker_threshold = breaker_threshold
+        self.breaker_reset_s = breaker_reset_s
+        self.max_worker_restarts = max_worker_restarts
+        self.restart_backoff_s = restart_backoff_s
+        self.restart_backoff_max_s = restart_backoff_max_s
         self._caps = ClientCaps(max_inflight_per_client)
         self._engines: Dict[str, Engine] = {}
         self._queues: Dict[str, BoundedPriorityQueue] = {}
         self._threads: Dict[str, threading.Thread] = {}
         self._counters: Dict[str, dict] = {}
+        self._breakers: Dict[str, CircuitBreaker] = {}
         self._state_lock = threading.Lock()
         self._stats_lock = threading.Lock()
+        self._timers_lock = threading.Lock()
+        self._retry_timers: Dict[threading.Timer, tuple] = {}
+        self._closing = threading.Event()
         self._qid = 0
         self._started = False
         self._closed = False
@@ -247,7 +325,15 @@ class BFSServer:
                 self._counters[name] = dict(served=0, rejected=0, batches=0,
                                             roots=0, edges_traversed=0,
                                             cancelled=0, expired=0,
-                                            busy_s=0.0)
+                                            busy_s=0.0,
+                                            worker_crashes=0,
+                                            worker_restarts=0, retries=0,
+                                            dispatch_failures=0,
+                                            degraded_backend=0,
+                                            degraded_scalar=0, failed=0,
+                                            breaker_rejected=0)
+            self._breakers[name] = CircuitBreaker(self.breaker_threshold,
+                                                  self.breaker_reset_s)
             if self._started:
                 self._spawn_worker(name)
             return engine
@@ -267,7 +353,7 @@ class BFSServer:
     # ----------------------------------------------------------- lifecycle --
 
     def _spawn_worker(self, name: str) -> None:
-        t = threading.Thread(target=self._worker_loop, args=(name,),
+        t = threading.Thread(target=self._supervised_worker, args=(name,),
                              name=f"bfs-serve-{name}", daemon=True)
         self._threads[name] = t
         t.start()
@@ -300,15 +386,35 @@ class BFSServer:
             self._closed = True
             queues = list(self._queues.items())
             threads = list(self._threads.values())
+            engines = list(self._engines.values())
+        self._closing.set()          # wake supervisors out of restart backoff
+        # Cancel pending retry timers and fail their queries: a retry
+        # sleeping out its backoff holds no queue slot, so queue.close()
+        # below would never find it.
+        with self._timers_lock:
+            timers = list(self._retry_timers.items())
+            self._retry_timers.clear()
+        for timer, (tname, it) in timers:
+            timer.cancel()
+            if it.handle._fail(
+                    ServerClosed("server closed during retry backoff")):
+                self._caps.release(it.client)
+                self._count(tname, failed=1)
         for _name, q in queues:
             for item in q.close():
-                item.handle._fail(
-                    ServerClosed("server closed before the query ran"))
-                self._caps.release(item.client)
+                if item.handle._fail(
+                        ServerClosed("server closed before the query ran")):
+                    self._caps.release(item.client)
         for t in threads:
             remaining = (None if deadline is None
                          else max(0.0, deadline - time.monotonic()))
             t.join(remaining)
+        # Join the sessions' non-daemon pre-warm threads on the SAME
+        # deadline: an un-joined pre-warm pass blocks interpreter exit.
+        for eng in engines:
+            remaining = (None if deadline is None
+                         else max(0.0, deadline - time.monotonic()))
+            eng.session.close(remaining)
 
     def __enter__(self) -> "BFSServer":
         return self
@@ -344,6 +450,13 @@ class BFSServer:
         if self._closed:
             raise ServerClosed("server is closed")
         eng = self.engine(session)
+        breaker = self._breakers[session]
+        if not breaker.allow():
+            self._count(session, breaker_rejected=1)
+            raise SessionUnavailable(
+                session, breaker.state,
+                f"{breaker.snapshot()['consecutive_failures']} consecutive "
+                "dispatch failures; retry after the reset window")
         if stream:
             if backend == "auto":
                 backend = "stepper"
@@ -370,16 +483,21 @@ class BFSServer:
         try:
             self._caps.acquire(client)
         except ServerOverloaded:
+            # The admitted query never dispatches: free a claimed half-open
+            # probe slot so the breaker's next probe is not starved.
+            breaker.record_abort()
             self._count(session, rejected=1)
             raise
         try:
             self._queues[session].put(item, priority)
         except QueueFull as e:
             self._caps.release(client)
+            breaker.record_abort()
             self._count(session, rejected=1)
             raise ServerOverloaded("queue_full", str(e)) from None
         except QueueClosed:
             self._caps.release(client)
+            breaker.record_abort()
             raise ServerClosed("server is closed") from None
         handle._cancel_cb = lambda: self._withdraw_cancelled(session, item)
         return handle
@@ -397,15 +515,53 @@ class BFSServer:
         if q is None:
             return
         for it in q.remove(lambda queued: queued is item):
-            self._caps.release(it.client)
-            self._count(session, cancelled=1)
-            it.handle._fail(QueryCancelled("query cancelled while queued"))
+            if it.handle._fail(QueryCancelled("query cancelled while queued")):
+                self._caps.release(it.client)
+                self._count(session, cancelled=1)
 
     # -------------------------------------------------------------- worker --
+
+    def _supervised_worker(self, name: str) -> None:
+        """Run `_worker_loop`, restarting it when it crashes (supervision).
+
+        A crash hands back the popped batch (`_WorkerCrash`); those queries
+        are recovered — requeued through the retry budget or failed typed —
+        before the restart, so queued work survives. Backoff between
+        restarts is exponential and capped; a worker that served at least
+        one batch resets the unproductive-crash count. After
+        `max_worker_restarts` consecutive unproductive crashes the
+        supervisor fails the session's remaining queue and exits (the
+        circuit breaker has long since tripped for new submits).
+        """
+        crashes = 0
+        while True:
+            try:
+                self._worker_loop(name)
+                return                       # clean exit: queue closed
+            except _WorkerCrash as wc:
+                self._count(name, worker_crashes=1)
+                self._recover_batch(name, wc.batch, wc.cause)
+                crashes = 1 if wc.served else crashes + 1
+            except Exception:  # noqa: BLE001 — supervisor must survive
+                self._count(name, worker_crashes=1)
+                crashes += 1
+            if crashes > self.max_worker_restarts:
+                self._fail_pending(name, RuntimeError(
+                    f"session {name!r} worker gave up after "
+                    f"{self.max_worker_restarts} restarts"))
+                return
+            self._count(name, worker_restarts=1)
+            delay = min(self.restart_backoff_s * 2 ** (crashes - 1),
+                        self.restart_backoff_max_s)
+            # close() sets _closing: wake immediately and exit instead of
+            # sleeping out the backoff with the server shutting down.
+            if self._closing.wait(delay):
+                return
 
     def _worker_loop(self, name: str) -> None:
         q = self._queues[name]
         eng = self._engines[name]
+        served = 0
         while True:
             try:
                 # Blocks while idle; close() wakes every waiter into the
@@ -421,15 +577,67 @@ class BFSServer:
                                         for it in popped))
             except QueueClosed:
                 return
+            except BatchPopError as e:
+                # Standalone stranding guard: a failure after items were
+                # popped (a broken coalescing callback) used to kill the
+                # thread silently WITH queries in hand. Count it, fail the
+                # popped items typed, keep serving.
+                self._count(name, worker_crashes=1)
+                for it in e.items:
+                    if it.handle._fail(e):
+                        self._caps.release(it.client)
+                        self._count(name, failed=1)
+                continue
+            try:
+                # Chaos hook: the worker "crashes" between popping a batch
+                # and dispatching it — the worst moment, queries in hand.
+                fault_point("worker", session=name)
+            except BaseException as e:
+                raise _WorkerCrash(batch, e, served) from e
             self._execute(name, eng, batch)
+            served += 1
+
+    def _recover_batch(self, name: str, batch: list,
+                       cause: BaseException) -> None:
+        """Queries a crashed worker held survive the restart.
+
+        Undone items re-enter the queue at their original priority through
+        the retry budget (`force=True`: their depth slots were already
+        consumed at submit); items out of budget fail typed with the crash
+        cause.
+        """
+        for it in batch:
+            if it.handle.done():
+                continue
+            if it.attempts < self.retry.max_retries:
+                it.attempts += 1
+                self._count(name, retries=1)
+                try:
+                    self._queues[name].put(it, it.handle.priority, force=True)
+                    continue
+                except QueueClosed:
+                    pass
+            if it.handle._fail(cause):
+                self._caps.release(it.client)
+                self._count(name, failed=1)
+
+    def _fail_pending(self, name: str, err: BaseException) -> None:
+        """Fail everything still queued on a session (supervisor gave up)."""
+        q = self._queues.get(name)
+        if q is None:
+            return
+        for it in q.remove(lambda _: True):
+            if it.handle._fail(err):
+                self._caps.release(it.client)
+                self._count(name, failed=1)
 
     def _abort(self, name: str, item: _QueryItem, err: BaseException) -> None:
         """Fail one query with a typed abort, preserving partial stats."""
-        self._caps.release(item.client)
         item.handle.partial_stats = getattr(err, "per_level_stats", None)
-        self._count(name, cancelled=int(isinstance(err, QueryCancelled)),
-                    expired=int(isinstance(err, QueryDeadlineExceeded)))
-        item.handle._fail(err)
+        if item.handle._fail(err):
+            self._caps.release(item.client)
+            self._count(name, cancelled=int(isinstance(err, QueryCancelled)),
+                        expired=int(isinstance(err, QueryDeadlineExceeded)))
 
     def _execute(self, name: str, eng: Engine, batch: list) -> None:
         # Dispatch gate: cancelled / deadline-expired queries are failed
@@ -449,52 +657,176 @@ class BFSServer:
         batch = live
         t0 = time.perf_counter()
         try:
-            first = batch[0]
-            if first.stream:
-                # Stepper streams per-root rows (b = root index); the fused
-                # cohort path streams batch-level rows (b == -1, per-lane
-                # vectors inside the row) — `root=-1` marks the latter.
-                h = first.handle
-                res = eng.bfs_plan(
-                    first.roots, first.plan, control=first.control,
-                    on_level=lambda b, row, _r=first.roots: h._push(
-                        dict(row, root=int(_r[b]) if b >= 0 else -1)))
-                results = [res]
-            else:
-                # Micro-batch: one fused dispatch for every coalesced query
-                # (the engine pads the merged batch to its pow2 bucket, so
-                # ragged coalesced sizes share one executable), split back
-                # per query below. A solo query keeps its control (per-root
-                # and per-level abort points); a coalesced dispatch is one
-                # shared executable run, so its members are only cancellable
-                # at the dispatch gate above.
-                merged = eng.bfs_plan(
-                    np.concatenate([it.roots for it in batch]), first.plan,
-                    control=batch[0].control if len(batch) == 1 else None)
-                results = merged.split([len(it.roots) for it in batch])
+            results = self._dispatch(eng, batch)
         except (QueryCancelled, QueryDeadlineExceeded) as e:
             for it in batch:
                 self._abort(name, it, e)
             self._count(name, busy_s=time.perf_counter() - t0)
             return
-        except Exception as e:  # noqa: BLE001 — every failure reaches clients
+        except Exception as e:  # noqa: BLE001 — every failure is handled
+            self._count(name, dispatch_failures=1,
+                        busy_s=time.perf_counter() - t0)
+            self._breakers[name].record_failure()
             for it in batch:
-                self._caps.release(it.client)
-                it.handle._fail(e)
-            self._count(name, busy_s=time.perf_counter() - t0)
+                self._handle_failure(name, eng, it, e)
             return
+        self._breakers[name].record_success()
         edges = 0
         for it, res in zip(batch, results):
             # Release the admission slot *before* waking the client: a
             # client resubmitting the instant result() returns must not be
             # bounced off its own just-completed query.
-            self._caps.release(it.client)
-            it.handle._finish(res)
-            edges += int(res.edges_traversed.sum())
+            if not it.handle.done():
+                self._caps.release(it.client)
+                it.handle._finish(res)
+                edges += int(res.edges_traversed.sum())
         self._count(name, served=len(batch), batches=1,
                     roots=sum(len(it.roots) for it in batch),
                     edges_traversed=edges,
                     busy_s=time.perf_counter() - t0)
+
+    def _dispatch(self, eng: Engine, batch: list) -> list:
+        """One engine dispatch for a worker batch -> per-item results."""
+        first = batch[0]
+        if first.stream:
+            # Stepper streams per-root rows (b = root index); the fused
+            # cohort path streams batch-level rows (b == -1, per-lane
+            # vectors inside the row) — `root=-1` marks the latter.
+            h = first.handle
+            res = eng.bfs_plan(
+                first.roots, first.plan, control=first.control,
+                on_level=lambda b, row, _r=first.roots: h._push(
+                    dict(row, root=int(_r[b]) if b >= 0 else -1)))
+            return [res]
+        # Micro-batch: one fused dispatch for every coalesced query
+        # (the engine pads the merged batch to its pow2 bucket, so
+        # ragged coalesced sizes share one executable), split back
+        # per query by the caller. A solo query keeps its control (per-root
+        # and per-level abort points); a coalesced dispatch is one
+        # shared executable run, so its members are only cancellable
+        # at the dispatch gate.
+        merged = eng.bfs_plan(
+            np.concatenate([it.roots for it in batch]), first.plan,
+            control=batch[0].control if len(batch) == 1 else None)
+        return merged.split([len(it.roots) for it in batch])
+
+    # ------------------------------------------------ failure policy chain --
+
+    def _handle_failure(self, name: str, eng: Engine, it: _QueryItem,
+                        exc: BaseException) -> None:
+        """Route one failed query: retry (transient) -> degrade -> fail.
+
+        Transient failures (`exc.transient` truthy — injected faults mark
+        themselves; real backends can too) re-enter the queue after the
+        policy's backoff, at the original priority, within the retry
+        budget. Everything else — and exhausted budgets — walks the
+        degradation chain.
+        """
+        if it.handle.done():
+            return
+        transient = bool(getattr(exc, "transient", False))
+        if transient and it.attempts < self.retry.max_retries:
+            it.attempts += 1
+            self._count(name, retries=1)
+            self._schedule_retry(name, it)
+            return
+        self._degrade_or_fail(name, eng, it, exc)
+
+    def _schedule_retry(self, name: str, it: _QueryItem) -> None:
+        """Requeue `it` after the policy backoff (timer; worker not blocked).
+
+        `force=True`: the query's depth slot was consumed at submit and its
+        admission slot is still held — bouncing an ADMITTED query off a
+        momentarily full queue would lose it. Cancellation during backoff
+        is handled at the dispatch gate when the retry pops.
+        """
+        delay = self.retry.backoff(it.attempts)
+        holder: list = []
+
+        def requeue():
+            with self._timers_lock:
+                self._retry_timers.pop(holder[0], None)
+            if it.handle.done():
+                return
+            try:
+                self._queues[name].put(it, it.handle.priority, force=True)
+            except QueueClosed:
+                if it.handle._fail(
+                        ServerClosed("server closed during retry backoff")):
+                    self._caps.release(it.client)
+                    self._count(name, failed=1)
+
+        timer = threading.Timer(delay, requeue)
+        timer.daemon = True
+        holder.append(timer)
+        with self._timers_lock:
+            self._retry_timers[timer] = (name, it)
+        timer.start()
+
+    def _degrade_or_fail(self, name: str, eng: Engine, it: _QueryItem,
+                         exc: BaseException) -> None:
+        """Graceful degradation: pallas -> xla, fused batch -> scalar.
+
+        Each stage re-runs the query on a strictly plainer execution path
+        (results stay bitwise-identical — the degraded paths are the
+        bitwise-parity backends the tests already prove equivalent):
+
+        1. kernels off — same plan with `backend_kernels=False`, so a
+           failing Pallas dispatch falls back to the pure-XLA step;
+        2. scalar — a fused plan re-runs `batched=False`: one whole-search
+           scalar-root program per root, no cohort machinery.
+
+        A stage that itself fails counts another `dispatch_failures` and
+        falls through; when the chain is exhausted the client gets the
+        ORIGINAL error. Success counts `degraded_backend`/`degraded_scalar`
+        and closes the breaker's failure streak.
+        """
+        stages = []
+        plan = it.plan
+        if kernels_enabled(plan.hcfg.bfs):
+            plan = dataclasses.replace(
+                plan, hcfg=dataclasses.replace(
+                    plan.hcfg, bfs=dataclasses.replace(
+                        plan.hcfg.bfs, backend_kernels=False)))
+            stages.append(("degraded_backend", plan, True))
+        if plan.backend == "fused" and not it.stream:
+            # Scalar mode cannot stream (no per-level host loop), so a
+            # streamed fused query stops at the kernels-off stage.
+            stages.append(("degraded_scalar", plan, False))
+        for counter, p, batched in stages:
+            err = it.control.poll()
+            if err is not None:
+                self._abort(name, it, err)
+                return
+            h = it.handle
+            cb = (lambda b, row, _r=it.roots: h._push(
+                dict(row, root=int(_r[b]) if b >= 0 else -1))) \
+                if it.stream else None
+            t0 = time.perf_counter()
+            try:
+                res = eng.bfs_plan(it.roots, p, batched=batched,
+                                   control=it.control, on_level=cb)
+            except (QueryCancelled, QueryDeadlineExceeded) as e:
+                self._abort(name, it, e)
+                return
+            except Exception:  # noqa: BLE001 — fall through the chain
+                self._count(name, dispatch_failures=1)
+                self._breakers[name].record_failure()
+                continue
+            self._breakers[name].record_success()
+            if it.handle.done():
+                return
+            self._caps.release(it.client)
+            edges = int(res.edges_traversed.sum())
+            it.handle._finish(res)
+            self._count(name, served=1, batches=1, roots=len(it.roots),
+                        edges_traversed=edges,
+                        busy_s=time.perf_counter() - t0,
+                        **{counter: 1})
+            return
+        if it.handle._fail(exc):
+            self._caps.release(it.client)
+            self._count(name, failed=1)
 
     # --------------------------------------------------------------- stats --
 
@@ -529,6 +861,7 @@ class BFSServer:
         for name, engine in engines:
             if name in per:
                 per[name]["runtime"] = engine.session.runtime_stats()
+                per[name]["breaker"] = self._breakers[name].snapshot()
         return dict(sessions=per, totals=totals,
                     max_queue_depth=self.max_queue_depth,
                     clients_capped_at=self._caps.max_inflight)

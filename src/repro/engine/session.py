@@ -69,6 +69,8 @@ from repro.core.graph import Graph
 from repro.core.hybrid_bfs import default_mesh
 from repro.runtime.artifact_cache import artifact_cache_for
 from repro.runtime.config import RuntimeConfig, get_runtime_config
+from repro.runtime.faults import ensure_installed as _ensure_faults
+from repro.runtime.faults import fault_point
 from repro.runtime.fingerprint import (canonical_plan_key,
                                        environment_fingerprint,
                                        graph_fingerprint, plan_fingerprint)
@@ -136,6 +138,7 @@ class _PlanExecutable:
     def _trace(self, args):
         """Build + jit; AOT-compile and persist when the store is usable."""
         sess = self._session
+        fault_point("compile", key=self._key)
         raw = self._build()
         key = self._key
 
@@ -168,6 +171,7 @@ class PrewarmProgress:
         self.failed = 0             # corrupt/unloadable (evicted by cache)
         self.skipped = 0            # beyond RuntimeConfig.prewarm_limit
         self.seconds = 0.0
+        self.error: Optional[str] = None   # pass died: repr of the exception
         self._done = threading.Event()
 
     def wait(self, timeout: Optional[float] = None) -> bool:
@@ -181,7 +185,7 @@ class PrewarmProgress:
     def as_dict(self) -> dict:
         return dict(total=self.total, loaded=self.loaded, failed=self.failed,
                     skipped=self.skipped, seconds=self.seconds,
-                    done=self.done)
+                    done=self.done, error=self.error)
 
 
 class GraphSession:
@@ -215,6 +219,7 @@ class GraphSession:
         self.prewarm_progress: Optional[PrewarmProgress] = None
         self._prewarm_thread: Optional[threading.Thread] = None
         self._prewarm_stop = threading.Event()
+        _ensure_faults(self.runtime)     # REPRO_FAULTS chaos schedule, if any
         do_prewarm = (self.runtime.prewarm if prewarm is None else prewarm)
         if do_prewarm and self._artifacts is not None and self._artifacts.aot:
             self._start_prewarm()
@@ -423,6 +428,11 @@ class GraphSession:
                 with self._stats_lock:
                     self._preloaded.setdefault(fp, fn)
                 progress.loaded += 1
+        except Exception as e:  # noqa: BLE001 — a dead pre-warm thread must
+            # be visible, not silent: the error lands on the progress object
+            # and in runtime_stats(); queries still work (they fall through
+            # to disk/trace), but operators can see the pass died.
+            progress.error = repr(e)
         finally:
             progress.seconds = time.perf_counter() - t0
             progress._done.set()
@@ -438,6 +448,18 @@ class GraphSession:
     def _take_preloaded(self, fingerprint: str) -> Optional[Callable]:
         with self._stats_lock:
             return self._preloaded.pop(fingerprint, None)
+
+    def close(self, timeout: Optional[float] = None) -> bool:
+        """Stop and join the pre-warm thread (it is non-daemon, so leaving
+        it running blocks interpreter exit). True when fully joined."""
+        self._prewarm_stop.set()
+        t = self._prewarm_thread
+        if t is not None and t.is_alive():
+            t.join(timeout)
+            if t.is_alive():
+                return False
+        self._prewarm_thread = None
+        return True
 
     # ---------------------------------------------- counter plumbing (leaf) --
 

@@ -23,7 +23,8 @@ import time
 
 import numpy as np
 
-from repro.engine import BFSServer, QueryCancelled, ServerOverloaded
+from repro.engine import (BFSServer, QueryCancelled, RetryPolicy,
+                          ServerOverloaded, SessionUnavailable)
 
 
 def _root_candidates(g) -> np.ndarray:
@@ -256,6 +257,247 @@ def run_fused_cancel_probe(server: BFSServer, *, levels: int = 2048,
     )
 
 
+def _chaos_client_loop(server, names, candidates, *, client_id: str,
+                       queries: int, batch: int, seed: int, timeout: float,
+                       out: dict):
+    """Chaos client: every query must RESOLVE — a result or a typed error.
+
+    Unlike `_client_loop`, typed failures are recorded rather than raised:
+    the chaos gate is accounting, `submitted == ok + failed + rejected`
+    with zero timeouts. A timeout is the one unacceptable outcome — it
+    means a crashed worker silently dropped a query instead of the
+    supervisor recovering or failing it."""
+    rng = np.random.default_rng(seed)
+    ok = failed = rejected = lost = 0
+    errors: list = []
+    for i in range(queries):
+        name = names[i % len(names)]
+        cand = candidates[name]
+        roots = rng.choice(cand, size=min(batch, cand.size), replace=False)
+        try:
+            h = server.submit(name, roots, client=client_id)
+        except (ServerOverloaded, SessionUnavailable) as e:
+            rejected += 1
+            errors.append(type(e).__name__)
+            time.sleep(0.005)
+            continue
+        try:
+            h.result(timeout=timeout)
+            ok += 1
+        except TimeoutError:
+            lost += 1
+            errors.append("TimeoutError")
+        except Exception as e:  # noqa: BLE001 — typed failure, accounted
+            failed += 1
+            errors.append(type(e).__name__)
+    out[client_id] = dict(ok=ok, failed=failed, rejected=rejected,
+                          lost=lost, errors=errors)
+
+
+# Phase-A schedule: one worker crash, periodic 2 ms stragglers, two
+# transient mid-traversal dispatch faults, one trace failure. Everything
+# is recoverable (supervision + retry), so the deterministic expectation
+# is availability 1.0 with zero lost queries.
+CHAOS_LOAD_SCHEDULE = ("worker@1;straggler@every=5:delay=2ms;"
+                      "dispatch[mode=batch]@1,4;compile@2")
+
+
+def run_chaos_probe(*, scale: int = 9, edgefactor: int = 8,
+                    clients: int = 8, queries_per_client: int = 4,
+                    batch: int = 4, seed: int = 0,
+                    schedule: str = CHAOS_LOAD_SCHEDULE,
+                    timeout: float = 300.0) -> dict:
+    """Fault-injection probe: serving must self-heal under a seeded schedule.
+
+    Four phases, each under its own `fault_scope` (process-global injector,
+    restored on exit):
+
+    1. load — `clients` concurrent clients against two sessions while the
+       schedule injects a worker crash, stragglers, transient dispatch
+       faults, and a trace failure. Gate: zero lost queries (every handle
+       resolves), availability >= 0.9, and the crash/restart/retry
+       counters prove the faults actually fired and were recovered.
+    2. degrade — unrecoverable dispatch faults (`@*`, retries disabled)
+       force the degradation chain: pallas -> xla when only the kernel
+       path faults, fused batch -> per-root scalar when the whole batched
+       path faults. Gate: degraded results level-bitwise-equal to the
+       fault-free oracle computed before fault installation, parents valid.
+    3. breaker — a `:limit=`-budgeted always-fault schedule trips the
+       per-session circuit breaker (threshold 2); the next submit must be
+       rejected with `SessionUnavailable`; after the reset window the
+       half-open probe query must succeed and re-close the breaker.
+    4. cache — a second session sharing an on-disk artifact cache hits a
+       corrupted load (`cache_load@0`): the entry must be evicted, the
+       plan re-traced, and the result level-bitwise-equal to the first
+       session's.
+    """
+    import tempfile
+
+    from repro.core import graph as G
+    from repro.engine import GraphSession
+    from repro.engine.engine import Engine
+    from repro.core.bfs import BFSConfig
+    from repro.runtime import RuntimeConfig
+    from repro.runtime.artifact_cache import artifact_cache_for
+    from repro.runtime.faults import fault_scope
+
+    out: dict = {}
+
+    # ------------------------------------------------------------- 1. load
+    # Small coalescing caps force many dispatches so the schedule's
+    # occurrence indices (worker@1, dispatch@1,4) are guaranteed to exist.
+    server, graphs = build_server(2, scale, edgefactor=edgefactor,
+                                  seed=seed, max_batch_queries=4,
+                                  max_batch_roots=4 * batch)
+    try:
+        names = sorted(graphs)
+        candidates = {n: _root_candidates(graphs[n]) for n in names}
+        with fault_scope(schedule, seed=seed) as inj:
+            results: dict = {}
+            threads = [
+                threading.Thread(
+                    target=_chaos_client_loop,
+                    args=(server, names, candidates),
+                    kwargs=dict(client_id=f"chaos-{c}",
+                                queries=queries_per_client, batch=batch,
+                                seed=seed * 1000 + c, timeout=timeout,
+                                out=results),
+                    name=f"chaos-client-{c}")
+                for c in range(clients)
+            ]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            injected = inj.stats()
+        if len(results) != clients:
+            raise RuntimeError(
+                f"only {len(results)}/{clients} chaos clients reported")
+        ok = sum(c["ok"] for c in results.values())
+        failed = sum(c["failed"] for c in results.values())
+        rejected = sum(c["rejected"] for c in results.values())
+        lost = sum(c["lost"] for c in results.values())
+        resolved = ok + failed + rejected
+        stats = server.stats()
+        tot = {k: sum(s.get(k, 0) for s in stats["sessions"].values())
+               for k in ("worker_crashes", "worker_restarts", "retries",
+                         "dispatch_failures")}
+        out["load"] = dict(
+            clients=clients, submitted=clients * queries_per_client,
+            ok=ok, failed=failed, rejected=rejected, lost=lost,
+            availability=ok / max(resolved + lost, 1),
+            zero_lost=(lost == 0
+                       and resolved == clients * queries_per_client),
+            injected=injected, **tot)
+    finally:
+        server.close()
+
+    # ---------------------------------------------------------- 2. degrade
+    g = G.rmat(scale, edgefactor=edgefactor, seed=seed)
+    roots = _root_candidates(g)[:batch]
+    srv = BFSServer({"chaos": g}, retry=RetryPolicy(max_retries=0),
+                    breaker_threshold=100)
+    try:
+        kcfg = BFSConfig(backend_kernels=True)
+        # Fault-free oracles FIRST — the degraded runs must match these.
+        oracle_k = srv.submit("chaos", roots, kcfg,
+                              client="oracle").result(timeout=timeout)
+        oracle_p = srv.submit("chaos", roots,
+                              client="oracle").result(timeout=timeout)
+        with fault_scope("dispatch[kernels=pallas]@*", seed=seed):
+            r_xla = srv.submit("chaos", roots, kcfg,
+                               client="degrade").result(timeout=timeout)
+        with fault_scope("dispatch[mode=batch]@*", seed=seed):
+            r_scalar = srv.submit("chaos", roots,
+                                  client="degrade").result(timeout=timeout)
+        r_xla.validate(g)
+        r_scalar.validate(g)
+        c = srv.stats()["sessions"]["chaos"]
+        out["degrade"] = dict(
+            degraded_backend=c["degraded_backend"],
+            degraded_scalar=c["degraded_scalar"],
+            backend_bitwise=bool(
+                (r_xla.level == oracle_k.level).all()
+                and (r_xla.num_levels == oracle_k.num_levels).all()),
+            scalar_bitwise=bool(
+                (r_scalar.level == oracle_p.level).all()
+                and (r_scalar.num_levels == oracle_p.num_levels).all()),
+            parents_valid=True)  # validate() above raises otherwise
+    finally:
+        srv.close()
+
+    # ---------------------------------------------------------- 3. breaker
+    srv = BFSServer({"chaos": g}, retry=RetryPolicy(max_retries=0),
+                    breaker_threshold=2, breaker_reset_s=0.25)
+    try:
+        srv.submit("chaos", roots, client="warm").result(timeout=timeout)
+        # One failed query burns exactly the 2-fire budget (batched
+        # dispatch + the scalar degradation stage) = 2 consecutive breaker
+        # failures = a trip at threshold 2.
+        with fault_scope("dispatch@*:limit=2", seed=seed):
+            tripping_error = None
+            try:
+                srv.submit("chaos", roots,
+                           client="victim").result(timeout=timeout)
+            except Exception as e:  # noqa: BLE001 — expected FaultInjected
+                tripping_error = type(e).__name__
+            rejected_while_open = 0
+            try:
+                srv.submit("chaos", roots, client="victim")
+            except SessionUnavailable:
+                rejected_while_open = 1
+        state_open = srv.stats()["sessions"]["chaos"]["breaker"]["state"]
+        time.sleep(0.3)                      # past the reset window
+        srv.submit("chaos", roots,
+                   client="probe").result(timeout=timeout)  # half-open probe
+        snap = srv.stats()["sessions"]["chaos"]["breaker"]
+        out["breaker"] = dict(
+            tripping_error=tripping_error,
+            rejected_while_open=rejected_while_open,
+            state_while_open=state_open, trips=snap["trips"],
+            state_after_recovery=snap["state"],
+            recovered=(tripping_error == "FaultInjected"
+                       and rejected_while_open == 1
+                       and state_open == "open"
+                       and snap["state"] == "closed"))
+    finally:
+        srv.close()
+
+    # ------------------------------------------------------------ 4. cache
+    with tempfile.TemporaryDirectory(prefix="repro-chaos-") as tmp:
+        rt = RuntimeConfig(cache_dir=tmp, prewarm=False, share_plans=False)
+        s1 = GraphSession(g, runtime=rt, prewarm=False)
+        base = Engine(s1).bfs(roots, backend="fused")
+        s1.close()
+        before = artifact_cache_for(rt).stats()["corrupt_evictions"]
+        with fault_scope("cache_load@0", seed=seed):
+            s2 = GraphSession(g, runtime=rt, prewarm=False)
+            again = Engine(s2).bfs(roots, backend="fused")
+            rt_stats = s2.runtime_stats()
+            s2.close()
+        corrupt = artifact_cache_for(rt).stats()["corrupt_evictions"] - before
+        out["cache"] = dict(
+            corrupt_evictions=corrupt,
+            retraces=rt_stats["traces"],
+            bitwise=bool((again.level == base.level).all()
+                         and (again.num_levels == base.num_levels).all()))
+
+    out["ok"] = bool(
+        out["load"]["zero_lost"]
+        and out["load"]["availability"] >= 0.9
+        and out["load"]["worker_crashes"] >= 1
+        and out["load"]["worker_restarts"] >= 1
+        and out["degrade"]["degraded_backend"] >= 1
+        and out["degrade"]["degraded_scalar"] >= 1
+        and out["degrade"]["backend_bitwise"]
+        and out["degrade"]["scalar_bitwise"]
+        and out["breaker"]["recovered"]
+        and out["cache"]["corrupt_evictions"] >= 1
+        and out["cache"]["retraces"] >= 1
+        and out["cache"]["bitwise"])
+    return out
+
+
 def build_server(n_graphs: int, scale: int, *, edgefactor: int = 16,
                  seed: int = 0, **server_kw):
     """(server, {name: graph}) over `n_graphs` RMAT sessions."""
@@ -361,6 +603,10 @@ def main(argv=None):
     ap.add_argument("--cancel-probe", action="store_true",
                     help="after the load, prove cancelled queries free "
                          "their worker within one level")
+    ap.add_argument("--chaos-probe", action="store_true",
+                    help="after the load, run the fault-injection probe: "
+                         "worker crash, stragglers, dispatch/compile "
+                         "faults, breaker trip+recovery, cache corruption")
     ap.add_argument("--cache-dir", default=None,
                     help="persistent compiled-executable cache directory "
                          "(default: REPRO_CACHE_DIR if set, else disabled)")
@@ -389,6 +635,12 @@ def main(argv=None):
         stats = server.stats()
     finally:
         server.close()
+    chaos = None
+    if args.chaos_probe:
+        chaos = run_chaos_probe(scale=min(args.scale, 10),
+                                edgefactor=min(args.edgefactor, 8),
+                                seed=args.seed)
+        stats["chaos_probe"] = chaos
     restart = None
     if args.restart_probe:
         cache_dir = get_runtime_config().cache_dir
@@ -415,6 +667,18 @@ def main(argv=None):
               f"{probe['wall_ratio']:.2f} vs baseline, "
               f"inflight_after={probe['inflight_after']}, "
               f"worker_alive={probe['worker_alive']}")
+    if chaos is not None:
+        ld = chaos["load"]
+        print(f"[serve] chaos probe: {'OK' if chaos['ok'] else 'FAILED'} | "
+              f"load {ld['ok']}/{ld['submitted']} ok, lost {ld['lost']}, "
+              f"availability {ld['availability']:.2f}, "
+              f"crashes {ld['worker_crashes']} restarts "
+              f"{ld['worker_restarts']} retries {ld['retries']} | "
+              f"degrade backend={chaos['degrade']['degraded_backend']} "
+              f"scalar={chaos['degrade']['degraded_scalar']} | "
+              f"breaker trips={chaos['breaker']['trips']} "
+              f"recovered={chaos['breaker']['recovered']} | "
+              f"cache corrupt_evictions={chaos['cache']['corrupt_evictions']}")
     if restart is not None:
         print(f"[serve] restart probe: cold {restart['cold_start_s']:.2f}s "
               f"({restart['cold_traces']} traces) -> warm "

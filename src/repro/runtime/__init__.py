@@ -19,6 +19,9 @@ compiles:
 * `plan_registry` — the in-process cross-session plan cache, keyed by
   (graph content hash, plan key) instead of session identity, so two
   sessions over the same graph share compiled plans.
+* `faults` — the deterministic fault-injection switchboard (`fault_point`
+  hook sites through compile/cache/dispatch/worker paths, seeded
+  schedule grammar via `REPRO_FAULTS`), zero overhead when disabled.
 
 `GraphSession` wires all four together: executables consult the registry,
 then the disk store, and only then trace; a session pre-warms its plan set
@@ -28,6 +31,10 @@ from repro.runtime.artifact_cache import ArtifactCache, artifact_cache_for
 from repro.runtime.config import (RuntimeConfig, configure,
                                   get_runtime_config, launch_env,
                                   reset_runtime_config, runtime_scope)
+from repro.runtime.faults import (DevicePressure, FaultInjected,
+                                  FaultInjector, FaultSpec, fault_point,
+                                  fault_scope, install_faults,
+                                  parse_fault_schedule, uninstall_faults)
 from repro.runtime.fingerprint import (environment_fingerprint,
                                        graph_fingerprint, plan_fingerprint)
 from repro.runtime.plan_registry import (registry_reset, registry_size,
@@ -37,6 +44,9 @@ __all__ = [
     "RuntimeConfig", "configure", "get_runtime_config", "launch_env",
     "reset_runtime_config", "runtime_scope",
     "ArtifactCache", "artifact_cache_for",
+    "DevicePressure", "FaultInjected", "FaultInjector", "FaultSpec",
+    "fault_point", "fault_scope", "install_faults", "parse_fault_schedule",
+    "uninstall_faults",
     "environment_fingerprint", "graph_fingerprint", "plan_fingerprint",
     "registry_reset", "registry_size", "reset_process_caches",
 ]

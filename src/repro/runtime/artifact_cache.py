@@ -47,6 +47,8 @@ import threading
 import time
 from typing import Any, Optional
 
+from repro.runtime.faults import fault_point
+
 PLANS_SUBDIR = "plans"
 ENTRY_SUFFIX = ".exe"
 _TMP_PREFIX = ".tmp-"
@@ -221,6 +223,10 @@ class ArtifactCache:
             self._count(fingerprint, misses=1)
             return None
         try:
+            # Chaos hook inside the try: an injected cache_load fault takes
+            # the exact corrupt-entry path (evict + miss), proving the
+            # corruption tolerance the docstring promises.
+            fault_point("cache_load", fingerprint=fingerprint)
             with open(path, "rb") as f:
                 meta = pickle.load(f)
                 payload, in_tree, out_tree = pickle.load(f)

@@ -23,6 +23,9 @@ REPRO_INTERPRET        'auto' | 'on' | 'off': Pallas interpret mode when a
                        kernel call leaves it unset (auto = off-TPU only)
 REPRO_DEVICE_COUNT     fake host device count `launch_env()` bakes into
                        XLA_FLAGS (emulated-mesh runs; ignored when unset)
+REPRO_FAULTS           fault-injection schedule (see `repro.runtime.faults`;
+                       '' = disabled). Chaos testing only.
+REPRO_FAULTS_SEED      int seed for probabilistic fault selectors
 =====================  =====================================================
 
 `launch_env()` documents the XLA/tcmalloc launch hygiene from the
@@ -114,6 +117,9 @@ class RuntimeConfig:
     device_count: Optional[int] = None       # fake host devices (launch_env)
     # -- launch hygiene (SNIPPETS §2-3) --------------------------------------
     tcmalloc_path: str = DEFAULT_TCMALLOC
+    # -- chaos testing -------------------------------------------------------
+    faults: Optional[str] = None             # fault schedule ('' / None = off)
+    faults_seed: int = 0
 
     def __post_init__(self):
         if self.kernel_backend not in _TRISTATE:
@@ -133,6 +139,13 @@ class RuntimeConfig:
                 f"device_count must be >= 1, got {self.device_count}")
         if self.cache_dir is not None and not str(self.cache_dir):
             object.__setattr__(self, "cache_dir", None)
+        if self.faults is not None and not str(self.faults).strip():
+            object.__setattr__(self, "faults", None)
+        if self.faults is not None:
+            # Validate the schedule grammar eagerly: a typo'd REPRO_FAULTS
+            # must fail loudly at config time, not silently inject nothing.
+            from repro.runtime.faults import parse_schedule
+            parse_schedule(self.faults)
 
     # ------------------------------------------------------------ resolution --
 
@@ -167,6 +180,10 @@ class RuntimeConfig:
                                                   name="REPRO_INTERPRET")
         if "REPRO_DEVICE_COUNT" in env:
             values["device_count"] = int(env["REPRO_DEVICE_COUNT"])
+        if "REPRO_FAULTS" in env:
+            values["faults"] = env["REPRO_FAULTS"] or None
+        if "REPRO_FAULTS_SEED" in env:
+            values["faults_seed"] = int(env["REPRO_FAULTS_SEED"])
         for key, val in explicit.items():
             if val is None:
                 continue

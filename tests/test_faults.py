@@ -1,0 +1,390 @@
+"""Fault injection + self-healing serving: schedule grammar, deterministic
+selection, hook sites, worker supervision/restart, transient retry, the
+graceful-degradation chain (bitwise vs the fault-free oracle), circuit
+breaker trip/recovery, artifact-cache corruption tolerance, and the
+pre-warm error surface."""
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import graph as G
+from repro.core.bfs import BFSConfig
+from repro.engine import (BatchPopError, BFSServer, BoundedPriorityQueue,
+                          QueueClosed, QueueFull, RetryPolicy,
+                          SessionUnavailable)
+from repro.runtime import RuntimeConfig
+from repro.runtime.faults import (SITES, DevicePressure, FaultInjected,
+                                  FaultInjector, active, fault_point,
+                                  fault_scope, install, parse_schedule,
+                                  parse_spec, uninstall)
+
+
+def _fires(inj, site, **ctx):
+    """True when `fire` raises (delay-only actions return False)."""
+    try:
+        inj.fire(site, **ctx)
+        return False
+    except FaultInjected:
+        return True
+
+
+@pytest.fixture(scope="module")
+def rmat9():
+    return G.rmat(9, seed=7)
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_injector():
+    """Every test starts and ends with no process-global injector."""
+    uninstall()
+    yield
+    uninstall()
+
+
+# ------------------------------------------------------------------ grammar
+
+
+def test_parse_spec_grammar():
+    s = parse_spec("dispatch")
+    assert s.site == "dispatch"
+    assert s.selected(0, seed=0) and not s.selected(1, seed=0)  # default @0
+    assert parse_spec("worker@3").hits == frozenset({3})
+    assert parse_spec("worker@0,2,5").hits == frozenset({0, 2, 5})
+    s = parse_spec("straggler@every=4:delay=20ms")
+    assert s.every == 4 and s.delay_s == pytest.approx(0.02)
+    s = parse_spec("dispatch[mode=batch,kernels=xla]@*")
+    assert dict(s.match) == {"mode": "batch", "kernels": "xla"}
+    assert s.every == 1                        # '@*' == every occurrence
+    assert parse_spec("cache_load@p=0.5").p == pytest.approx(0.5)
+    assert parse_spec("compile@*:limit=3").limit == 3
+    assert parse_spec("device@0:delay=1s").delay_s == pytest.approx(1.0)
+    specs = parse_schedule("worker@1; dispatch@*:limit=2")
+    assert [sp.site for sp in specs] == ["worker", "dispatch"]
+    assert parse_schedule(None) == ()
+    assert parse_schedule("") == ()
+
+
+@pytest.mark.parametrize("bad", [
+    "nope@0",                    # unknown site
+    "dispatch@x",                # unparseable selector
+    "dispatch@every=0",          # every must be >= 1
+    "dispatch@p=1.5",            # p out of range
+    "dispatch:delay=soon",       # bad delay literal
+    "dispatch:limit=0",          # limit must be >= 1
+    "dispatch:frobnicate=1",     # unknown modifier
+    "dispatch[unterminated@0",   # broken filter block
+])
+def test_parse_spec_rejects(bad):
+    with pytest.raises(ValueError):
+        parse_spec(bad)
+
+
+def test_selector_semantics():
+    inj = FaultInjector("dispatch@1,3", seed=0)
+    assert [_fires(inj, "dispatch") for _ in range(5)] == [
+        False, True, False, True, False]
+    inj = FaultInjector("dispatch@every=3", seed=0)
+    assert [_fires(inj, "dispatch") for _ in range(7)] == [
+        True, False, False, True, False, False, True]
+    inj = FaultInjector("dispatch@*:limit=2", seed=0)
+    assert [_fires(inj, "dispatch") for _ in range(5)] == [
+        True, True, False, False, False]
+    assert inj.fired("dispatch") == 2
+
+
+def test_filters_gate_on_context():
+    inj = FaultInjector("dispatch[mode=batch]@*", seed=0)
+    assert not _fires(inj, "dispatch", mode="scalar")
+    assert not _fires(inj, "dispatch")            # missing key: no match
+    assert _fires(inj, "dispatch", mode="batch")
+    # occurrence indices count MATCHED occurrences only
+    inj = FaultInjector("dispatch[mode=batch]@1", seed=0)
+    assert not _fires(inj, "dispatch", mode="batch")   # matched occurrence 0
+    assert not _fires(inj, "dispatch", mode="scalar")  # not matched
+    assert _fires(inj, "dispatch", mode="batch")       # matched occurrence 1
+
+
+def test_probability_is_seed_deterministic():
+    pat = [_fires(FaultInjector("dispatch@p=0.5", seed=42), "dispatch")
+           for _ in range(1)]
+    a = FaultInjector("dispatch@p=0.5", seed=42)
+    b = FaultInjector("dispatch@p=0.5", seed=42)
+    pa = [_fires(a, "dispatch") for _ in range(64)]
+    pb = [_fires(b, "dispatch") for _ in range(64)]
+    assert pa == pb                    # same seed -> identical pattern
+    assert any(pa) and not all(pa)     # and it is actually probabilistic
+    assert pat == pa[:1]
+
+
+def test_delay_modifier_sleeps_instead_of_raising():
+    inj = FaultInjector("straggler@0:delay=30ms", seed=0)
+    t0 = time.perf_counter()
+    inj.fire("straggler")              # must NOT raise
+    assert time.perf_counter() - t0 >= 0.025
+    assert inj.events[0]["action"] == "delay"
+    t0 = time.perf_counter()
+    inj.fire("straggler")              # occurrence 1: no-op
+    assert time.perf_counter() - t0 < 0.02
+
+
+def test_install_scope_and_disabled_noop():
+    fault_point("dispatch")            # nothing installed: free no-op
+    outer = install("worker@*", seed=0)
+    assert active() is outer
+    with fault_scope("dispatch@*", seed=0) as inner:
+        assert active() is inner
+        with pytest.raises(FaultInjected):
+            fault_point("dispatch")
+        fault_point("worker")          # outer schedule not active
+    assert active() is outer           # previous injector restored
+    with pytest.raises(FaultInjected):
+        fault_point("worker")
+    uninstall()
+    assert active() is None
+    fault_point("worker")
+
+
+def test_fault_exception_metadata():
+    inj = FaultInjector("device@0", seed=0)
+    with pytest.raises(DevicePressure) as ei:
+        inj.fire("device")
+    assert not ei.value.transient      # memory pressure: do not retry
+    inj = FaultInjector("dispatch@0", seed=0)
+    with pytest.raises(FaultInjected) as ei:
+        inj.fire("dispatch")
+    assert ei.value.transient
+    assert set(inj.stats()["fired"]) == {"dispatch"}
+
+
+def test_runtime_config_validates_schedule():
+    assert RuntimeConfig(faults="dispatch@0").faults == "dispatch@0"
+    assert RuntimeConfig(faults="").faults is None
+    with pytest.raises(ValueError):
+        RuntimeConfig(faults="nope@0")
+    assert set(SITES) >= {"compile", "cache_load", "dispatch", "worker",
+                          "straggler", "device"}
+
+
+# ----------------------------------------------------------- queue hardening
+
+
+def test_get_batch_pop_failure_carries_popped_items():
+    q = BoundedPriorityQueue(4)
+    for v in "abc":
+        q.put(v)
+
+    def key(it):
+        if it == "b":
+            raise RuntimeError("boom")
+        return True
+
+    with pytest.raises(BatchPopError) as ei:
+        q.get_batch(0, key=key, max_items=4)
+    assert ei.value.items == ["a"]     # popped before the failure
+    assert isinstance(ei.value.cause, RuntimeError)
+    # the queue itself survives: remaining items still drain
+    assert q.get_batch(0, key=lambda it: True, max_items=4) == ["b", "c"]
+
+
+def test_force_put_bypasses_depth_not_close():
+    q = BoundedPriorityQueue(1)
+    q.put("a")
+    with pytest.raises(QueueFull):
+        q.put("b")
+    q.put("b", force=True)             # requeue path: depth cap waived
+    assert len(q) == 2
+    q.close()
+    with pytest.raises(QueueClosed):
+        q.put("c", force=True)         # but never resurrects a closed queue
+
+
+# ------------------------------------------------------- self-healing server
+
+
+def test_worker_crash_is_supervised_and_queries_survive(rmat9):
+    server = BFSServer({"g": rmat9})
+    try:
+        roots = np.flatnonzero(rmat9.degrees > 0)[:4]
+        with fault_scope("worker@0", seed=0):
+            server.submit("g", roots, client="a").result(timeout=300)
+        c = server.stats()["sessions"]["g"]
+        assert c["worker_crashes"] == 1 and c["worker_restarts"] == 1
+        assert c["retries"] >= 1       # the crashed batch was requeued
+        assert c["served"] == 1 and c["failed"] == 0
+    finally:
+        server.close()
+
+
+def test_transient_dispatch_fault_retried(rmat9):
+    server = BFSServer({"g": rmat9})
+    try:
+        roots = np.flatnonzero(rmat9.degrees > 0)[:4]
+        with fault_scope("dispatch[mode=batch]@0", seed=0):
+            r = server.submit("g", roots, client="a").result(timeout=300)
+        r.validate(rmat9)
+        c = server.stats()["sessions"]["g"]
+        assert c["retries"] >= 1 and c["dispatch_failures"] >= 1
+        assert c["served"] == 1 and c["failed"] == 0
+        assert c["breaker"]["state"] == "closed"   # success reset the breaker
+    finally:
+        server.close()
+
+
+def test_degradation_chain_bitwise_vs_oracle(rmat9):
+    """pallas->xla when only the kernel path faults; fused batch->scalar
+    when the whole batched path faults. Both must match the fault-free
+    oracle (levels are unique; parents validated against the graph)."""
+    server = BFSServer({"g": rmat9}, retry=RetryPolicy(max_retries=0),
+                       breaker_threshold=100)
+    try:
+        roots = np.flatnonzero(rmat9.degrees > 0)[:4]
+        kcfg = BFSConfig(backend_kernels=True)
+        oracle_k = server.submit("g", roots, kcfg,
+                                 client="o").result(timeout=300)
+        oracle_p = server.submit("g", roots, client="o").result(timeout=300)
+        with fault_scope("dispatch[kernels=pallas]@*", seed=0):
+            r_xla = server.submit("g", roots, kcfg,
+                                  client="d").result(timeout=300)
+        with fault_scope("dispatch[mode=batch]@*", seed=0):
+            r_scalar = server.submit("g", roots,
+                                     client="d").result(timeout=300)
+        r_xla.validate(rmat9)
+        r_scalar.validate(rmat9)
+        np.testing.assert_array_equal(r_xla.level, oracle_k.level)
+        np.testing.assert_array_equal(r_scalar.level, oracle_p.level)
+        c = server.stats()["sessions"]["g"]
+        assert c["degraded_backend"] == 1 and c["degraded_scalar"] == 1
+        assert c["served"] == 4 and c["failed"] == 0
+    finally:
+        server.close()
+
+
+def test_streamed_fused_query_cannot_degrade_to_scalar(rmat9):
+    """The scalar fallback cannot produce batch-level stream rows, so a
+    STREAMED fused query under a batch-path fault fails typed instead of
+    silently changing its stream shape."""
+    server = BFSServer({"g": rmat9}, retry=RetryPolicy(max_retries=0),
+                       breaker_threshold=100)
+    try:
+        roots = np.flatnonzero(rmat9.degrees > 0)[:3]
+        server.submit("g", roots, backend="fused",
+                      client="w").result(timeout=300)         # warm
+        with fault_scope("dispatch[mode=batch]@*", seed=0):
+            h = server.submit("g", roots, backend="fused", stream=True,
+                              client="a")
+            with pytest.raises(FaultInjected):
+                h.result(timeout=300)
+        c = server.stats()["sessions"]["g"]
+        assert c["degraded_scalar"] == 0 and c["failed"] == 1
+        assert server._caps.inflight("a") == 0    # slot still freed
+    finally:
+        server.close()
+
+
+def test_circuit_breaker_trips_and_recovers(rmat9):
+    server = BFSServer({"g": rmat9}, retry=RetryPolicy(max_retries=0),
+                       breaker_threshold=2, breaker_reset_s=0.2)
+    try:
+        roots = np.flatnonzero(rmat9.degrees > 0)[:4]
+        server.submit("g", roots, client="w").result(timeout=300)  # warm
+        # One failed query = 2 fires (batched dispatch + the scalar
+        # degradation stage) = 2 consecutive failures = a trip.
+        with fault_scope("dispatch@*:limit=2", seed=0):
+            with pytest.raises(FaultInjected):
+                server.submit("g", roots, client="a").result(timeout=300)
+            with pytest.raises(SessionUnavailable) as ei:
+                server.submit("g", roots, client="a")
+        assert ei.value.state == "open"
+        c = server.stats()["sessions"]["g"]
+        assert c["breaker"]["state"] == "open"
+        assert c["breaker"]["trips"] == 1 and c["breaker_rejected"] == 1
+        time.sleep(0.25)                          # past the reset window
+        r = server.submit("g", roots, client="a").result(timeout=300)
+        r.validate(rmat9)                         # half-open probe served
+        assert server.stats()["sessions"]["g"]["breaker"]["state"] == "closed"
+    finally:
+        server.close()
+
+
+def test_compile_fault_is_transient_and_retried():
+    """A trace/compile failure must not poison the plan: the retry
+    re-traces and serves. A unique graph guarantees a cold trace."""
+    g = G.from_edges(np.arange(96), np.arange(1, 97), 97)
+    server = BFSServer({"p": g})
+    try:
+        with fault_scope("compile@0", seed=0):
+            r = server.submit("p", [0, 1], client="a").result(timeout=300)
+        r.validate(g)
+        c = server.stats()["sessions"]["p"]
+        assert c["retries"] >= 1 and c["served"] == 1 and c["failed"] == 0
+    finally:
+        server.close()
+
+
+def test_device_pressure_is_not_retried(rmat9):
+    """DevicePressure is non-transient: no retry burn-down, straight to the
+    degradation chain (which cannot help a device-level fault either when
+    it keeps firing) and a typed failure."""
+    server = BFSServer({"g": rmat9}, breaker_threshold=100)
+    try:
+        roots = np.flatnonzero(rmat9.degrees > 0)[:4]
+        server.submit("g", roots, client="w").result(timeout=300)  # warm
+        with fault_scope("device@*", seed=0):
+            with pytest.raises(DevicePressure):
+                server.submit("g", roots, client="a").result(timeout=300)
+        c = server.stats()["sessions"]["g"]
+        assert c["retries"] == 0 and c["failed"] == 1
+    finally:
+        server.close()
+
+
+# ----------------------------------------------- cache corruption + pre-warm
+
+
+def test_cache_load_fault_takes_corrupt_evict_path(tmp_path):
+    """An injected cache_load fault exercises the exact corrupt-entry path:
+    evict + miss + retrace, with a bitwise-identical result."""
+    from repro.engine import GraphSession
+    from repro.engine.engine import Engine
+    from repro.runtime.artifact_cache import artifact_cache_for
+
+    g = G.from_edges(np.arange(64), np.arange(1, 65), 65)
+    rt = RuntimeConfig(cache_dir=str(tmp_path), prewarm=False,
+                       share_plans=False)
+    s1 = GraphSession(g, runtime=rt, prewarm=False)
+    base = Engine(s1).bfs([0, 1], backend="fused")
+    assert s1.runtime_stats()["traces"] >= 1      # cold: populated the cache
+    s1.close()
+    before = artifact_cache_for(rt).stats()["corrupt_evictions"]
+    with fault_scope("cache_load@0", seed=0):
+        s2 = GraphSession(g, runtime=rt, prewarm=False)
+        again = Engine(s2).bfs([0, 1], backend="fused")
+        retraces = s2.runtime_stats()["traces"]
+        s2.close()
+    assert artifact_cache_for(rt).stats()["corrupt_evictions"] - before == 1
+    assert retraces >= 1                          # evicted entry re-traced
+    np.testing.assert_array_equal(again.level, base.level)
+    np.testing.assert_array_equal(again.parent, base.parent)
+
+
+def test_prewarm_pass_error_is_visible(tmp_path, monkeypatch):
+    """A dying pre-warm thread must land its exception on the progress
+    object and in runtime_stats(), not vanish silently."""
+    from repro.engine import GraphSession
+    from repro.runtime.artifact_cache import ArtifactCache
+
+    def boom(self):
+        raise RuntimeError("scan exploded")
+
+    monkeypatch.setattr(ArtifactCache, "scan", boom)
+    rt = RuntimeConfig(cache_dir=str(tmp_path), share_plans=False)
+    g = G.from_edges(np.arange(32), np.arange(1, 33), 33)
+    s = GraphSession(g, runtime=rt, prewarm=True)
+    try:
+        report = s.prewarm_wait(timeout=30)
+        assert "scan exploded" in (report["error"] or "")
+        assert s.runtime_stats()["prewarm"]["error"] == report["error"]
+    finally:
+        assert s.close(timeout=30)                # thread joined, not leaked

@@ -468,6 +468,51 @@ def test_close_timeout_is_a_shared_deadline():
             pass
 
 
+def test_stream_timeout_expires_without_losing_the_query(two_graphs):
+    """`stream(timeout)` raises TimeoutError when no level arrives in time,
+    but the query itself survives: a fresh iterator drains the levels and
+    `result()` still completes, with the admission slot released."""
+    g = two_graphs["g0"]
+    server = BFSServer({"g": g}, autostart=False,
+                       max_inflight_per_client=1)
+    try:
+        root = int(np.argmax(g.degrees))
+        h = server.submit("g", root, stream=True, client="a")
+        it = h.stream(timeout=0.05)
+        with pytest.raises(TimeoutError):        # no worker: nothing arrives
+            next(it)
+        assert not h.done()                      # expiry != failure
+        server.start()
+        events = list(h.stream(timeout=300))     # fresh iterator resumes
+        res = h.result(timeout=30)
+        assert len(events) == res.num_levels[0] + 1
+        assert server._caps.inflight("a") == 0
+    finally:
+        server.close()
+
+
+def test_close_races_inflight_streamed_query():
+    """`close()` racing an in-flight streamed query: the terminal event is
+    still delivered (the stream ends typed, never hangs) and the admission
+    slot frees — no query is silently lost in the shutdown race."""
+    n = 4000
+    server = BFSServer({"p": _path_graph(n)}, max_inflight_per_client=1)
+    h = server.submit("p", 0, stream=True, client="a")
+    it = h.stream(timeout=300)
+    next(it)                                     # provably in flight
+    closer = threading.Thread(target=server.close, kwargs=dict(timeout=1.0))
+    closer.start()
+    h.cancel()                                   # racing the shutdown
+    with pytest.raises(QueryCancelled):
+        for _ in it:                             # terminal event delivered
+            pass
+    with pytest.raises(QueryCancelled):
+        h.result(timeout=60)
+    closer.join(timeout=60)
+    assert not closer.is_alive()
+    assert server._caps.inflight("a") == 0
+
+
 def test_coalesced_results_split_correctly(two_graphs):
     """Queries merged into one dispatch get their own roots back, identical
     to running them alone."""
