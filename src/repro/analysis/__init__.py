@@ -1,0 +1,33 @@
+"""Static analysis + runtime concurrency sanitizer for the BFS stack.
+
+Two halves, one contract surface:
+
+* :mod:`repro.analysis.lint` / :mod:`repro.analysis.rules` /
+  :mod:`repro.analysis.deadcode` — the AST linter behind
+  ``python -m repro.analysis`` (tracing hygiene, plan-key hygiene, Pallas
+  shape checks, lock-scope checks, template quarantine).
+* :mod:`repro.analysis.concurrency` — instrumented lock/timer wrappers
+  activated by ``RuntimeConfig.sanitize`` / ``REPRO_SANITIZE=1``; zero
+  overhead when off.
+
+Only the sanitizer surface is re-exported here: the engine imports it on
+every startup, while the linter is tooling that should not be paid for at
+runtime.
+"""
+from repro.analysis.concurrency import (LockSanitizer, active,
+                                        ensure_installed, install, make_condition,
+                                        make_lock, make_rlock, make_timer,
+                                        sanitize_scope, uninstall)
+
+__all__ = [
+    "LockSanitizer",
+    "active",
+    "ensure_installed",
+    "install",
+    "make_condition",
+    "make_lock",
+    "make_rlock",
+    "make_timer",
+    "sanitize_scope",
+    "uninstall",
+]

@@ -1,0 +1,646 @@
+"""AST rule catalog for the tracing-hygiene linter.
+
+Per-file rules, each with a stable id used in ``# repro-ok:`` suppressions
+and the baseline file:
+
+===== ====================================================================
+TH001 explicit host sync (``jax.device_get`` / ``block_until_ready``) in
+      the engine layer outside the sanctioned per-level sync
+TH002 implicit host sync: ``float()``/``int()``/``bool()``/``np.asarray``/
+      ``.item()`` applied to a device value
+TH003 retrace hazard: ``jax.jit`` / ``pallas_call`` / ``shard_map``
+      constructed inside a ``for``/``while`` body
+PK001 unhashable plan-key ingredient (list/dict/set/lambda/comprehension)
+      passed to ``session.executable(...)`` / ``session.cached(...)``
+PL001 Pallas grid/BlockSpec shape inconsistency (index-map arity vs grid
+      rank, index tuple length vs block shape)
+PL002 unmasked gather on a ragged ELL tile: ``jnp.take`` with raw
+      neighbor indices not passed through ``jnp.clip``
+LS001 attribute of a lock-owning class mutated outside any
+      ``with self._lock`` scope (outside ``__init__``)
+===== ====================================================================
+
+Whole-tree rules (DC001 quarantine gate) live in
+:mod:`repro.analysis.deadcode`.
+
+The rules are tuned to this codebase, not general-purpose: scoping is by
+path (``repro/engine/``, ``repro/kernels/``), and the dataflow in TH002 and
+PL002 is deliberately local and conservative — a name whose provenance the
+rule cannot see is never flagged.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, List, Optional, Sequence, Set, Tuple
+
+from repro.analysis.lint import Finding
+
+_DEVICE_ROOTS = {"jnp", "jax", "lax"}
+_LOCK_CTORS = {
+    "Lock",
+    "RLock",
+    "Condition",
+    "make_lock",
+    "make_rlock",
+    "make_condition",
+}
+
+
+def _attr_chain(node: ast.AST) -> Optional[List[str]]:
+    """``a.b.c`` -> ["a", "b", "c"]; None when the chain has a non-name root."""
+    parts: List[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if isinstance(node, ast.Name):
+        parts.append(node.id)
+        return list(reversed(parts))
+    return None
+
+
+def _root_name(node: ast.AST) -> Optional[str]:
+    """Unwrap ``x.reshape(-1).astype(...)`` style chains down to the root Name."""
+    while True:
+        if isinstance(node, ast.Name):
+            return node.id
+        if isinstance(node, ast.Attribute):
+            node = node.value
+        elif isinstance(node, ast.Call):
+            node = node.func
+        elif isinstance(node, ast.Subscript):
+            node = node.value
+        else:
+            return None
+
+
+class Rule:
+    id: str = ""
+    title: str = ""
+
+    def applies(self, path: str) -> bool:
+        return True
+
+    def check(self, tree: ast.AST, source: str, path: str) -> List[Finding]:
+        raise NotImplementedError
+
+    def _finding(self, path: str, node: ast.AST, message: str) -> Finding:
+        return Finding(
+            rule=self.id,
+            path=path,
+            line=getattr(node, "lineno", 1),
+            col=getattr(node, "col_offset", 0),
+            message=message,
+        )
+
+
+# ---------------------------------------------------------------------------
+# TH001 — explicit host syncs in the engine layer
+# ---------------------------------------------------------------------------
+
+
+class ExplicitHostSync(Rule):
+    id = "TH001"
+    title = "explicit host sync outside the sanctioned per-level sync"
+
+    def applies(self, path: str) -> bool:
+        return "repro/engine/" in path
+
+    def check(self, tree: ast.AST, source: str, path: str) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if not chain:
+                continue
+            if chain[-1] == "device_get" and chain[0] == "jax":
+                out.append(
+                    self._finding(
+                        path,
+                        node,
+                        "jax.device_get in the engine layer: the only "
+                        "sanctioned per-level sync is LevelDriver._sync; "
+                        "justify other sites with '# repro-ok: TH001 <why>'",
+                    )
+                )
+            elif chain[-1] == "block_until_ready":
+                out.append(
+                    self._finding(
+                        path,
+                        node,
+                        "block_until_ready in the engine layer stalls the "
+                        "dispatch pipeline; keep syncs in LevelDriver._sync "
+                        "or justify with '# repro-ok: TH001 <why>'",
+                    )
+                )
+        return out
+
+
+# ---------------------------------------------------------------------------
+# TH002 — implicit host syncs via float()/np.asarray()/.item() on device values
+# ---------------------------------------------------------------------------
+
+
+class ImplicitHostSync(Rule):
+    id = "TH002"
+    title = "implicit host sync on a device value"
+
+    def applies(self, path: str) -> bool:
+        return "repro/engine/" in path or "repro/core/" in path
+
+    def check(self, tree: ast.AST, source: str, path: str) -> List[Finding]:
+        out: List[Finding] = []
+        for fn in ast.walk(tree):
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                out.extend(self._check_function(fn, path))
+        return out
+
+    @staticmethod
+    def _is_device_expr(node: ast.AST, device_names: Set[str]) -> bool:
+        if isinstance(node, ast.Name):
+            return node.id in device_names
+        if isinstance(node, ast.Call):
+            chain = _attr_chain(node.func)
+            if not chain:
+                return False
+            # calls that land on host (or return non-array handles)
+            if chain[-1] in {
+                "device_get",
+                "devices",
+                "local_devices",
+                "device_count",
+                "local_device_count",
+                "default_backend",
+            }:
+                return False
+            return chain[0] in _DEVICE_ROOTS
+        if isinstance(node, ast.Subscript):
+            return ImplicitHostSync._is_device_expr(node.value, device_names)
+        return False
+
+    def _check_function(self, fn: ast.AST, path: str) -> List[Finding]:
+        out: List[Finding] = []
+        device: Set[str] = set()
+        # one forward pass in source order: assignments seed the device set,
+        # consuming calls are checked against it
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt = node.targets[0]
+                if isinstance(tgt, ast.Name) and self._is_device_expr(node.value, device):
+                    device.add(tgt.id)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            # float(x) / int(x) / bool(x) on a device value
+            if (
+                isinstance(node.func, ast.Name)
+                and node.func.id in {"float", "int", "bool"}
+                and len(node.args) == 1
+                and self._is_device_expr(node.args[0], device)
+            ):
+                out.append(
+                    self._finding(
+                        path,
+                        node,
+                        f"{node.func.id}() on a device value forces a "
+                        "host sync; hoist the transfer to the sanctioned "
+                        "sync point or keep the value on device",
+                    )
+                )
+                continue
+            chain = _attr_chain(node.func)
+            if not chain:
+                continue
+            # np.asarray / np.array on a device value
+            if (
+                chain[0] in {"np", "numpy"}
+                and chain[-1] in {"asarray", "array"}
+                and node.args
+                and self._is_device_expr(node.args[0], device)
+            ):
+                out.append(
+                    self._finding(
+                        path,
+                        node,
+                        f"{'.'.join(chain)} on a device value is an implicit "
+                        "device->host copy; use jax.device_get at the "
+                        "sanctioned sync point instead",
+                    )
+                )
+            # x.item() / x.tolist() on a device value
+            elif (
+                chain[-1] in {"item", "tolist"}
+                and len(chain) == 2
+                and chain[0] in device
+            ):
+                out.append(
+                    self._finding(
+                        path,
+                        node,
+                        f"{chain[0]}.{chain[-1]}() blocks on device "
+                        "completion; batch the transfer at the sanctioned "
+                        "sync point",
+                    )
+                )
+        return out
+
+
+# ---------------------------------------------------------------------------
+# TH003 — retrace hazards: jit/pallas_call built inside loops
+# ---------------------------------------------------------------------------
+
+
+class RetraceHazard(Rule):
+    id = "TH003"
+    title = "jit/pallas_call constructed inside a loop"
+
+    _CTORS = {"jit", "pmap", "pallas_call", "shard_map", "shard_map_compat"}
+
+    def applies(self, path: str) -> bool:
+        return "repro/" in path
+
+    def check(self, tree: ast.AST, source: str, path: str) -> List[Finding]:
+        out: List[Finding] = []
+        for loop in ast.walk(tree):
+            if not isinstance(loop, (ast.For, ast.While)):
+                continue
+            for node in ast.walk(loop):
+                # constructions inside a nested def only run when the def is
+                # called, which this lexical rule cannot see; skip them
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    continue
+                if not isinstance(node, ast.Call):
+                    continue
+                chain = _attr_chain(node.func)
+                if not chain or chain[-1] not in self._CTORS:
+                    continue
+                if len(chain) > 1 and chain[0] not in {"jax", "pl", "pallas"} | _DEVICE_ROOTS:
+                    continue
+                out.append(
+                    self._finding(
+                        path,
+                        node,
+                        f"{'.'.join(chain)} constructed inside a loop retraces "
+                        "on every iteration; build it once outside the loop "
+                        "and reuse (or cache via session.executable)",
+                    )
+                )
+        return out
+
+
+# ---------------------------------------------------------------------------
+# PK001 — plan-key hygiene
+# ---------------------------------------------------------------------------
+
+
+class PlanKeyHygiene(Rule):
+    id = "PK001"
+    title = "unhashable plan-key ingredient"
+
+    _SINKS = {"executable", "cached"}
+    _BAD = (
+        ast.List,
+        ast.Dict,
+        ast.Set,
+        ast.Lambda,
+        ast.ListComp,
+        ast.SetComp,
+        ast.DictComp,
+        ast.GeneratorExp,
+    )
+
+    def applies(self, path: str) -> bool:
+        return "repro/engine/" in path or "repro/runtime/" in path
+
+    def check(self, tree: ast.AST, source: str, path: str) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            if not (
+                isinstance(node.func, ast.Attribute)
+                and node.func.attr in self._SINKS
+            ):
+                continue
+            key_exprs: List[ast.AST] = list(node.args[:1])
+            key_exprs.extend(kw.value for kw in node.keywords if kw.arg == "key")
+            for expr in key_exprs:
+                for sub in ast.walk(expr):
+                    if isinstance(sub, self._BAD):
+                        kind = type(sub).__name__.lower()
+                        out.append(
+                            self._finding(
+                                path,
+                                sub,
+                                f"plan-key argument to .{node.func.attr}() "
+                                f"contains a {kind}: keys must be hashable, "
+                                "stable tuples of scalars (closures and "
+                                "mutable containers silently defeat the "
+                                "plan cache)",
+                            )
+                        )
+                        break
+        return out
+
+
+# ---------------------------------------------------------------------------
+# PL001 — Pallas grid/BlockSpec consistency
+# ---------------------------------------------------------------------------
+
+
+class PallasShapeConsistency(Rule):
+    id = "PL001"
+    title = "pallas grid/BlockSpec shape inconsistency"
+
+    def applies(self, path: str) -> bool:
+        return "repro/kernels/" in path
+
+    def check(self, tree: ast.AST, source: str, path: str) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if not chain or chain[-1] != "pallas_call":
+                continue
+            grid_rank = self._grid_rank(node)
+            for spec in self._block_specs(node):
+                out.extend(self._check_spec(spec, grid_rank, path))
+        return out
+
+    @staticmethod
+    def _grid_rank(call: ast.Call) -> Optional[int]:
+        for kw in call.keywords:
+            if kw.arg == "grid":
+                if isinstance(kw.value, ast.Tuple):
+                    return len(kw.value.elts)
+                if isinstance(kw.value, (ast.Name, ast.Constant)):
+                    return 1
+        return None
+
+    @staticmethod
+    def _block_specs(call: ast.Call) -> List[ast.Call]:
+        specs: List[ast.Call] = []
+        for kw in call.keywords:
+            if kw.arg not in {"in_specs", "out_specs"}:
+                continue
+            nodes = (
+                kw.value.elts
+                if isinstance(kw.value, (ast.List, ast.Tuple))
+                else [kw.value]
+            )
+            for n in nodes:
+                if isinstance(n, ast.Call):
+                    chain = _attr_chain(n.func)
+                    if chain and chain[-1] == "BlockSpec":
+                        specs.append(n)
+        return specs
+
+    def _check_spec(
+        self, spec: ast.Call, grid_rank: Optional[int], path: str
+    ) -> List[Finding]:
+        out: List[Finding] = []
+        block_shape = spec.args[0] if spec.args else None
+        index_map: Optional[ast.AST] = spec.args[1] if len(spec.args) > 1 else None
+        for kw in spec.keywords:
+            if kw.arg == "index_map":
+                index_map = kw.value
+        shape_len = (
+            len(block_shape.elts) if isinstance(block_shape, ast.Tuple) else None
+        )
+        if isinstance(index_map, ast.Lambda):
+            arity = len(index_map.args.args)
+            if grid_rank is not None and arity != grid_rank:
+                out.append(
+                    self._finding(
+                        path,
+                        index_map,
+                        f"BlockSpec index_map takes {arity} argument(s) but "
+                        f"the grid has rank {grid_rank}; pallas passes one "
+                        "program id per grid axis",
+                    )
+                )
+            body = index_map.body
+            if isinstance(body, ast.Tuple) and shape_len is not None:
+                if len(body.elts) != shape_len:
+                    out.append(
+                        self._finding(
+                            path,
+                            body,
+                            f"BlockSpec index_map returns {len(body.elts)} "
+                            f"indices but the block shape has "
+                            f"{shape_len} dim(s)",
+                        )
+                    )
+        return out
+
+
+# ---------------------------------------------------------------------------
+# PL002 — unmasked gathers on ragged ELL tiles
+# ---------------------------------------------------------------------------
+
+
+class UnmaskedGather(Rule):
+    id = "PL002"
+    title = "unmasked gather on a ragged ELL tile"
+
+    def applies(self, path: str) -> bool:
+        return "repro/kernels/" in path
+
+    def check(self, tree: ast.AST, source: str, path: str) -> List[Finding]:
+        out: List[Finding] = []
+        for fn in ast.walk(tree):
+            if not isinstance(fn, ast.FunctionDef):
+                continue
+            ref_params = {
+                a.arg for a in fn.args.args if a.arg.endswith("_ref")
+            }
+            if not (fn.name.endswith("_kernel") or ref_params):
+                continue
+            out.extend(self._check_kernel(fn, ref_params, path))
+        return out
+
+    @staticmethod
+    def _contains_ref_read(node: ast.AST, ref_names: Set[str]) -> bool:
+        for sub in ast.walk(node):
+            if isinstance(sub, ast.Subscript):
+                root = _root_name(sub.value)
+                if root in ref_names:
+                    return True
+        return False
+
+    def _check_kernel(
+        self, fn: ast.FunctionDef, ref_params: Set[str], path: str
+    ) -> List[Finding]:
+        clipped: Set[str] = set()
+        raw: Set[str] = set()
+        out: List[Finding] = []
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Assign) and len(node.targets) == 1:
+                tgt = node.targets[0]
+                if not isinstance(tgt, ast.Name):
+                    continue
+                val = node.value
+                chain = (
+                    _attr_chain(val.func) if isinstance(val, ast.Call) else None
+                )
+                if chain and chain[-1] == "clip":
+                    clipped.add(tgt.id)
+                elif self._contains_ref_read(val, ref_params) or (
+                    isinstance(val, ast.Name) and val.id in raw
+                ):
+                    raw.add(tgt.id)
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            chain = _attr_chain(node.func)
+            if not chain or chain[-1] != "take" or len(node.args) < 2:
+                continue
+            idx_root = _root_name(node.args[1])
+            if idx_root is None or idx_root in clipped:
+                continue
+            if idx_root in raw or idx_root in ref_params:
+                out.append(
+                    self._finding(
+                        path,
+                        node,
+                        f"jnp.take indexed by '{idx_root}' which comes from "
+                        "a ref read without jnp.clip: padded lanes of a "
+                        "ragged ELL tile hold out-of-range ids, so the "
+                        "gather must clip first and mask after",
+                    )
+                )
+        return out
+
+
+# ---------------------------------------------------------------------------
+# LS001 — lock-scope discipline in threaded classes
+# ---------------------------------------------------------------------------
+
+
+class LockScope(Rule):
+    id = "LS001"
+    title = "attribute mutated outside the owning class's lock scope"
+
+    def applies(self, path: str) -> bool:
+        return "repro/" in path
+
+    def check(self, tree: ast.AST, source: str, path: str) -> List[Finding]:
+        out: List[Finding] = []
+        for node in ast.walk(tree):
+            if isinstance(node, ast.ClassDef):
+                out.extend(self._check_class(node, path))
+        return out
+
+    @staticmethod
+    def _lock_attrs(cls: ast.ClassDef) -> Set[str]:
+        locks: Set[str] = set()
+        for item in cls.body:
+            if not (isinstance(item, ast.FunctionDef) and item.name == "__init__"):
+                continue
+            for node in ast.walk(item):
+                if not (isinstance(node, ast.Assign) and len(node.targets) == 1):
+                    continue
+                tgt = node.targets[0]
+                if not (
+                    isinstance(tgt, ast.Attribute)
+                    and isinstance(tgt.value, ast.Name)
+                    and tgt.value.id == "self"
+                ):
+                    continue
+                val = node.value
+                if isinstance(val, ast.Call):
+                    chain = _attr_chain(val.func)
+                    if chain and chain[-1] in _LOCK_CTORS:
+                        locks.add(tgt.attr)
+        return locks
+
+    def _check_class(self, cls: ast.ClassDef, path: str) -> List[Finding]:
+        locks = self._lock_attrs(cls)
+        if not locks:
+            return []
+
+        # (attr, node, guarded) mutation sites per method, excluding __init__
+        sites: List[Tuple[str, ast.AST, bool]] = []
+
+        def visit(node: ast.AST, guarded: bool) -> None:
+            if isinstance(node, ast.With):
+                holds = guarded
+                for item in node.items:
+                    ce = item.context_expr
+                    if (
+                        isinstance(ce, ast.Attribute)
+                        and isinstance(ce.value, ast.Name)
+                        and ce.value.id == "self"
+                        and ce.attr in locks
+                    ):
+                        holds = True
+                for child in node.body:
+                    visit(child, holds)
+                return
+            if isinstance(node, (ast.Assign, ast.AugAssign)):
+                targets = (
+                    node.targets
+                    if isinstance(node, ast.Assign)
+                    else [node.target]
+                )
+                for tgt in targets:
+                    base = tgt
+                    if isinstance(base, ast.Subscript):
+                        base = base.value
+                    if (
+                        isinstance(base, ast.Attribute)
+                        and isinstance(base.value, ast.Name)
+                        and base.value.id == "self"
+                        and base.attr not in locks
+                    ):
+                        sites.append((base.attr, node, guarded))
+            for child in ast.iter_child_nodes(node):
+                visit(child, guarded)
+
+        for item in cls.body:
+            if isinstance(item, ast.FunctionDef) and item.name != "__init__":
+                visit(item, False)
+
+        guarded_attrs = {a for a, _, g in sites if g}
+        out: List[Finding] = []
+        for attr, node, guarded in sites:
+            if guarded:
+                continue
+            if attr in guarded_attrs:
+                msg = (
+                    f"self.{attr} is mutated both inside and outside "
+                    f"'with self.<lock>' scopes in {cls.name}; the unguarded "
+                    "write races the guarded ones"
+                )
+            else:
+                msg = (
+                    f"self.{attr} is mutated without holding any of "
+                    f"{cls.name}'s locks ({', '.join(sorted(locks))}); guard "
+                    "it or justify with '# repro-ok: LS001 <why>'"
+                )
+            out.append(self._finding(path, node, msg))
+        return out
+
+
+_RULES: Sequence[Rule] = (
+    ExplicitHostSync(),
+    ImplicitHostSync(),
+    RetraceHazard(),
+    PlanKeyHygiene(),
+    PallasShapeConsistency(),
+    UnmaskedGather(),
+    LockScope(),
+)
+
+
+def default_rules() -> Sequence[Rule]:
+    return _RULES
+
+
+def rule_catalog() -> Dict[str, str]:
+    """rule id -> one-line title (includes whole-tree rules for docs/CLI)."""
+    cat = {r.id: r.title for r in _RULES}
+    cat["DC001"] = "BFS-core module imports a quarantined template module"
+    cat["SUP001"] = "suppression directive without a reason"
+    return cat

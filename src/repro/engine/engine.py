@@ -370,6 +370,7 @@ class Engine:
             fault_point("dispatch", mode="scalar", kernels=kernels)
             t0 = time.perf_counter()
             st = fn(jnp.int32(r))
+            # repro-ok: TH001 timed dispatch: per_root latency must include device completion
             jax.block_until_ready(st.frontier)
             per_root.append(time.perf_counter() - t0)
             p, l = B.finalize(st)
@@ -413,6 +414,7 @@ class Engine:
             fault_point("dispatch", mode="sharded", kernels=kernels)
             t0 = time.perf_counter()
             outs = [fn(jnp.int32(rn)) for rn in roots_new]
+            # repro-ok: TH001 one sync for the whole pipelined batch; this is the batching win being measured
             jax.block_until_ready([o[0] for o in outs])
             dt = time.perf_counter() - t0
             per_root = np.full(len(roots_arr), dt / len(roots_arr))
@@ -424,6 +426,7 @@ class Engine:
                 fault_point("dispatch", mode="sharded", kernels=kernels)
                 t0 = time.perf_counter()
                 out = fn(jnp.int32(rn))
+                # repro-ok: TH001 timed dispatch: per_root latency must include device completion
                 jax.block_until_ready(out[0])
                 per_root.append(time.perf_counter() - t0)
                 outs.append(out)

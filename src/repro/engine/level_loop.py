@@ -218,6 +218,7 @@ class BSPStepBackend:
 
     def finalize(self, state):
         parent_new, level_new = self._finalize(state)
+        # repro-ok: TH001 traversal is over; finalize_hybrid needs host arrays next anyway
         jax.block_until_ready(parent_new)
         return finalize_hybrid(self._plan, parent_new, level_new)
 
@@ -327,6 +328,7 @@ class LevelDriver:
         occupancy counts and per-lane vectors); separate `int()`/`bool()`
         reads would each issue their own device round-trip.
         """
+        # repro-ok: TH001 THE sanctioned per-level sync: exactly one device_get per BFS level
         host = jax.device_get(self.backend.scalars(state))
         if not isinstance(host, dict):
             nf, mf, cur, bu = host
@@ -350,6 +352,7 @@ class LevelDriver:
         row_extra = getattr(b, "row_extra", None)
         t_run = time.perf_counter()
         state = b.init(root)
+        # repro-ok: TH001 timing fence: init_s must not absorb async dispatch of the first level
         jax.block_until_ready(state)
         init_s = time.perf_counter() - t_run
         stats: list = []
@@ -372,9 +375,11 @@ class LevelDriver:
             fault_point("dispatch", level=cur, **fctx)
             t0 = time.perf_counter()
             work = b.compute(state, pre) if needs_sync else b.compute(state)
+            # repro-ok: TH001 timing fence: per-level compute_s is a reported paper metric
             jax.block_until_ready(work)
             t1 = time.perf_counter()
             state = b.exchange(state, work)
+            # repro-ok: TH001 timing fence: exchange_s isolates the partition-boundary cost
             jax.block_until_ready(state)
             t2 = time.perf_counter()
             nf2, mf2, cur, bu, post = self._sync(state)

@@ -30,6 +30,8 @@ import threading
 import time
 from typing import Any, Callable, Optional
 
+from repro.analysis.concurrency import make_condition, make_lock
+
 
 class QueueFull(Exception):
     """Bounded queue is at capacity (internal; servers map it to
@@ -86,8 +88,8 @@ class BoundedPriorityQueue:
             raise ValueError(f"maxsize must be >= 1, got {maxsize}")
         self.maxsize = maxsize
         self._heap: list = []
-        self._lock = threading.Lock()
-        self._not_empty = threading.Condition(self._lock)
+        self._lock = make_lock("queue")
+        self._not_empty = make_condition(self._lock, name="queue.not_empty")
         self._seq = itertools.count()
         self._closed = False
         self.high_water = 0
@@ -240,7 +242,16 @@ class BoundedPriorityQueue:
             return [entry[2] for entry in sorted(hit)]
 
     def close(self) -> list:
-        """Close the queue; returns (and removes) any undelivered items."""
+        """Close the queue; returns (and removes) any undelivered items.
+
+        Contract: the `notify_all` happens under the lock, BEFORE close()
+        returns — so by the time a caller moves on to joining consumer
+        threads, every `get_batch` waiter has already been woken (it will
+        observe `_closed` and raise `QueueClosed` at next schedule). A
+        close that returned before signaling would make the subsequent
+        join wait out the waiter's full `timeout` — the teardown-ordering
+        bug `BFSServer.close()` guards against (signal everything first,
+        then join on one shared deadline)."""
         with self._lock:
             self._closed = True
             leftovers = [entry[2] for entry in sorted(self._heap)]
@@ -318,7 +329,7 @@ class CircuitBreaker:
             raise ValueError(f"threshold must be >= 1, got {threshold}")
         self.threshold = threshold
         self.reset_after_s = reset_after_s
-        self._lock = threading.Lock()
+        self._lock = make_lock("breaker")
         self._failures = 0          # consecutive
         self._opened_at: Optional[float] = None
         self._probing = False
@@ -390,7 +401,7 @@ class ClientCaps:
             raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.max_inflight = max_inflight
         self._counts: dict[Any, int] = {}
-        self._lock = threading.Lock()
+        self._lock = make_lock("client_caps")
 
     def acquire(self, client: Any) -> None:
         with self._lock:

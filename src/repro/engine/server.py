@@ -58,6 +58,8 @@ from typing import Any, Dict, Optional, Union
 
 import numpy as np
 
+from repro.analysis.concurrency import ensure_installed as _ensure_sanitizer
+from repro.analysis.concurrency import make_lock, make_timer
 from repro.core.bfs import kernels_enabled
 from repro.core.graph import Graph
 from repro.engine.engine import Engine, QueryPlan
@@ -114,7 +116,7 @@ class QueryHandle:
         self.latency_s: Optional[float] = None
         self.partial_stats: Optional[list] = None
         self._done = threading.Event()
-        self._term_lock = threading.Lock()
+        self._term_lock = make_lock("handle.term")
         self._result: Optional[TraversalResult] = None
         self._error: Optional[BaseException] = None
         self._cancel_cb: Optional[callable] = None
@@ -287,15 +289,16 @@ class BFSServer:
         self.max_worker_restarts = max_worker_restarts
         self.restart_backoff_s = restart_backoff_s
         self.restart_backoff_max_s = restart_backoff_max_s
+        _ensure_sanitizer()   # REPRO_SANITIZE=1 instruments the locks below
         self._caps = ClientCaps(max_inflight_per_client)
         self._engines: Dict[str, Engine] = {}
         self._queues: Dict[str, BoundedPriorityQueue] = {}
         self._threads: Dict[str, threading.Thread] = {}
         self._counters: Dict[str, dict] = {}
         self._breakers: Dict[str, CircuitBreaker] = {}
-        self._state_lock = threading.Lock()
-        self._stats_lock = threading.Lock()
-        self._timers_lock = threading.Lock()
+        self._state_lock = make_lock("server.state")
+        self._stats_lock = make_lock("server.stats")
+        self._timers_lock = make_lock("server.timers")
         self._retry_timers: Dict[threading.Timer, tuple] = {}
         self._closing = threading.Event()
         self._qid = 0
@@ -355,6 +358,7 @@ class BFSServer:
     def _spawn_worker(self, name: str) -> None:
         t = threading.Thread(target=self._supervised_worker, args=(name,),
                              name=f"bfs-serve-{name}", daemon=True)
+        # repro-ok: LS001 both callers (register, start) hold _state_lock across this call
         self._threads[name] = t
         t.start()
 
@@ -405,10 +409,29 @@ class BFSServer:
                 if item.handle._fail(
                         ServerClosed("server closed before the query ran")):
                     self._caps.release(item.client)
+        # Teardown ordering contract: SIGNAL every waiter before JOINING
+        # anything. The sessions' pre-warm stop flags used to be set inside
+        # `session.close()` *after* the worker joins below had consumed the
+        # shutdown deadline — a slow pre-warm pass kept deserializing
+        # through the whole worker-join phase and then blew the remaining
+        # budget (the sanitizer's hold-time report flagged the pre-warm
+        # thread as the longest holder during shutdown). Queues were
+        # already closed above (their waiters wake immediately); stop the
+        # pre-warm passes now too, so every thread we are about to join is
+        # already winding down.
+        for eng in engines:
+            eng.session.signal_close()
         for t in threads:
             remaining = (None if deadline is None
                          else max(0.0, deadline - time.monotonic()))
             t.join(remaining)
+        # A cancelled Timer whose callback already started still runs to
+        # completion; join on the shared deadline so close() does not
+        # return while a requeue callback races the closed queues.
+        for timer, _meta in timers:
+            remaining = (None if deadline is None
+                         else max(0.0, deadline - time.monotonic()))
+            timer.join(remaining)
         # Join the sessions' non-daemon pre-warm threads on the SAME
         # deadline: an un-joined pre-warm pass blocks interpreter exit.
         for eng in engines:
@@ -756,7 +779,7 @@ class BFSServer:
                     self._caps.release(it.client)
                     self._count(name, failed=1)
 
-        timer = threading.Timer(delay, requeue)
+        timer = make_timer(delay, requeue, name="server.retry")
         timer.daemon = True
         holder.append(timer)
         with self._timers_lock:

@@ -62,6 +62,8 @@ from typing import Any, Callable, Optional
 import jax
 import numpy as np
 
+from repro.analysis.concurrency import ensure_installed as _ensure_sanitizer
+from repro.analysis.concurrency import make_lock, make_rlock
 from repro.core import ell as ELL
 from repro.core import partition as PT
 from repro.core.bfs import DeviceGraph
@@ -101,7 +103,7 @@ class _PlanExecutable:
         self._static = tuple(static_argnums)
         self._session = session
         self._fp = fingerprint          # None = never persisted to disk
-        self._lock = threading.Lock()
+        self._lock = make_lock("plan_exec")
         self._fn: Optional[Callable] = None
         self.source: Optional[str] = None   # traced | disk | prewarmed
         self.resolve_s = 0.0
@@ -201,8 +203,9 @@ class GraphSession:
         self.default_hub_edge_fraction = default_hub_edge_fraction
         self._mesh = mesh
         self.runtime = runtime if runtime is not None else get_runtime_config()
-        self._lock = threading.RLock()
-        self._stats_lock = threading.Lock()
+        _ensure_sanitizer(self.runtime)  # REPRO_SANITIZE instruments these
+        self._lock = make_rlock("session")
+        self._stats_lock = make_lock("session.stats")
         self._device_graph: Optional[DeviceGraph] = None
         self._partitions: dict[tuple, tuple] = {}
         self._executables: dict[Any, Callable] = {}
@@ -300,7 +303,13 @@ class GraphSession:
         """Content hash of this session's CSR (memoized; identity of every
         shared/persisted plan)."""
         if self._graph_fp is None:
-            self._graph_fp = graph_fingerprint(self.graph)
+            # Double-checked under the session lock: the prewarm thread and
+            # the first query can race here, and an unguarded write would
+            # let them hash the CSR twice (benign) or tear on exotic
+            # interpreters (not benign).
+            with self._lock:
+                if self._graph_fp is None:
+                    self._graph_fp = graph_fingerprint(self.graph)
         return self._graph_fp
 
     # ------------------------------------------------------ compiled plans --
@@ -379,18 +388,22 @@ class GraphSession:
         with self._lock:
             if key in self._warmed:
                 return
+            # repro-ok: TH001 warm() absorbs the compile stall off the query path; blocking is the feature
             jax.block_until_ready(run())
             self._warmed.add(key)
 
     # ------------------------------------------------------------- prewarm --
 
     def _start_prewarm(self) -> None:
+        # repro-ok: LS001 called only from __init__, before the session is shared with any other thread
         self.prewarm_progress = PrewarmProgress()
+        # repro-ok: LS001 attach-time init; published by the same happens-before as the session object itself
         self._prewarm_stop = threading.Event()
         # Non-daemon: a daemon thread killed mid-XLA-deserialize at
         # interpreter shutdown aborts the process from C++. The pass is
         # bounded (prewarm_limit fast loads) and checks a stop flag, so
         # joining at exit is cheap.
+        # repro-ok: LS001 attach-time init; Thread.start() below is the publication barrier
         self._prewarm_thread = threading.Thread(
             target=self._prewarm_pass, name="bfs-session-prewarm",
             daemon=False)
@@ -449,6 +462,17 @@ class GraphSession:
         with self._stats_lock:
             return self._preloaded.pop(fingerprint, None)
 
+    def signal_close(self) -> None:
+        """Ask the pre-warm pass to stop WITHOUT waiting for it.
+
+        `BFSServer.close()` calls this for every session up front, then
+        joins everything on one shared deadline — signaling and joining as
+        a single per-session step would let an early session's slow join
+        eat the budget while later sessions' pre-warm passes kept running.
+        Idempotent; `close()` still signals for standalone sessions.
+        """
+        self._prewarm_stop.set()
+
     def close(self, timeout: Optional[float] = None) -> bool:
         """Stop and join the pre-warm thread (it is non-daemon, so leaving
         it running blocks interpreter exit). True when fully joined."""
@@ -458,6 +482,7 @@ class GraphSession:
             t.join(timeout)
             if t.is_alive():
                 return False
+        # repro-ok: LS001 close() is single-caller teardown; the thread was joined above
         self._prewarm_thread = None
         return True
 

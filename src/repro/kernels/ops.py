@@ -11,7 +11,6 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels import bottomup as _bu
-from repro.kernels import decode_attn as _da
 from repro.kernels import frontier_fused as _ff
 from repro.kernels import topdown as _td
 
@@ -190,6 +189,10 @@ def decode_attention(q, k_cache, v_cache, cache_len, *, blk=512,
     Pads the cache sequence to a block multiple (padded slots are masked by
     cache_len, which is never larger than the true S).
     """
+    # Lazy: decode_attn is quarantined LLM-template code (DC001); importing
+    # it here keeps the BFS path from paying for it at import time.
+    from repro.kernels import decode_attn as _da
+
     b, s = k_cache.shape[0], k_cache.shape[1]
     blk = min(blk, max(s, 1))
     pad = (-s) % blk

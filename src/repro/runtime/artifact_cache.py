@@ -103,7 +103,8 @@ class ArtifactCache:
         self.root = os.path.abspath(cache_dir)
         self.plans_dir = os.path.join(self.root, PLANS_SUBDIR)
         self.max_bytes = int(max_bytes)
-        self._lock = threading.Lock()
+        from repro.analysis.concurrency import make_lock
+        self._lock = make_lock("artifact_cache")
         self._counts = dict(hits=0, misses=0, stores=0, store_errors=0,
                             evictions=0, corrupt_evictions=0)
         self._load_s = 0.0
@@ -149,6 +150,7 @@ class ArtifactCache:
     def _entry_counts(self, fingerprint: str) -> dict:
         e = self._entries.get(fingerprint)
         if e is None:
+            # repro-ok: LS001 only caller is _count, which holds _lock across this call
             e = self._entries[fingerprint] = dict(hits=0, misses=0,
                                                   load_s=0.0)
         return e

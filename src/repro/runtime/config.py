@@ -26,6 +26,9 @@ REPRO_DEVICE_COUNT     fake host device count `launch_env()` bakes into
 REPRO_FAULTS           fault-injection schedule (see `repro.runtime.faults`;
                        '' = disabled). Chaos testing only.
 REPRO_FAULTS_SEED      int seed for probabilistic fault selectors
+REPRO_SANITIZE         '1'/'0': concurrency sanitizer — instrumented lock/
+                       timer wrappers recording the lock-order graph
+                       (see `repro.analysis.concurrency`). Testing only.
 =====================  =====================================================
 
 `launch_env()` documents the XLA/tcmalloc launch hygiene from the
@@ -120,6 +123,8 @@ class RuntimeConfig:
     # -- chaos testing -------------------------------------------------------
     faults: Optional[str] = None             # fault schedule ('' / None = off)
     faults_seed: int = 0
+    # -- concurrency sanitizer -----------------------------------------------
+    sanitize: bool = False                   # instrumented locks/timers
 
     def __post_init__(self):
         if self.kernel_backend not in _TRISTATE:
@@ -184,6 +189,9 @@ class RuntimeConfig:
             values["faults"] = env["REPRO_FAULTS"] or None
         if "REPRO_FAULTS_SEED" in env:
             values["faults_seed"] = int(env["REPRO_FAULTS_SEED"])
+        if "REPRO_SANITIZE" in env:
+            values["sanitize"] = _parse_bool(env["REPRO_SANITIZE"],
+                                             name="REPRO_SANITIZE")
         for key, val in explicit.items():
             if val is None:
                 continue

@@ -256,7 +256,11 @@ class FaultInjector:
             schedule = parse_schedule(schedule)
         self.specs = tuple(schedule)
         self.seed = int(seed)
-        self._lock = threading.Lock()
+        # Lazy: repro.analysis.concurrency mirrors THIS module's pattern;
+        # a top-level import would be circular in spirit (both are
+        # install-at-runtime observers) and costs import time when off.
+        from repro.analysis.concurrency import make_lock
+        self._lock = make_lock("faults")
         self._site_seen: dict = {s: 0 for s in SITES}
         self._spec_seen = [0] * len(self.specs)
         self._spec_fired = [0] * len(self.specs)

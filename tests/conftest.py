@@ -43,6 +43,21 @@ def _reset_plan_registry():
     registry_reset()
 
 
+@pytest.fixture(scope="session", autouse=True)
+def _sanitizer_cycle_gate():
+    """Under REPRO_SANITIZE=1 the whole test session doubles as a deadlock
+    audit: if the env-installed concurrency sanitizer observed a lock-order
+    cycle anywhere in the run, fail at teardown with the full report."""
+    yield
+    from repro.analysis import concurrency as _conc
+    san = _conc.active()
+    if san is not None:
+        rep = san.report()
+        assert rep["cycles"] == [], (
+            f"lock-order cycles observed during the test session: "
+            f"{rep['cycles']} (edges: {rep['edges']})")
+
+
 @pytest.fixture(scope="session")
 def small_graph():
     from repro.core import graph as G

@@ -1,0 +1,612 @@
+"""Tests for `repro.analysis`: linter rules, suppressions/baseline, the
+dead-code/quarantine gate, and the runtime concurrency sanitizer.
+
+Layout mirrors the package: each lint rule gets a known-bad fixture snippet
+proving it fires and a near-identical clean snippet proving it doesn't;
+the sanitizer gets detector unit tests plus a behavior-neutrality run of a
+real `BFSServer` round under `sanitize_scope`.
+"""
+import os
+import textwrap
+import threading
+import time
+
+import pytest
+
+from repro.analysis import concurrency as C
+from repro.analysis import deadcode, lint, rules
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+ENGINE_PATH = "src/repro/engine/fixture.py"
+KERNEL_PATH = "src/repro/kernels/fixture.py"
+
+
+def _lint(src: str, path: str = ENGINE_PATH):
+    hot, cold, supps = lint.lint_source(textwrap.dedent(src), path)
+    return hot, cold, supps
+
+
+def _rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# ===========================================================================
+# TH001 — explicit host syncs
+# ===========================================================================
+
+
+def test_th001_fires_on_device_get_and_block_until_ready():
+    hot, _, _ = _lint("""
+        import jax
+        def step(state):
+            levels = jax.device_get(state)
+            jax.block_until_ready(state)
+            return state.frontier.block_until_ready()
+    """)
+    assert _rules_of(hot).count("TH001") == 3
+
+
+def test_th001_scoped_to_engine_layer():
+    hot, _, _ = _lint("""
+        import jax
+        def step(state):
+            return jax.device_get(state)
+    """, path="src/repro/core/fixture.py")
+    assert "TH001" not in _rules_of(hot)
+
+
+def test_th001_suppression_with_reason():
+    hot, cold, _ = _lint("""
+        import jax
+        def step(state):
+            # repro-ok: TH001 the sanctioned sync for this fixture
+            levels = jax.device_get(state)
+            return levels
+    """)
+    assert "TH001" not in _rules_of(hot)
+    assert "TH001" in _rules_of(cold)
+
+
+def test_suppression_without_reason_is_sup001():
+    hot, cold, supps = _lint("""
+        import jax
+        def step(state):
+            return jax.device_get(state)  # repro-ok: TH001
+    """)
+    assert [f.rule for f in supps.malformed] == ["SUP001"]
+    # and the directive does NOT suppress the finding
+    assert "TH001" in _rules_of(hot)
+
+
+# ===========================================================================
+# TH002 — implicit host syncs
+# ===========================================================================
+
+
+def test_th002_fires_on_float_and_asarray_of_device_value():
+    hot, _, _ = _lint("""
+        import jax.numpy as jnp
+        import numpy as np
+        def stats(x):
+            dev = jnp.sum(x)
+            a = float(dev)
+            b = np.asarray(dev)
+            c = dev.item()
+            return a, b, c
+    """)
+    assert _rules_of(hot).count("TH002") == 3
+
+
+def test_th002_device_get_results_are_host_values():
+    hot, _, _ = _lint("""
+        import jax
+        def stats(state):
+            # repro-ok: TH001 fixture sync point
+            host = jax.device_get(state)
+            return int(host[0]), bool(host[1])
+    """)
+    assert "TH002" not in _rules_of(hot)
+
+
+def test_th002_ignores_plain_host_math():
+    hot, _, _ = _lint("""
+        import time
+        def lap(t0):
+            return float(time.perf_counter() - t0)
+    """)
+    assert "TH002" not in _rules_of(hot)
+
+
+# ===========================================================================
+# TH003 — retrace hazards
+# ===========================================================================
+
+
+def test_th003_fires_on_jit_in_loop():
+    hot, _, _ = _lint("""
+        import jax
+        def serve(queries, fn):
+            outs = []
+            for q in queries:
+                outs.append(jax.jit(fn)(q))
+            return outs
+    """)
+    assert "TH003" in _rules_of(hot)
+
+
+def test_th003_clean_when_jit_hoisted():
+    hot, _, _ = _lint("""
+        import jax
+        def serve(queries, fn):
+            jfn = jax.jit(fn)
+            return [jfn(q) for q in queries]
+    """)
+    assert "TH003" not in _rules_of(hot)
+
+
+def test_th003_fires_on_pallas_call_in_while():
+    hot, _, _ = _lint("""
+        import jax.experimental.pallas as pl
+        def drive(kern, n):
+            while n > 0:
+                run = pl.pallas_call(kern, grid=(4,))
+                n -= 1
+            return run
+    """, path=KERNEL_PATH)
+    assert "TH003" in _rules_of(hot)
+
+
+# ===========================================================================
+# PK001 — plan-key hygiene
+# ===========================================================================
+
+
+def test_pk001_fires_on_list_and_lambda_keys():
+    hot, _, _ = _lint("""
+        def plan(session, v):
+            a = session.executable(["bfs", v], build=None)
+            b = session.cached(key=lambda: v, build=None)
+            return a, b
+    """)
+    assert _rules_of(hot).count("PK001") == 2
+
+
+def test_pk001_clean_on_tuple_keys():
+    hot, _, _ = _lint("""
+        def plan(session, v, cfg):
+            return session.executable(("bfs", v, cfg.depth), build=None)
+    """)
+    assert "PK001" not in _rules_of(hot)
+
+
+# ===========================================================================
+# PL001 — pallas grid/BlockSpec consistency
+# ===========================================================================
+
+
+def test_pl001_fires_on_arity_mismatch():
+    hot, _, _ = _lint("""
+        import jax.experimental.pallas as pl
+        def build(kern, c, cblk):
+            return pl.pallas_call(
+                kern,
+                grid=(4, c // cblk),
+                in_specs=[pl.BlockSpec((cblk,), lambda i: (i,))],
+            )
+    """, path=KERNEL_PATH)
+    assert "PL001" in _rules_of(hot)
+
+
+def test_pl001_fires_on_index_tuple_length_mismatch():
+    hot, _, _ = _lint("""
+        import jax.experimental.pallas as pl
+        def build(kern, c, cblk):
+            return pl.pallas_call(
+                kern,
+                grid=(c // cblk,),
+                out_specs=pl.BlockSpec((1, cblk), lambda i: (i,)),
+            )
+    """, path=KERNEL_PATH)
+    assert "PL001" in _rules_of(hot)
+
+
+def test_pl001_clean_on_consistent_specs():
+    hot, _, _ = _lint("""
+        import jax.experimental.pallas as pl
+        def build(kern, b, c, cblk):
+            return pl.pallas_call(
+                kern,
+                grid=(b, c // cblk),
+                in_specs=[pl.BlockSpec((1, cblk), lambda l, i: (l, i))],
+                out_specs=pl.BlockSpec((1, cblk), lambda l, i: (l, i)),
+            )
+    """, path=KERNEL_PATH)
+    assert "PL001" not in _rules_of(hot)
+
+
+# ===========================================================================
+# PL002 — unmasked gathers on ragged ELL tiles
+# ===========================================================================
+
+
+def test_pl002_fires_on_unclipped_take():
+    hot, _, _ = _lint("""
+        import jax.numpy as jnp
+        def frontier_kernel(nbrs_ref, visited_ref, out_ref):
+            nbrs = nbrs_ref[...]
+            visited = visited_ref[...]
+            out_ref[...] = jnp.take(visited, nbrs.reshape(-1), axis=0)
+    """, path=KERNEL_PATH)
+    assert "PL002" in _rules_of(hot)
+
+
+def test_pl002_clean_with_clip_before_take():
+    hot, _, _ = _lint("""
+        import jax.numpy as jnp
+        def frontier_kernel(nbrs_ref, visited_ref, out_ref):
+            nbrs = nbrs_ref[...]
+            visited = visited_ref[...]
+            v = visited.shape[0]
+            safe = jnp.clip(nbrs, 0, v - 1)
+            out_ref[...] = jnp.take(visited, safe.reshape(-1), axis=0)
+    """, path=KERNEL_PATH)
+    assert "PL002" not in _rules_of(hot)
+
+
+# ===========================================================================
+# LS001 — lock-scope discipline
+# ===========================================================================
+
+_LS_FIXTURE = """
+    import threading
+    class Counter:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.n = 0          # __init__ is exempt
+        def bump(self):
+            with self._lock:
+                self.n += 1
+        def reset(self):
+            self.n = 0          # <- races bump()
+"""
+
+
+def test_ls001_fires_on_unguarded_mutation():
+    hot, _, _ = _lint(_LS_FIXTURE)
+    ls = [f for f in hot if f.rule == "LS001"]
+    assert len(ls) == 1
+    assert "both inside and outside" in ls[0].message
+
+
+def test_ls001_clean_when_all_guarded():
+    hot, _, _ = _lint("""
+        import threading
+        class Counter:
+            def __init__(self):
+                self._lock = threading.Lock()
+                self.n = 0
+            def bump(self):
+                with self._lock:
+                    self.n += 1
+            def reset(self):
+                with self._lock:
+                    self.n = 0
+    """)
+    assert "LS001" not in _rules_of(hot)
+
+
+def test_ls001_ignores_lockless_classes():
+    hot, _, _ = _lint("""
+        class Plain:
+            def __init__(self):
+                self.n = 0
+            def bump(self):
+                self.n += 1
+    """)
+    assert "LS001" not in _rules_of(hot)
+
+
+# ===========================================================================
+# baseline + clean tree
+# ===========================================================================
+
+
+def test_baseline_requires_reasons(tmp_path):
+    p = tmp_path / "baseline.json"
+    p.write_text('{"entries": [{"rule": "TH001", "path": "x.py", '
+                 '"text": "y", "reason": ""}]}')
+    with pytest.raises(lint.BaselineError):
+        lint.load_baseline(str(p))
+
+
+def test_baseline_matches_by_rule_path_text(tmp_path):
+    src = textwrap.dedent("""
+        import jax
+        def step(state):
+            return jax.device_get(state)
+    """)
+    f = tmp_path / "engine"
+    f.mkdir()
+    target = f / "fixture.py"
+    target.write_text(src)
+    entry = lint.BaselineEntry(
+        rule="TH001",
+        path=lint.relpath_for(str(target), str(tmp_path)),
+        text="return jax.device_get(state)",
+        reason="grandfathered fixture",
+    )
+    # path must scope as engine code for TH001: lint the file via run_lint
+    # with a rules override pinned to the engine-scoped rule
+    class Anywhere(rules.ExplicitHostSync):
+        def applies(self, path):
+            return True
+
+    res = lint.run_lint([str(target)], root=str(tmp_path),
+                        rules=[Anywhere()], baseline=[entry])
+    assert res.ok
+    assert _rules_of(res.baselined) == ["TH001"]
+
+
+def test_clean_tree_has_no_unsuppressed_findings():
+    """The CI gate, in-process: the repo's own src/ lints clean."""
+    res = lint.run_lint(
+        [SRC], root=REPO, project_rules=[deadcode.QuarantineGate()])
+    assert res.ok, "\n".join(f.format() for f in res.findings + res.errors)
+
+
+# ===========================================================================
+# dead code / quarantine
+# ===========================================================================
+
+
+def test_dc001_fires_on_eager_template_import():
+    sources = {
+        "src/repro/core/fixture.py": "from repro.models import layers\n",
+        "src/repro/models/layers.py": "",
+    }
+    gate = deadcode.QuarantineGate()
+    assert _rules_of(gate.check_project(sources)) == ["DC001"]
+
+
+def test_dc001_allows_lazy_template_import():
+    sources = {
+        "src/repro/core/fixture.py": (
+            "def f():\n    from repro.models import layers\n    return layers\n"
+        ),
+        "src/repro/models/layers.py": "",
+    }
+    assert deadcode.QuarantineGate().check_project(sources) == []
+
+
+def test_dead_code_report_on_real_tree():
+    sources = {}
+    for fp in lint.iter_python_files([SRC]):
+        rel = lint.relpath_for(fp, REPO)
+        with open(fp, "r", encoding="utf-8") as fh:
+            sources[rel] = fh.read()
+    report = deadcode.dead_code_report(sources)
+    reachable_from_bfs = set(report.bfs_core) | set(report.shared)
+    assert "repro.engine.server" in reachable_from_bfs
+    assert "repro.core.hybrid_bfs" in reachable_from_bfs
+    # the LLM template stays on its side of the line
+    assert not any(m.startswith("repro.models") for m in reachable_from_bfs)
+    assert not any(m.startswith("repro.train") for m in reachable_from_bfs)
+
+
+# ===========================================================================
+# concurrency sanitizer — detectors
+# ===========================================================================
+
+
+def test_factories_return_plain_primitives_when_off():
+    assert C.active() is None
+    assert type(C.make_lock("x")) is type(threading.Lock())
+    assert type(C.make_rlock("x")) is type(threading.RLock())
+    assert isinstance(C.make_timer(1, lambda: None), threading.Timer)
+
+
+def test_abba_cycle_detection():
+    with C.sanitize_scope() as san:
+        a, b = C.make_lock("A"), C.make_lock("B")
+
+        def ab():
+            with a:
+                with b:
+                    pass
+
+        def ba():
+            with b:
+                with a:
+                    pass
+
+        # sequential execution: the ORDER graph still records the inversion
+        t1 = threading.Thread(target=ab)
+        t2 = threading.Thread(target=ba)
+        t1.start(); t1.join()
+        t2.start(); t2.join()
+        assert san.cycles() == [["A", "B"]]
+    assert C.active() is None
+
+
+def test_consistent_order_has_no_cycles():
+    with C.sanitize_scope() as san:
+        a, b = C.make_lock("A"), C.make_lock("B")
+        for _ in range(3):
+            with a:
+                with b:
+                    pass
+        assert san.cycles() == []
+
+
+def test_long_hold_reporting():
+    with C.sanitize_scope(hold_threshold_s=0.05) as san:
+        l = C.make_lock("slowpoke")
+        with l:
+            time.sleep(0.08)
+        holds = san.report()["long_holds"]
+        assert any(h["lock"] == "slowpoke" and h["held_s"] >= 0.05
+                   for h in holds)
+
+
+def test_condition_wait_is_not_a_hold():
+    with C.sanitize_scope(hold_threshold_s=0.05) as san:
+        lk = C.make_lock("cv.lock")
+        cond = C.make_condition(lk, name="cv")
+
+        def waiter():
+            with cond:
+                cond.wait(timeout=1.0)
+
+        t = threading.Thread(target=waiter)
+        t.start()
+        time.sleep(0.15)            # waiter sits in wait() > threshold
+        with cond:
+            cond.notify_all()
+        t.join()
+        assert not any(h["lock"] == "cv.lock"
+                       for h in san.report()["long_holds"])
+
+
+def test_rlock_reentry_counts_once():
+    with C.sanitize_scope() as san:
+        r = C.make_rlock("re")
+
+        def nested():
+            with r:
+                with r:
+                    pass
+
+        t = threading.Thread(target=nested)
+        t.start(); t.join()
+        assert san.report()["acquires"]["re"] == 1
+
+
+def test_timer_ledger_tracks_live_timers():
+    with C.sanitize_scope() as san:
+        tm = C.make_timer(30, lambda: None, name="retry")
+        tm.daemon = True
+        tm.start()
+        assert san.report()["timers_live"] == ["retry"]
+        tm.cancel()
+        tm.join()
+        assert san.report()["timers_live"] == []
+
+
+def test_ensure_installed_respects_runtime_config():
+    from repro.runtime.config import RuntimeConfig
+    assert C.ensure_installed(RuntimeConfig(sanitize=False)) is None
+    assert C.active() is None
+    san = C.ensure_installed(RuntimeConfig(sanitize=True))
+    try:
+        assert san is C.active()
+        # idempotent: an installed sanitizer is never replaced
+        assert C.ensure_installed(RuntimeConfig(sanitize=True)) is san
+    finally:
+        C.uninstall()
+
+
+# ===========================================================================
+# sanitizer — behavior neutrality + teardown regressions
+# ===========================================================================
+
+
+def test_server_round_trip_under_sanitizer(small_graph):
+    """A real serve round under the sanitizer: identical results, empty
+    deadlock-cycle report, no leaked timers after close()."""
+    from repro.engine.server import BFSServer
+
+    with C.sanitize_scope() as san:
+        srv = BFSServer()
+        srv.register("g", small_graph)
+        srv.start()
+        try:
+            h = srv.submit("g", [0, 1])
+            res = h.result(timeout=120)
+            assert res.parent.shape[0] == 2
+        finally:
+            srv.close(timeout=60)
+        rep = san.report()
+        assert rep["cycles"] == [], rep["edges"]
+        assert rep["timers_live"] == []
+        # the instrumented subsystems actually showed up
+        assert "queue" in rep["locks"]
+        assert "server.state" in rep["locks"]
+
+
+def test_queue_close_wakes_blocked_waiters():
+    """Regression (teardown ordering): close() must signal waiters before
+    anyone joins the consumer — a waiter sitting out its full timeout
+    after close() would serialize shutdown."""
+    from repro.engine.queueing import BoundedPriorityQueue, QueueClosed
+
+    q = BoundedPriorityQueue(maxsize=4)
+    woke = []
+
+    def consumer():
+        t0 = time.monotonic()
+        try:
+            q.get_batch(timeout=30.0)
+        except QueueClosed:
+            woke.append(time.monotonic() - t0)
+
+    t = threading.Thread(target=consumer)
+    t.start()
+    time.sleep(0.1)                # let it block in get_batch
+    q.close()
+    t.join(timeout=5.0)
+    assert not t.is_alive(), "consumer still blocked after close()"
+    assert woke and woke[0] < 5.0, f"waiter slept out its timeout: {woke}"
+
+
+def test_server_close_signals_prewarm_before_joins(small_graph, tmp_path):
+    """Regression: `BFSServer.close()` stops every session's pre-warm pass
+    BEFORE spending its deadline joining workers (signal-then-join)."""
+    from repro.engine.server import BFSServer
+
+    srv = BFSServer()
+    srv.register("g", small_graph)
+    srv.start()
+    sess = srv.sessions["g"]
+    t0 = time.monotonic()
+    srv.close(timeout=30.0)
+    elapsed = time.monotonic() - t0
+    assert sess._prewarm_stop.is_set()
+    assert sess._prewarm_thread is None     # joined, then cleared
+    assert elapsed < 30.0
+
+
+def test_graph_session_signal_close_is_nonblocking(small_graph):
+    from repro.engine.session import GraphSession
+
+    sess = GraphSession(small_graph)
+    t0 = time.monotonic()
+    sess.signal_close()
+    assert time.monotonic() - t0 < 0.5
+    assert sess._prewarm_stop.is_set()
+    assert sess.close(timeout=30.0)
+
+
+# ===========================================================================
+# CLI
+# ===========================================================================
+
+
+def test_cli_exits_zero_on_clean_tree():
+    from repro.analysis.cli import main
+    assert main([SRC, "--root", REPO]) == 0
+
+
+def test_cli_exits_nonzero_on_bad_file(tmp_path):
+    bad = tmp_path / "src" / "repro" / "engine" / "bad.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import jax\n\ndef f(s):\n    return jax.device_get(s)\n")
+    from repro.analysis.cli import main
+    assert main([str(bad), "--root", str(tmp_path),
+                 "--no-bytecode-guard"]) == 1
+
+
+def test_cli_list_rules():
+    from repro.analysis.cli import main
+    assert main(["--list-rules"]) == 0
