@@ -9,11 +9,21 @@ so the sweep only measures execution. Run under fake devices:
   XLA_FLAGS=--xla_force_host_platform_device_count=4 PYTHONPATH=src \
       python -m benchmarks.bfs_hillclimb --scale 13
 
+Before a config is ever compiled or timed, the kernel contract verifier
+(`repro.analysis.kernel_contracts.contract_report`) checks it against the
+VMEM budget for this graph's shape: statically infeasible configs are
+recorded (`static_feasible: false`) and skipped, and the run reports the
+pruned count on a `# pruned_static:` line. `--vmem-budget 8MB` overrides
+the budget (default: `RuntimeConfig.vmem_budget_bytes` / REPRO_VMEM_BUDGET);
+`--smoke` runs a tiny single-partition sweep sized so the static pruner
+provably fires (CI exercise mode).
+
 With a cache dir (`--cache-dir` or REPRO_CACHE_DIR), measured points
 persist under `<cache_dir>/hillclimb/` keyed by graph content hash +
-sweep shape: re-runs skip configs already measured (an interrupted sweep
-resumes where it died) and the climb seeds from the best known point
-instead of the paper baseline.
+sweep shape: re-runs skip configs already measured — including configs
+already pruned statically — (an interrupted sweep resumes where it died)
+and the climb seeds from the best known point instead of the paper
+baseline.
 """
 import argparse
 import json
@@ -22,7 +32,13 @@ import tempfile
 
 
 class MeasurementStore:
-    """Persisted {config-key: TEPS} for one (graph, nparts, roots) sweep.
+    """Persisted per-config measurements for one (graph, nparts, roots) sweep.
+
+    Schema v2: ``{"points": {key: {"teps": float|null, "static_feasible":
+    bool}}}``. A statically pruned config persists as ``{"teps": null,
+    "static_feasible": false}`` so a resumed sweep skips it without
+    re-running the contract verifier. Legacy v1 files (bare float values)
+    load as measured + feasible.
 
     One JSON file per sweep shape, rewritten atomically (same-directory
     temp + `os.replace`) after every measurement, so an interrupted sweep
@@ -42,20 +58,51 @@ class MeasurementStore:
                 with open(self.path) as f:
                     data = json.load(f)
                 if isinstance(data, dict):
-                    self.points = {k: float(v)
-                                   for k, v in data.get("points", {}).items()}
+                    for k, v in data.get("points", {}).items():
+                        self.points[k] = self._upgrade(v)
             except (OSError, ValueError):
                 self.points = {}
+
+    @staticmethod
+    def _upgrade(value):
+        """v1 bare float -> v2 entry; v2 entries pass through normalized."""
+        if isinstance(value, dict):
+            teps = value.get("teps")
+            return {"teps": None if teps is None else float(teps),
+                    "static_feasible": bool(value.get("static_feasible",
+                                                      True))}
+        return {"teps": float(value), "static_feasible": True}
 
     @staticmethod
     def key(config: dict) -> str:
         return json.dumps(config, sort_keys=True)
 
     def get(self, config: dict):
-        return self.points.get(self.key(config))
+        """Measured TEPS for `config`, or None (unmeasured or pruned)."""
+        entry = self.points.get(self.key(config))
+        return None if entry is None else entry["teps"]
+
+    def feasible(self, config: dict):
+        """True/False if the verifier's verdict is recorded, else None."""
+        entry = self.points.get(self.key(config))
+        return None if entry is None else entry["static_feasible"]
 
     def put(self, config: dict, teps: float) -> None:
-        self.points[self.key(config)] = float(teps)
+        self.points[self.key(config)] = {"teps": float(teps),
+                                         "static_feasible": True}
+        self._flush()
+
+    def put_infeasible(self, config: dict) -> None:
+        self.points[self.key(config)] = {"teps": None,
+                                         "static_feasible": False}
+        self._flush()
+
+    @property
+    def pruned_static(self) -> int:
+        return sum(1 for e in self.points.values()
+                   if not e["static_feasible"])
+
+    def _flush(self) -> None:
         if self.path is None:
             return
         fd, tmp = tempfile.mkstemp(dir=os.path.dirname(self.path),
@@ -71,11 +118,13 @@ class MeasurementStore:
                 pass
 
     def best(self):
-        """(config, teps) of the best persisted point, or (None, None)."""
-        if not self.points:
+        """(config, teps) of the best measured point, or (None, None)."""
+        measured = {k: e["teps"] for k, e in self.points.items()
+                    if e["teps"] is not None}
+        if not measured:
             return None, None
-        key = max(self.points, key=self.points.get)
-        return json.loads(key), self.points[key]
+        key = max(measured, key=measured.get)
+        return json.loads(key), measured[key]
 
 
 def main(argv=None):
@@ -83,36 +132,71 @@ def main(argv=None):
     ap.add_argument("--scale", type=int, default=13)
     ap.add_argument("--nparts", type=int, default=4)
     ap.add_argument("--roots", type=int, default=5)
+    ap.add_argument("--vmem-budget", default=None, metavar="SIZE",
+                    help="per-core VMEM budget for static pruning, e.g. "
+                         "'8MB' (default: RuntimeConfig.vmem_budget_bytes)")
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny single-partition sweep (scale 10, 2 roots, "
+                         "bu_chunk knob only, 3MB budget) sized so the "
+                         "static pruner rejects at least one config")
     ap.add_argument("--cache-dir", default=None,
                     help="persist measured points under "
                          "<dir>/hillclimb/ and skip re-measuring "
                          "(default: REPRO_CACHE_DIR if set)")
     args = ap.parse_args(argv)
+    if args.smoke:
+        # Sized against the verifier's model: at scale 10 / 1 partition the
+        # bottom-up neighbor tile costs ~2.01 MiB at bu_chunk=512 (baseline
+        # fits a 3 MiB budget) and ~4.02 MiB at bu_chunk >= 1024 (pruned).
+        # Multi-partition smoke would cap the row chunk at the per-device V
+        # and make the sweep knob-invariant — keep nparts=1.
+        args.scale, args.nparts, args.roots = 10, 1, 2
+        if args.vmem_budget is None:
+            args.vmem_budget = "3MB"
 
+    from repro.analysis.kernel_contracts import GraphShape, contract_report
     from repro.core import graph as G
     from repro.core.bfs import BFSConfig
     from repro.core.hybrid_bfs import HybridConfig
     from repro.engine import Engine
     from repro.launch.bfs_run import sample_roots
     from repro.runtime import get_runtime_config, graph_fingerprint
+    from repro.runtime.config import _parse_size
 
+    budget = (get_runtime_config().vmem_budget_bytes
+              if args.vmem_budget is None
+              else _parse_size(args.vmem_budget, name="--vmem-budget"))
     cache_dir = (args.cache_dir if args.cache_dir is not None
                  else get_runtime_config().cache_dir)
     g = G.rmat(args.scale, seed=0)
+    gshape = GraphShape.from_graph(g)
     roots = sample_roots(g, args.roots)
     engine = Engine(g)
     store = MeasurementStore(cache_dir, graph_fingerprint(g), args.nparts,
                              args.roots)
     if store.points:
-        print(f"# resuming: {len(store.points)} measured point(s) in "
-              f"{store.path}", flush=True)
+        print(f"# resuming: {len(store.points)} stored point(s) "
+              f"({store.pruned_static} pruned) in {store.path}", flush=True)
 
     def measure(label, config):
+        if store.feasible(config) is False:
+            print(f"{label:58s}       -- pruned   (static, cached)",
+                  flush=True)
+            return None
         known = store.get(config)
         if known is not None:
             print(f"{label:58s} {known / 1e6:8.2f} MTEPS  (cached)",
                   flush=True)
             return known
+        report = contract_report(config, gshape, budget_bytes=budget,
+                                 n_parts=args.nparts)
+        if not report.feasible:
+            store.put_infeasible(config)
+            first = report.errors[0]
+            print(f"{label:58s}       -- pruned   "
+                  f"([{first.kernel}] {first.rule}, peak "
+                  f"{report.total_bytes} B > {budget} B)", flush=True)
+            return None
         res = engine.bfs(roots, cfg_of(config), n_parts=args.nparts,
                          strategy=config["strategy"],
                          hub_edge_fraction=config["hub_frac"], batched=False)
@@ -134,11 +218,13 @@ def main(argv=None):
             exchange=d["exchange"], coordinator=d["coordinator"])
 
     results = {}
-    results["baseline(paper-faithful defaults)"] = measure("baseline", base)
+    base_teps = measure("baseline", base)
+    results["baseline(paper-faithful defaults)"] = base_teps
 
     # Seed the climb from the best persisted point (when it beats the
     # baseline) — a resumed sweep continues the climb instead of redoing it.
-    best, best_teps = dict(base), results["baseline(paper-faithful defaults)"]
+    best = dict(base)
+    best_teps = base_teps if base_teps is not None else float("-inf")
     stored_best, stored_teps = store.best()
     if stored_best is not None and stored_teps > best_teps \
             and set(stored_best) == set(base):
@@ -157,6 +243,8 @@ def main(argv=None):
         ("fixed_bu", [2, 5]),
         ("coordinator", ["global"]),
     ]
+    if args.smoke:
+        sweeps = [("bu_chunk", [256, 1024, 2048])]
     for knob, values in sweeps:
         for v in values:
             d = dict(best)
@@ -164,10 +252,11 @@ def main(argv=None):
             label = f"{knob}={v}"
             t = measure(label, d)
             results[label] = t
-            if t > best_teps * 1.02:
+            if t is not None and t > best_teps * 1.02:
                 best_teps = t
                 best = d
                 print(f"  -> adopted {knob}={v}", flush=True)
+    print(f"# pruned_static: {store.pruned_static}", flush=True)
     print("BEST " + json.dumps({"teps": best_teps, "config": best}))
     return results
 

@@ -3,13 +3,16 @@
 Usage::
 
     python -m repro.analysis src/                 # lint, exit 1 on findings
+    python -m repro.analysis src/ --kernel-contracts   # + KC001..KC006 gate
+    python -m repro.analysis --contract-report-out contracts.json src/
     python -m repro.analysis --dead-code src/     # import-graph report
     python -m repro.analysis --bytecode-guard     # no tracked .pyc/__pycache__
     python -m repro.analysis --write-baseline src/
     python -m repro.analysis --list-rules
 
-Exit codes: 0 clean, 1 findings (lint violations, tracked bytecode),
-2 configuration error (unreadable/unjustified baseline).
+Exit codes: 0 clean, 1 findings (lint violations, kernel-contract errors,
+tracked bytecode), 2 configuration error (unreadable/unjustified baseline).
+KC warnings (Mosaic tiling lints) print but never gate.
 """
 from __future__ import annotations
 
@@ -70,6 +73,13 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     parser.add_argument("--no-bytecode-guard", action="store_true", help="skip the bytecode guard during linting")
     parser.add_argument("--json", action="store_true", dest="as_json", help="machine-readable output")
     parser.add_argument("--list-rules", action="store_true", help="print the rule catalog and exit")
+    parser.add_argument("--kernel-contracts", action="store_true",
+                        help="also run the KC001..KC006 kernel-contract gate "
+                             "(registry coverage + reference instantiations)")
+    parser.add_argument("--contract-report-out", default=None, metavar="PATH",
+                        help="write the JSON contract report for the default "
+                             "benchmark plans to PATH (implies "
+                             "--kernel-contracts)")
     args = parser.parse_args(argv)
 
     if args.list_rules:
@@ -135,31 +145,57 @@ def main(argv: Optional[Sequence[str]] = None) -> int:
     if not args.no_bytecode_guard:
         tracked = bytecode_guard(root)
 
+    kc_errors: List[lint.Finding] = []
+    kc_warnings: List[lint.Finding] = []
+    kc_reports: Optional[dict] = None
+    if args.kernel_contracts or args.contract_report_out:
+        # Lazy: the contract verifier imports the kernel contract registry;
+        # plain lint runs must not pay for it.
+        from repro.analysis import kernel_contracts as kc
+        kc_errors, kc_warnings = kc.run_gate(sources)
+        if args.contract_report_out:
+            kc_reports = kc.default_plan_reports()
+            with open(args.contract_report_out, "w", encoding="utf-8") as fh:
+                json.dump(kc_reports, fh, indent=2, sort_keys=True)
+                fh.write("\n")
+
     if args.as_json:
-        print(
-            json.dumps(
-                {
-                    "findings": [f.to_json() for f in result.findings],
-                    "errors": [f.to_json() for f in result.errors],
-                    "suppressed": len(result.suppressed),
-                    "baselined": len(result.baselined),
-                    "tracked_bytecode": tracked,
-                },
-                indent=2,
-            )
-        )
+        payload = {
+            "findings": [f.to_json() for f in result.findings],
+            "errors": [f.to_json() for f in result.errors],
+            "suppressed": len(result.suppressed),
+            "baselined": len(result.baselined),
+            "tracked_bytecode": tracked,
+        }
+        if args.kernel_contracts or args.contract_report_out:
+            payload["kernel_contracts"] = {
+                "errors": [f.to_json() for f in kc_errors],
+                "warnings": [f.to_json() for f in kc_warnings],
+                "plans": kc_reports,
+            }
+        print(json.dumps(payload, indent=2))
     else:
-        for f in result.errors + result.findings:
+        for f in result.errors + result.findings + kc_errors:
             print(f.format())
+        for f in kc_warnings:
+            print(f"{f.format()} [warning]")
         for p in tracked:
             print(f"{p}: BC001 compiled bytecode tracked by git")
-        n = len(result.findings) + len(result.errors) + len(tracked)
+        if kc_reports is not None:
+            for name, rep in sorted(kc_reports.items()):
+                verdict = "fits" if rep["feasible"] else "OVER BUDGET"
+                print(f"contract-report {name}: {verdict} "
+                      f"(peak {rep['peak_kernel_bytes']} B of "
+                      f"{rep['budget_bytes']} B)")
+            print(f"contract-report written to {args.contract_report_out}")
+        n = (len(result.findings) + len(result.errors) + len(tracked)
+             + len(kc_errors))
         status = "clean" if n == 0 else f"{n} problem(s)"
         print(
             f"analysis: {status} "
             f"({len(result.suppressed)} suppressed, {len(result.baselined)} baselined)"
         )
-    return 0 if result.ok and not tracked else 1
+    return 0 if result.ok and not tracked and not kc_errors else 1
 
 
 if __name__ == "__main__":

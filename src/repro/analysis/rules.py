@@ -643,4 +643,9 @@ def rule_catalog() -> Dict[str, str]:
     cat = {r.id: r.title for r in _RULES}
     cat["DC001"] = "BFS-core module imports a quarantined template module"
     cat["SUP001"] = "suppression directive without a reason"
+    # KC rules live in the kernel-contract verifier (--kernel-contracts),
+    # not the per-file AST pass; imported lazily so plain linting never
+    # pays for the contract registry.
+    from repro.analysis.kernel_contracts import KC_RULES
+    cat.update(KC_RULES)
     return cat

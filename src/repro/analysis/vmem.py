@@ -1,0 +1,168 @@
+"""Static VMEM budget model for the repo's Pallas TPU kernels.
+
+Pure python on purpose: the CI ``analysis`` job runs without jax installed,
+and `benchmarks/bfs_hillclimb.py` calls this thousands of times per sweep to
+prune configs *before* measuring — so dtypes are strings and shapes are
+plain int tuples, never device arrays.
+
+The model (documented in API.md §Kernel contracts):
+
+* A kernel's VMEM working set is the sum over its BlockSpecs of
+  ``prod(block_shape) * dtype_bytes * buffers``.
+* ``buffers`` is the **double-buffering factor**: Pallas pipelines grid
+  steps by prefetching the next block while the current one computes, so
+  any block whose index map depends on a grid axis holds **2** buffers.
+  A block whose index map is constant across the whole grid (the resident
+  frontier, revisited scalar accumulators) is loaded once and holds **1**.
+* The per-core budget defaults to 16 MiB (`DEFAULT_VMEM_BUDGET`), the
+  VMEM size of every TPU generation this repo targets; `RuntimeConfig`
+  (``REPRO_VMEM_BUDGET``) overrides it.
+
+This is intentionally an upper-bound *model*, not Mosaic's allocator: it
+ignores scratch reuse across inputs and rounding of sublane tiles, but it
+is exact enough to answer the only question the tuner and the session gate
+ask — "can this (shape, knob) instantiation possibly fit?".
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple
+
+DEFAULT_VMEM_BUDGET = 16 * 1024 * 1024      # bytes per TPU core
+
+# dtype name -> element bytes. Keys are canonical jnp dtype names; the
+# contract layer normalizes ("bool" stores as i8 on TPU).
+DTYPE_BYTES = {
+    "float64": 8, "int64": 8, "uint64": 8,
+    "float32": 4, "int32": 4, "uint32": 4,
+    "bfloat16": 2, "float16": 2, "int16": 2, "uint16": 2,
+    "int8": 1, "uint8": 1, "bool": 1,
+}
+
+# Mosaic min tile (sublane, lane) by element width; the lane dim is always
+# 128, the sublane dim packs to 32 bytes.
+LANE = 128
+_SUBLANE_BY_BYTES = {8: 4, 4: 8, 2: 16, 1: 32}
+
+# Blocks at or below this footprint are scalar/SMEM-ish (the revisited
+# (1,)-shaped accumulators): Mosaic does not vector-tile them, so the
+# alignment lint skips them.
+SCALAR_BLOCK_BYTES = 512
+
+# dtypes Mosaic cannot lower on the targeted TPU generations.
+UNSUPPORTED_DTYPES = frozenset({"float64", "int64", "uint64", "complex64",
+                                "complex128"})
+
+
+class VmemModelError(ValueError):
+    """A shape/dtype the budget model cannot reason about."""
+
+
+def dtype_bytes(dtype: str) -> int:
+    try:
+        return DTYPE_BYTES[dtype]
+    except KeyError:
+        raise VmemModelError(f"unknown dtype {dtype!r}; the budget model "
+                             f"knows {sorted(DTYPE_BYTES)}") from None
+
+
+def min_tile(dtype: str) -> Tuple[int, int]:
+    """Mosaic (sublane, lane) minimum tile for the last two dims."""
+    return _SUBLANE_BY_BYTES[dtype_bytes(dtype)], LANE
+
+
+def block_bytes(shape: Sequence[int], dtype: str) -> int:
+    n = 1
+    for d in shape:
+        if d < 0:
+            raise VmemModelError(f"negative dim in block shape {tuple(shape)}")
+        n *= int(d)
+    return n * dtype_bytes(dtype)
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockCost:
+    """One BlockSpec's contribution to the kernel's VMEM working set."""
+    name: str
+    role: str                    # "in" | "out"
+    block_shape: Tuple[int, ...]
+    dtype: str
+    buffers: int                 # 1 resident/accumulator, 2 pipelined
+    bytes_per_buffer: int
+    bytes_total: int
+
+    def to_json(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+@dataclasses.dataclass(frozen=True)
+class VmemReport:
+    """Per-kernel-instantiation VMEM budget report."""
+    kernel: str
+    grid: Tuple[int, ...]
+    blocks: Tuple[BlockCost, ...]
+    total_bytes: int
+    budget_bytes: int
+
+    @property
+    def fits(self) -> bool:
+        return self.total_bytes <= self.budget_bytes
+
+    @property
+    def utilization(self) -> float:
+        return self.total_bytes / self.budget_bytes if self.budget_bytes else 0.0
+
+    def to_json(self) -> dict:
+        return {
+            "kernel": self.kernel,
+            "grid": list(self.grid),
+            "blocks": [b.to_json() for b in self.blocks],
+            "total_bytes": self.total_bytes,
+            "budget_bytes": self.budget_bytes,
+            "fits": self.fits,
+            "utilization": round(self.utilization, 4),
+        }
+
+
+def cost_block(name: str, role: str, block_shape: Sequence[int], dtype: str,
+               *, pipelined: bool) -> BlockCost:
+    per = block_bytes(block_shape, dtype)
+    buffers = 2 if pipelined else 1
+    return BlockCost(name=name, role=role,
+                     block_shape=tuple(int(d) for d in block_shape),
+                     dtype=dtype, buffers=buffers, bytes_per_buffer=per,
+                     bytes_total=per * buffers)
+
+
+def vmem_report(kernel: str, grid: Sequence[int], blocks: Sequence[BlockCost],
+                budget_bytes: Optional[int] = None) -> VmemReport:
+    budget = DEFAULT_VMEM_BUDGET if budget_bytes is None else int(budget_bytes)
+    total = sum(b.bytes_total for b in blocks)
+    return VmemReport(kernel=kernel, grid=tuple(int(g) for g in grid),
+                      blocks=tuple(blocks), total_bytes=total,
+                      budget_bytes=budget)
+
+
+def tiling_misalignments(block_shape: Sequence[int],
+                         dtype: str) -> List[str]:
+    """Mosaic last-two-dims alignment lints for one block (empty = clean).
+
+    Scalar-footprint blocks (<= `SCALAR_BLOCK_BYTES`) are exempt — the
+    revisited ``(1,)`` accumulators live in SMEM-class storage.
+    """
+    out: List[str] = []
+    if dtype in UNSUPPORTED_DTYPES:
+        out.append(f"dtype {dtype} has no Mosaic lowering on TPU")
+        return out
+    shape = tuple(int(d) for d in block_shape)
+    if not shape or block_bytes(shape, dtype) <= SCALAR_BLOCK_BYTES:
+        return out
+    sub, lane = min_tile(dtype)
+    if shape[-1] % lane != 0:
+        out.append(f"last dim {shape[-1]} is not a multiple of the lane "
+                   f"width {lane} (min tile for {dtype} is {sub}x{lane})")
+    if len(shape) >= 2 and shape[-2] != 1 and shape[-2] % sub != 0:
+        out.append(f"second-to-last dim {shape[-2]} is not a multiple of "
+                   f"the {dtype} sublane count {sub} "
+                   f"(min tile {sub}x{lane})")
+    return out

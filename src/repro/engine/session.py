@@ -57,6 +57,7 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from typing import Any, Callable, Optional
 
 import jax
@@ -215,6 +216,8 @@ class GraphSession:
         self._shared_counts: dict[Any, int] = {}
         self._plan_sources: dict[Any, str] = {}
         self._warmed: set = set()
+        self._contract_checked: set = set()
+        self._graph_shape_cache = None
         self._graph_fp: Optional[str] = None
         self._artifacts = artifact_cache_for(self.runtime)
         self._preloaded: dict[str, Callable] = {}
@@ -336,10 +339,68 @@ class GraphSession:
         with self._lock:
             fn = self._executables.get(key)
             if fn is None:
+                self._contract_gate(key)
                 fn = self._make_executable(key, build, static_argnums,
                                            persist)
                 self._executables[key] = fn
         return fn
+
+    def _contract_gate(self, key) -> None:
+        """Static kernel-contract check on first build of a kernel plan.
+
+        Runs `repro.analysis.kernel_contracts.contract_report` against this
+        graph's shape when the plan key carries a BFS/Hybrid config whose
+        kernel path is enabled. An infeasible plan emits one structured
+        `KernelContractWarning` (or raises `KernelBudgetError` under
+        `RuntimeConfig.strict_contracts`) *before* tracing — the static
+        analogue of failing at Mosaic lowering time, with the fix in the
+        message. Checked once per key; called under the session lock.
+        """
+        if not isinstance(key, tuple) or key in self._contract_checked:
+            return
+        cfg = None
+        for item in key:
+            bfs = getattr(item, "bfs", None)
+            if bfs is not None and hasattr(bfs, "td_chunk"):
+                cfg = bfs
+                break
+            if hasattr(item, "td_chunk"):
+                cfg = item
+                break
+        if cfg is None:
+            return
+        # Resolve the kernel backend against *this session's* runtime (the
+        # process-global resolution in core.bfs.kernels_enabled would ignore
+        # a session-private RuntimeConfig).
+        if cfg.backend_kernels is None:
+            mode = self.runtime.kernel_backend
+            enabled = (True if mode == "on" else
+                       False if mode == "off" else
+                       jax.default_backend() == "tpu")
+        else:
+            enabled = cfg.backend_kernels
+        if not enabled:
+            return
+        from repro.analysis.kernel_contracts import (GraphShape,
+                                                     contract_report)
+        from repro.kernels.contracts import (KernelBudgetError,
+                                             KernelContractWarning)
+        if self._graph_shape_cache is None:
+            # repro-ok: LS001 under self._lock — executable() holds it across the gate
+            self._graph_shape_cache = GraphShape.from_graph(self.graph)
+        report = contract_report(key, self._graph_shape_cache,
+                                 budget_bytes=self.runtime.vmem_budget_bytes)
+        if report.feasible:
+            self._contract_checked.add(key)
+            return
+        first = report.errors[0]
+        msg = (f"plan {key!r} fails its kernel contract: {report.summary()}; "
+               f"first error: [{first.kernel}] {first.rule} {first.message}")
+        if self.runtime.strict_contracts:
+            # NOT marked checked: a strict retry must refuse again.
+            raise KernelBudgetError(msg)
+        self._contract_checked.add(key)
+        warnings.warn(msg, KernelContractWarning, stacklevel=3)
 
     def _make_executable(self, key, build, static_argnums, persist):
         shareable = persist and not static_argnums

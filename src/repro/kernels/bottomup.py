@@ -28,6 +28,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.contracts import require_divisible
+
+_PAD_HINT = ("kernels.ops.bottomup pads rows before dispatching; call it, "
+             "or pad the tile yourself")
+
 
 def _bottomup_kernel(deg_ref, nbrs_ref, frontier_ref, found_ref, parent_ref,
                      *, slab: int, int_max: int):
@@ -77,7 +82,7 @@ def bottomup_pallas(deg: jax.Array, nbrs: jax.Array, frontier: jax.Array,
       rblk: rows per grid program (8x128-friendly).
     """
     r, w = nbrs.shape
-    assert r % rblk == 0, f"rows {r} must pad to a multiple of rblk {rblk}"
+    require_divisible("bottomup_pallas", "rows", r, rblk, hint=_PAD_HINT)
     wpad = (-w) % slab
     if wpad:
         nbrs = jnp.pad(nbrs, ((0, 0), (0, wpad)))
@@ -157,7 +162,8 @@ def bottomup_batch_pallas(deg: jax.Array, nbrs: jax.Array, frontier: jax.Array,
     lane-masked, nbrs [R, W] shared, frontier [B, V] per lane."""
     b, r = deg.shape
     w = nbrs.shape[1]
-    assert r % rblk == 0, f"rows {r} must pad to a multiple of rblk {rblk}"
+    require_divisible("bottomup_batch_pallas", "rows", r, rblk,
+                      hint=_PAD_HINT)
     wpad = (-w) % slab
     if wpad:
         nbrs = jnp.pad(nbrs, ((0, 0), (0, wpad)))

@@ -1,0 +1,356 @@
+"""Declarative shape/VMEM contracts for every Pallas kernel in this package.
+
+Each ``*_pallas`` wrapper in `repro.kernels` has a registered
+:class:`KernelContractSpec` here that rebuilds, for a *concrete* shape
+instantiation, exactly what its ``pl.pallas_call`` would request: the grid,
+every BlockSpec's (array shape, block shape, dtype, index map), and the
+gathers the kernel body performs (with the interval the indices live in and
+the clip it applies). The contract is the machine-checkable replacement for
+the prose that used to live in the module docstrings ("the frontier block
+is mapped whole", "W pads to a slab multiple", ...).
+
+This module is **pure python** — no jax import — because two consumers run
+without jax: the CI ``analysis`` job (``python -m repro.analysis src/
+--kernel-contracts``) and the hillclimb tuner's static pruning pass. The
+checker that interprets these contracts lives in
+:mod:`repro.analysis.kernel_contracts`; the typed errors below are raised
+by the kernel wrappers themselves (`repro.kernels.ops` and the ``*_pallas``
+entry points), so an infeasible call fails with an actionable message
+instead of an opaque Mosaic lowering error.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional, Tuple
+
+from repro.analysis.vmem import DEFAULT_VMEM_BUDGET
+
+# -------------------------------------------------------------- exceptions --
+
+
+class KernelContractError(ValueError):
+    """A kernel instantiation violates its declared contract."""
+
+
+class GridCoverageError(KernelContractError):
+    """Grid x block shape would not cover the array exactly (tail drop)."""
+
+
+class KernelBudgetError(KernelContractError):
+    """The instantiation's VMEM working set exceeds the per-core budget."""
+
+
+class KernelContractWarning(UserWarning):
+    """A plan's kernels exceed budget (non-strict session gate)."""
+
+
+def require_divisible(kernel: str, dim: str, n: int, mult: int, *,
+                      hint: str) -> None:
+    """Typed replacement for the wrappers' bare ``assert n % mult == 0``.
+
+    A non-divisible shape means the ``n // mult`` grid would silently drop
+    the ``n % mult`` tail elements — the exact bug class the KC002
+    grid-coverage proof exists to catch statically.
+    """
+    if mult <= 0:
+        raise GridCoverageError(
+            f"{kernel}: {dim} block size must be positive, got {mult}")
+    if n % mult:
+        raise GridCoverageError(
+            f"{kernel}: {dim}={n} is not a multiple of its block size "
+            f"{mult}; the {n // mult}-step grid would silently drop the "
+            f"last {n % mult} element(s). {hint}")
+
+
+def check_frontier_residency(v: int, *, budget_bytes: Optional[int] = None,
+                             kernel: str = "bottomup") -> None:
+    """Raise `KernelBudgetError` when a V-byte frontier cannot live in VMEM.
+
+    The bottom-up kernels map the whole uint8 frontier into one resident
+    VMEM block (`pl.BlockSpec` with a constant index map), so ``v`` bytes
+    must fit the per-core budget *before* the tile and output blocks are
+    even counted. Raising here — at trace time, with the fix in the
+    message — replaces the opaque Mosaic allocation failure a real-TPU
+    lowering would produce.
+    """
+    budget = DEFAULT_VMEM_BUDGET if budget_bytes is None else int(budget_bytes)
+    if v > budget:
+        raise KernelBudgetError(
+            f"{kernel}: the whole-frontier VMEM-resident block needs "
+            f"{v} bytes (V={v} uint8 flags) but the per-core budget is "
+            f"{budget} bytes (RuntimeConfig.vmem_budget_bytes / "
+            f"REPRO_VMEM_BUDGET). Shard the vertex id space first — the "
+            f"hybrid partitioner (Engine backend='sharded') bounds "
+            f"per-device V — or raise the budget if the target core has "
+            f"more VMEM.")
+
+
+# ---------------------------------------------------------------- contracts --
+
+
+def ceil_to(n: int, mult: int) -> int:
+    return ((n + mult - 1) // mult) * mult
+
+
+_ceil_to = ceil_to    # internal alias, keeps the builders terse
+
+
+def width_ladder(max_degree: int, base: int = 32, growth: int = 2) -> list:
+    """ELL bucket widths covering degrees 1..max_degree.
+
+    Pure mirror of `repro.core.ell.bucket_widths` (which lives in a
+    jax-importing module); `tests/test_kernel_contracts.py` proves the two
+    stay identical. The ladder is the interval domain for the KC004
+    gather-bounds reasoning: every neighbour id in a width-w tile is a
+    vertex id in [0, v] (v itself is the hybrid path's drop-target pad id).
+    """
+    if max_degree <= 0:
+        return []
+    widths = [base]
+    while widths[-1] < max_degree:
+        widths.append(widths[-1] * growth)
+    return widths
+
+
+@dataclasses.dataclass(frozen=True)
+class BlockContract:
+    """One BlockSpec, concretely instantiated."""
+    name: str
+    role: str                          # "in" | "out"
+    array_shape: Tuple[int, ...]       # full operand shape
+    block_shape: Tuple[int, ...]
+    dtype: str
+    index_map: Callable                # grid ids -> block ids (pure python)
+
+
+@dataclasses.dataclass(frozen=True)
+class GatherSpec:
+    """A dynamic gather the kernel body performs: ``source[index_block]``.
+
+    ``raw_interval`` is the closed interval the index values can take
+    *before* any clipping (for ELL tiles: [0, v] — padded slots hold 0 and
+    the hybrid path's pad rows target the out-of-range id v).  ``clip`` is
+    the closed interval the kernel clips to before gathering, or None when
+    the kernel gathers raw — which KC004 flags.
+    """
+    index: str
+    source: str
+    raw_interval: Tuple[int, int]
+    clip: Optional[Tuple[int, int]]
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelContract:
+    """One pallas_call site at one concrete shape instantiation."""
+    kernel: str                        # wrapper function name
+    module: str                        # kernels submodule (for diagnostics)
+    grid: Tuple[int, ...]
+    blocks: Tuple[BlockContract, ...]
+    gathers: Tuple[GatherSpec, ...] = ()
+
+
+# Builders mirror the ``*_pallas`` wrappers exactly: same internal padding
+# (bottom-up pads W to a slab multiple), same floor-division grids — so a
+# non-divisible instantiation yields a contract whose coverage hole the
+# checker reports, rather than one that hides it.
+
+
+def bottomup_contract(r: int, w: int, v: int, *, slab: int = 32,
+                      rblk: int = 128) -> KernelContract:
+    wp = _ceil_to(w, slab) if w else slab
+    return KernelContract(
+        kernel="bottomup_pallas", module="bottomup",
+        grid=(r // rblk,),
+        blocks=(
+            BlockContract("deg", "in", (r,), (rblk,), "int32",
+                          lambda i: (i,)),
+            BlockContract("nbrs", "in", (r, wp), (rblk, wp), "int32",
+                          lambda i: (i, 0)),
+            BlockContract("frontier", "in", (v,), (v,), "uint8",
+                          lambda i: (0,)),
+            BlockContract("found", "out", (r,), (rblk,), "uint8",
+                          lambda i: (i,)),
+            BlockContract("parent", "out", (r,), (rblk,), "int32",
+                          lambda i: (i,)),
+        ),
+        gathers=(GatherSpec("nbrs", "frontier", (0, v), (0, v - 1)),),
+    )
+
+
+def bottomup_batch_contract(b: int, r: int, w: int, v: int, *,
+                            slab: int = 32, rblk: int = 128) -> KernelContract:
+    wp = _ceil_to(w, slab) if w else slab
+    return KernelContract(
+        kernel="bottomup_batch_pallas", module="bottomup",
+        grid=(b, r // rblk),
+        blocks=(
+            BlockContract("deg", "in", (b, r), (1, rblk), "int32",
+                          lambda l, i: (l, i)),
+            BlockContract("nbrs", "in", (r, wp), (rblk, wp), "int32",
+                          lambda l, i: (i, 0)),
+            BlockContract("frontier", "in", (b, v), (1, v), "uint8",
+                          lambda l, i: (l, 0)),
+            BlockContract("found", "out", (b, r), (1, rblk), "uint8",
+                          lambda l, i: (l, i)),
+            BlockContract("parent", "out", (b, r), (1, rblk), "int32",
+                          lambda l, i: (l, i)),
+        ),
+        gathers=(GatherSpec("nbrs", "frontier", (0, v), (0, v - 1)),),
+    )
+
+
+def topdown_contract(c: int, w: int, v: int, *,
+                     cblk: int = 128) -> KernelContract:
+    return KernelContract(
+        kernel="topdown_pallas", module="topdown",
+        grid=(c // cblk,),
+        blocks=(
+            BlockContract("deg", "in", (c,), (cblk,), "int32",
+                          lambda i: (i,)),
+            BlockContract("nbrs", "in", (c, w), (cblk, w), "int32",
+                          lambda i: (i, 0)),
+            BlockContract("visited", "in", (v,), (v,), "uint8",
+                          lambda i: (0,)),
+            BlockContract("fresh", "out", (c, w), (cblk, w), "uint8",
+                          lambda i: (i, 0)),
+            BlockContract("dst", "out", (c, w), (cblk, w), "int32",
+                          lambda i: (i, 0)),
+        ),
+        gathers=(GatherSpec("nbrs", "visited", (0, v), (0, v - 1)),),
+    )
+
+
+def topdown_batch_contract(b: int, c: int, w: int, v: int, *,
+                           cblk: int = 128) -> KernelContract:
+    return KernelContract(
+        kernel="topdown_batch_pallas", module="topdown",
+        grid=(b, c // cblk),
+        blocks=(
+            BlockContract("deg", "in", (b, c), (1, cblk), "int32",
+                          lambda l, i: (l, i)),
+            BlockContract("nbrs", "in", (c, w), (cblk, w), "int32",
+                          lambda l, i: (i, 0)),
+            BlockContract("visited", "in", (b, v), (1, v), "uint8",
+                          lambda l, i: (l, 0)),
+            BlockContract("fresh", "out", (b, c, w), (1, cblk, w), "uint8",
+                          lambda l, i: (l, i, 0)),
+        ),
+        gathers=(GatherSpec("nbrs", "visited", (0, v), (0, v - 1)),),
+    )
+
+
+def frontier_fused_contract(v: int, *,
+                            blk_words: int = 256) -> KernelContract:
+    blk = blk_words * 32
+    return KernelContract(
+        kernel="frontier_fused_pallas", module="frontier_fused",
+        grid=(v // blk,),
+        blocks=(
+            BlockContract("flags", "in", (v,), (blk,), "uint8",
+                          lambda i: (i,)),
+            BlockContract("deg", "in", (v,), (blk,), "int32",
+                          lambda i: (i,)),
+            BlockContract("packed", "out", (v // 32,), (blk_words,), "uint32",
+                          lambda i: (i,)),
+            BlockContract("nf", "out", (1,), (1,), "int32", lambda i: (0,)),
+            BlockContract("mf", "out", (1,), (1,), "int32", lambda i: (0,)),
+        ),
+    )
+
+
+def frontier_fused_batch_contract(b: int, v: int, *,
+                                  blk_words: int = 256) -> KernelContract:
+    blk = blk_words * 32
+    return KernelContract(
+        kernel="frontier_fused_batch_pallas", module="frontier_fused",
+        grid=(b, v // blk),
+        blocks=(
+            BlockContract("flags", "in", (b, v), (1, blk), "uint8",
+                          lambda l, i: (l, i)),
+            BlockContract("deg", "in", (v,), (blk,), "int32",
+                          lambda l, i: (i,)),
+            BlockContract("packed", "out", (b, v // 32), (1, blk_words),
+                          "uint32", lambda l, i: (l, i)),
+            BlockContract("nf", "out", (b, 1), (1, 1), "int32",
+                          lambda l, i: (l, 0)),
+            BlockContract("mf", "out", (b, 1), (1, 1), "int32",
+                          lambda l, i: (l, 0)),
+        ),
+    )
+
+
+def decode_attention_contract(bt: int, s: int, kk: int, g: int, h: int, *,
+                              blk: int = 512) -> KernelContract:
+    return KernelContract(
+        kernel="decode_attention_pallas", module="decode_attn",
+        grid=(bt, s // blk),
+        blocks=(
+            BlockContract("q", "in", (bt, kk, g, h), (1, kk, g, h), "float32",
+                          lambda b_, s_: (b_, 0, 0, 0)),
+            BlockContract("k", "in", (bt, s, kk, h), (1, blk, kk, h),
+                          "float32", lambda b_, s_: (b_, s_, 0, 0)),
+            BlockContract("v", "in", (bt, s, kk, h), (1, blk, kk, h),
+                          "float32", lambda b_, s_: (b_, s_, 0, 0)),
+            BlockContract("len", "in", (bt,), (1,), "int32",
+                          lambda b_, s_: (b_,)),
+            BlockContract("out", "out", (bt, kk, g, h), (1, kk, g, h),
+                          "float32", lambda b_, s_: (b_, 0, 0, 0)),
+            BlockContract("m", "out", (bt, kk, g), (1, kk, g), "float32",
+                          lambda b_, s_: (b_, 0, 0)),
+            BlockContract("l", "out", (bt, kk, g), (1, kk, g), "float32",
+                          lambda b_, s_: (b_, 0, 0)),
+            BlockContract("acc", "out", (bt, kk, g, h), (1, kk, g, h),
+                          "float32", lambda b_, s_: (b_, 0, 0, 0)),
+        ),
+    )
+
+
+# ----------------------------------------------------------------- registry --
+
+
+@dataclasses.dataclass(frozen=True)
+class KernelContractSpec:
+    """Registry row: wrapper name -> contract builder + reference shapes.
+
+    ``reference`` is an aligned scale-16-class instantiation the CLI gate
+    (KC001..KC006 over ``src/``) evaluates — the tree must be clean at it.
+    """
+    name: str
+    module: str
+    build: Callable[..., KernelContract]
+    reference: Dict[str, int]
+
+    def reference_contract(self) -> KernelContract:
+        return self.build(**self.reference)
+
+
+REGISTRY: Dict[str, KernelContractSpec] = {
+    spec.name: spec for spec in (
+        KernelContractSpec(
+            "bottomup_pallas", "bottomup", bottomup_contract,
+            dict(r=4096, w=2048, v=65536, slab=32, rblk=128)),
+        KernelContractSpec(
+            "bottomup_batch_pallas", "bottomup", bottomup_batch_contract,
+            dict(b=8, r=4096, w=2048, v=65536, slab=32, rblk=128)),
+        KernelContractSpec(
+            "topdown_pallas", "topdown", topdown_contract,
+            dict(c=4096, w=2048, v=65536, cblk=128)),
+        KernelContractSpec(
+            "topdown_batch_pallas", "topdown", topdown_batch_contract,
+            dict(b=8, c=4096, w=2048, v=65536, cblk=128)),
+        KernelContractSpec(
+            "frontier_fused_pallas", "frontier_fused",
+            frontier_fused_contract, dict(v=65536, blk_words=256)),
+        KernelContractSpec(
+            "frontier_fused_batch_pallas", "frontier_fused",
+            frontier_fused_batch_contract, dict(b=8, v=65536, blk_words=256)),
+        KernelContractSpec(
+            "decode_attention_pallas", "decode_attn",
+            decode_attention_contract,
+            dict(bt=8, s=4096, kk=8, g=4, h=128, blk=512)),
+    )
+}
+
+
+def registered_kernels() -> Tuple[str, ...]:
+    return tuple(sorted(REGISTRY))

@@ -20,6 +20,8 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.contracts import require_divisible
+
 NEG_INF = -1e30
 
 
@@ -79,7 +81,10 @@ def decode_attention_pallas(q: jax.Array, k_cache: jax.Array,
     """
     b, kk, g, h = q.shape
     _, s, _, _ = k_cache.shape
-    assert s % blk == 0, f"S={s} must be a multiple of blk={blk}"
+    require_divisible("decode_attention_pallas", "S", s, blk,
+                      hint="kernels.ops.decode_attention pads the cache "
+                           "sequence before dispatching; call it, or pad "
+                           "the caches yourself")
     ns = s // blk
     kernel = functools.partial(_decode_kernel, blk=blk, logit_cap=logit_cap)
     out, _, _, _ = pl.pallas_call(

@@ -19,6 +19,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.contracts import require_divisible
+
+_PAD_HINT = ("kernels.ops.frontier_fused pads V before dispatching; call "
+             "it, or pad the flag array yourself")
+
 
 def _fused_kernel(flags_ref, deg_ref, packed_ref, nf_ref, mf_ref):
     i = pl.program_id(0)
@@ -51,7 +56,7 @@ def frontier_fused_pallas(flags: jax.Array, deg: jax.Array, *,
     """
     v = flags.shape[0]
     blk = blk_words * 32
-    assert v % blk == 0, f"V={v} must be a multiple of {blk}"
+    require_divisible("frontier_fused_pallas", "V", v, blk, hint=_PAD_HINT)
     grid = (v // blk,)
     packed, nf, mf = pl.pallas_call(
         _fused_kernel,
@@ -114,7 +119,8 @@ def frontier_fused_batch_pallas(flags: jax.Array, deg: jax.Array, *,
     32*blk_words (ops wrapper pads)."""
     b, v = flags.shape
     blk = blk_words * 32
-    assert v % blk == 0, f"V={v} must be a multiple of {blk}"
+    require_divisible("frontier_fused_batch_pallas", "V", v, blk,
+                      hint=_PAD_HINT)
     packed, nf, mf = pl.pallas_call(
         _fused_batch_kernel,
         grid=(b, v // blk),

@@ -13,6 +13,12 @@ import jax.numpy as jnp
 from repro.kernels import bottomup as _bu
 from repro.kernels import frontier_fused as _ff
 from repro.kernels import topdown as _td
+from repro.kernels.contracts import check_frontier_residency
+
+
+def _frontier_budget():
+    from repro.runtime.config import get_runtime_config
+    return get_runtime_config().vmem_budget_bytes
 
 
 def _auto_interpret(interpret):
@@ -66,6 +72,13 @@ def bottomup(deg, nbrs, frontier, *, slab=32, rblk=128, interpret=None):
     r = nbrs.shape[0]
     if r == 0:
         return (jnp.zeros(0, jnp.uint8), jnp.zeros(0, jnp.int32))
+    # Trace-time budget check: the kernel keeps the whole V-byte frontier
+    # resident in VMEM, so an oversized V must fail here with the sharded
+    # fallback in the message, not as an opaque Mosaic allocation error.
+    # (Fires per traced shape; an already-cached shape was already checked.)
+    check_frontier_residency(frontier.shape[0],
+                             budget_bytes=_frontier_budget(),
+                             kernel="kernels.ops.bottomup")
     rblk = min(rblk, _ceil_to(r, 8))
     deg_p, _ = _pad_rows(deg, rblk)
     nbrs_p, _ = _pad_rows(nbrs, rblk)
@@ -132,6 +145,11 @@ def bottomup_batch(deg, nbrs, frontier, *, slab=32, rblk=128, interpret=None):
     b, r = deg.shape
     if r == 0 or b == 0:
         return (jnp.zeros((b, 0), jnp.uint8), jnp.zeros((b, 0), jnp.int32))
+    # Same trace-time residency check as `bottomup`: each lane's frontier
+    # block is (1, V), so the budget bound is per-lane V, not B*V.
+    check_frontier_residency(frontier.shape[1],
+                             budget_bytes=_frontier_budget(),
+                             kernel="kernels.ops.bottomup_batch")
     rblk = min(rblk, _ceil_to(r, 8))
     deg_p, _ = _pad_axis1(deg, rblk)
     nbrs_p, _ = _pad_rows(nbrs, rblk)

@@ -14,6 +14,11 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
+from repro.kernels.contracts import require_divisible
+
+_PAD_HINT = ("kernels.ops.topdown pads rows before dispatching; call it, "
+             "or pad the tile yourself")
+
 
 def _topdown_kernel(deg_ref, nbrs_ref, visited_ref, fresh_ref, dst_ref):
     deg = deg_ref[...]                       # [cblk]
@@ -35,7 +40,7 @@ def topdown_pallas(deg: jax.Array, nbrs: jax.Array, visited: jax.Array,
                    interpret: bool = True) -> tuple[jax.Array, jax.Array]:
     """Returns (fresh uint8[C, W], dst int32[C, W]) for an ELL queue tile."""
     c, w = nbrs.shape
-    assert c % cblk == 0, f"rows {c} must pad to a multiple of cblk {cblk}"
+    require_divisible("topdown_pallas", "rows", c, cblk, hint=_PAD_HINT)
     v = visited.shape[0]
     return pl.pallas_call(
         _topdown_kernel,
@@ -97,7 +102,8 @@ def topdown_batch_pallas(deg: jax.Array, nbrs: jax.Array, visited: jax.Array,
     shared, visited [B, V] per lane."""
     b, c = deg.shape
     w = nbrs.shape[1]
-    assert c % cblk == 0, f"rows {c} must pad to a multiple of cblk {cblk}"
+    require_divisible("topdown_batch_pallas", "rows", c, cblk,
+                      hint=_PAD_HINT)
     v = visited.shape[1]
     return pl.pallas_call(
         _topdown_batch_kernel,

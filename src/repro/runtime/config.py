@@ -29,6 +29,10 @@ REPRO_FAULTS_SEED      int seed for probabilistic fault selectors
 REPRO_SANITIZE         '1'/'0': concurrency sanitizer — instrumented lock/
                        timer wrappers recording the lock-order graph
                        (see `repro.analysis.concurrency`). Testing only.
+REPRO_VMEM_BUDGET      per-core VMEM budget the kernel-contract verifier
+                       checks against; int bytes or '16MB' (default 16 MiB)
+REPRO_STRICT_CONTRACTS '1'/'0': `GraphSession.executable` refuses (instead
+                       of warns) when a plan's kernels exceed the budget
 =====================  =====================================================
 
 `launch_env()` documents the XLA/tcmalloc launch hygiene from the
@@ -48,6 +52,8 @@ import dataclasses
 import os
 import threading
 from typing import Optional
+
+from repro.analysis.vmem import DEFAULT_VMEM_BUDGET
 
 _TRISTATE = ("auto", "on", "off")
 
@@ -125,8 +131,14 @@ class RuntimeConfig:
     faults_seed: int = 0
     # -- concurrency sanitizer -----------------------------------------------
     sanitize: bool = False                   # instrumented locks/timers
+    # -- kernel contracts ----------------------------------------------------
+    vmem_budget_bytes: int = DEFAULT_VMEM_BUDGET   # per-core VMEM budget
+    strict_contracts: bool = False           # over-budget plan: raise vs warn
 
     def __post_init__(self):
+        if self.vmem_budget_bytes <= 0:
+            raise ValueError(
+                f"vmem_budget_bytes must be > 0, got {self.vmem_budget_bytes}")
         if self.kernel_backend not in _TRISTATE:
             raise ValueError(f"kernel_backend: want one of {_TRISTATE}, "
                              f"got {self.kernel_backend!r}")
@@ -192,6 +204,12 @@ class RuntimeConfig:
         if "REPRO_SANITIZE" in env:
             values["sanitize"] = _parse_bool(env["REPRO_SANITIZE"],
                                              name="REPRO_SANITIZE")
+        if "REPRO_VMEM_BUDGET" in env:
+            values["vmem_budget_bytes"] = _parse_size(
+                env["REPRO_VMEM_BUDGET"], name="REPRO_VMEM_BUDGET")
+        if "REPRO_STRICT_CONTRACTS" in env:
+            values["strict_contracts"] = _parse_bool(
+                env["REPRO_STRICT_CONTRACTS"], name="REPRO_STRICT_CONTRACTS")
         for key, val in explicit.items():
             if val is None:
                 continue

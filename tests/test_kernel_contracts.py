@@ -1,0 +1,585 @@
+"""Kernel contract verifier tests: VMEM model, KC001..KC006, plan reports,
+the CLI gate, the typed wrapper errors, and the session/ops runtime gates.
+
+Layout mirrors the verifier: model unit tests first (`repro.analysis.vmem`),
+then per-rule fixtures (a known-bad contract proving the rule fires and a
+near-identical clean one proving it doesn't), then the plan-report goldens,
+then the consumers (CLI, ops wrappers, session gate, hillclimb store).
+"""
+import json
+import os
+import warnings as warnings_mod
+
+import numpy as np
+import pytest
+
+from repro.analysis import vmem
+from repro.analysis.kernel_contracts import (DEFAULT_PLANS, ENUM_GRID_CAP,
+                                             GraphShape, KC_RULES,
+                                             check_contract, contract_report,
+                                             default_plan_reports, run_gate)
+from repro.kernels import contracts as C
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def _rules(check_or_report):
+    return [f.rule for f in check_or_report.findings]
+
+
+def _error_rules(check_or_report):
+    return [f.rule for f in check_or_report.findings if f.severity == "error"]
+
+
+# ===========================================================================
+# VMEM model
+# ===========================================================================
+
+
+def test_block_bytes_and_unknown_dtype():
+    assert vmem.block_bytes((128, 128), "int32") == 128 * 128 * 4
+    assert vmem.block_bytes((), "uint8") == 1
+    with pytest.raises(vmem.VmemModelError):
+        vmem.dtype_bytes("float13")
+
+
+def test_double_buffering_factor():
+    pipelined = vmem.cost_block("a", "in", (128, 128), "int32",
+                                pipelined=True)
+    resident = vmem.cost_block("a", "in", (128, 128), "int32",
+                               pipelined=False)
+    assert pipelined.buffers == 2 and resident.buffers == 1
+    assert pipelined.bytes_total == 2 * resident.bytes_total
+
+
+def test_tiling_misalignments():
+    assert vmem.tiling_misalignments((8, 128), "float32") == []
+    assert vmem.tiling_misalignments((1, 128), "float32") == []  # sublane 1 ok
+    lane = vmem.tiling_misalignments((8, 100), "float32")
+    assert len(lane) == 1 and "lane" in lane[0]
+    sub = vmem.tiling_misalignments((7, 128), "float32")
+    assert len(sub) == 1 and "sublane" in sub[0]
+    # the (1,)-shaped revisited accumulators are scalar-class: exempt
+    assert vmem.tiling_misalignments((1,), "int32") == []
+    assert "no Mosaic lowering" in \
+        vmem.tiling_misalignments((8, 128), "float64")[0]
+
+
+# ===========================================================================
+# width ladder parity with the jax-side ELL bucketing
+# ===========================================================================
+
+
+def test_width_ladder_matches_ell_bucket_widths():
+    from repro.core import ell
+    for d in (1, 5, 31, 32, 33, 100, 512, 2048, 2049, 100_000):
+        assert C.width_ladder(d) == ell.bucket_widths(d), d
+    for d in (7, 9, 64, 65):
+        assert C.width_ladder(d, base=8, growth=4) == \
+            ell.bucket_widths(d, base=8, growth=4), d
+    assert C.width_ladder(0) == []
+
+
+# ===========================================================================
+# KC002 — grid coverage
+# ===========================================================================
+
+
+def test_kc002_clean_on_divisible_instantiation():
+    check = check_contract(C.bottomup_contract(256, 64, 1024, rblk=128))
+    assert "KC002" not in _rules(check)
+    assert check.feasible
+
+
+def test_kc002_fires_on_truncating_grid():
+    # 130 rows // 128 -> a 1-step grid that silently drops the last 2 rows
+    check = check_contract(C.bottomup_contract(130, 64, 1024, rblk=128))
+    assert "KC002" in _error_rules(check)
+    assert not check.feasible
+    msg = next(f.message for f in check.findings if f.rule == "KC002")
+    assert "silently dropped" in msg and "130" in msg
+
+
+def test_kc002_fires_on_pinned_partial_dim():
+    con = C.KernelContract(
+        kernel="synthetic", module="x", grid=(2,),
+        blocks=(C.BlockContract("a", "in", (256,), (128,), "int32",
+                                lambda i: (1,)),))   # pinned to block 1
+    check = check_contract(con)
+    assert "KC002" in _error_rules(check)
+
+
+# ===========================================================================
+# KC001 — VMEM budget
+# ===========================================================================
+
+
+def test_kc001_fires_when_tile_exceeds_budget():
+    # one 128 x 32768 int32 double-buffered tile = 32 MiB > 16 MiB default
+    check = check_contract(C.bottomup_contract(128, 32768, 1024, rblk=128))
+    assert "KC001" in _error_rules(check)
+    msg = next(f.message for f in check.findings if f.rule == "KC001")
+    assert "REPRO_VMEM_BUDGET" in msg and "nbrs" in msg
+    assert not check.vmem.fits
+
+
+def test_kc001_respects_budget_override():
+    con = C.bottomup_contract(128, 64, 1024, rblk=128)
+    assert check_contract(con).feasible
+    assert not check_contract(con, budget_bytes=1024).feasible
+
+
+# ===========================================================================
+# KC003 — Mosaic tiling lints are warnings, never gate
+# ===========================================================================
+
+
+def test_kc003_decode_reference_warns_but_stays_feasible():
+    check = check_contract(
+        C.REGISTRY["decode_attention_pallas"].reference_contract())
+    kc3 = [f for f in check.findings if f.rule == "KC003"]
+    assert kc3 and all(f.severity == "warning" for f in kc3)
+    assert check.feasible
+
+
+# ===========================================================================
+# KC004 — gather bounds
+# ===========================================================================
+
+
+def _gather_contract(clip):
+    return C.KernelContract(
+        kernel="synthetic", module="x", grid=(2,),
+        blocks=(
+            C.BlockContract("idx", "in", (256,), (128,), "int32",
+                            lambda i: (i,)),
+            C.BlockContract("tab", "in", (1024,), (1024,), "uint8",
+                            lambda i: (0,)),
+        ),
+        gathers=(C.GatherSpec("idx", "tab", (0, 1024), clip),))
+
+
+def test_kc004_fires_on_unclipped_gather():
+    check = check_contract(_gather_contract(None))
+    assert "KC004" in _error_rules(check)
+    msg = next(f.message for f in check.findings if f.rule == "KC004")
+    assert "unclipped" in msg
+
+
+def test_kc004_fires_when_clip_escapes_block():
+    check = check_contract(_gather_contract((0, 1024)))   # extent is 1024
+    assert "KC004" in _error_rules(check)
+
+
+def test_kc004_clean_on_proper_clip():
+    check = check_contract(_gather_contract((0, 1023)))
+    assert "KC004" not in _rules(check)
+    assert check.feasible
+
+
+# ===========================================================================
+# KC006 — index-map arity / affineness
+# ===========================================================================
+
+
+def test_kc006_fires_on_arity_mismatch():
+    con = C.KernelContract(
+        kernel="synthetic", module="x", grid=(2, 2),
+        blocks=(C.BlockContract("a", "in", (256, 128), (128, 128), "int32",
+                                lambda i: (i, 0)),))
+    check = check_contract(con)
+    assert "KC006" in _error_rules(check)
+    assert not check.feasible
+
+
+def test_kc006_downgrades_when_enumeration_proves_coverage():
+    # reversal map: not the identity, but enumeration proves full coverage
+    con = C.KernelContract(
+        kernel="synthetic", module="x", grid=(4,),
+        blocks=(C.BlockContract("a", "in", (512,), (128,), "int32",
+                                lambda i: (3 - i,)),))
+    check = check_contract(con)
+    kc6 = [f for f in check.findings if f.rule == "KC006"]
+    assert kc6 and all(f.severity == "warning" for f in kc6)
+    assert "enumeration proved coverage" in kc6[0].message
+    assert check.feasible
+
+
+def test_kc006_enumeration_catches_real_hole():
+    # non-affine wrap map touching only blocks {0, 1, 2}: block 3 is a hole
+    con = C.KernelContract(
+        kernel="synthetic", module="x", grid=(4,),
+        blocks=(C.BlockContract("a", "in", (512,), (128,), "int32",
+                                lambda i: ((i * 2) % 3,)),))
+    check = check_contract(con)
+    assert "KC002" in _error_rules(check)
+    assert "KC006" in _error_rules(check)
+
+
+def test_kc006_enumeration_cap():
+    big = ENUM_GRID_CAP + 1
+    con = C.KernelContract(
+        kernel="synthetic", module="x", grid=(big,),
+        blocks=(C.BlockContract("a", "in", (big * 2,), (2,), "int32",
+                                lambda i: (i % 7,)),))
+    check = check_contract(con)
+    assert "KC002" in _error_rules(check)
+    assert any("too large to enumerate" in f.message
+               for f in check.findings)
+
+
+# ===========================================================================
+# reference registry + KC005 AST gate
+# ===========================================================================
+
+
+def test_reference_registry_is_clean():
+    for name in C.registered_kernels():
+        check = check_contract(C.REGISTRY[name].reference_contract())
+        assert check.feasible, (name, check.errors)
+
+
+def test_kc005_fires_on_unregistered_wrapper():
+    src = ("from jax.experimental import pallas as pl\n"
+           "def brand_new_pallas(x):\n"
+           "    return pl.pallas_call(None, grid=(1,))(x)\n")
+    errors, _ = run_gate({"src/repro/kernels/newkern.py": src})
+    kc5 = [f for f in errors if f.rule == "KC005"]
+    assert len(kc5) == 1
+    assert kc5[0].path == "src/repro/kernels/newkern.py"
+    assert "brand_new_pallas" in kc5[0].message
+
+
+def test_kc005_ignores_non_kernel_paths_and_registered_names():
+    src = ("from jax.experimental import pallas as pl\n"
+           "def bottomup_pallas(x):\n"
+           "    return pl.pallas_call(None, grid=(1,))(x)\n")
+    errors, _ = run_gate({
+        "src/repro/kernels/bu2.py": src,                  # registered name
+        "src/repro/engine/elsewhere.py":                  # not kernels/
+            src.replace("bottomup_pallas", "other_pallas"),
+    })
+    assert [f for f in errors if f.rule == "KC005"] == []
+
+
+def test_run_gate_on_real_tree_is_clean():
+    from repro.analysis.kernel_contracts import gate_paths
+    errors, warnings = gate_paths([SRC], root=REPO)
+    assert errors == []
+    # the decode reference's g=4 tiling lints are the expected punch list
+    assert all(f.rule == "KC003" for f in warnings)
+
+
+# ===========================================================================
+# plan reports (goldens)
+# ===========================================================================
+
+
+def test_scale16_default_plan_fits_default_budget():
+    rep = contract_report(dict(td_chunk=4096, bu_chunk=512, bu_slab=32),
+                          GraphShape(2 ** 16, 2 ** 20, 2048))
+    assert rep.feasible, rep.summary()
+    assert 0 < rep.total_bytes <= vmem.DEFAULT_VMEM_BUDGET
+
+
+def test_scale22_single_device_plan_is_flagged():
+    rep = contract_report(dict(td_chunk=4096, bu_chunk=512, bu_slab=32),
+                          GraphShape(2 ** 22, 2 ** 26, 2 ** 15))
+    assert not rep.feasible
+    assert "KC001" in _error_rules(rep)
+    assert "OVER BUDGET" in rep.summary()
+
+
+def test_scale22_sharded_tuned_plan_fits():
+    rep = contract_report(dict(td_chunk=4096, bu_chunk=8, bu_slab=32),
+                          GraphShape(2 ** 22, 2 ** 26, 2 ** 15), n_parts=16)
+    assert rep.feasible, rep.summary()
+
+
+def test_default_plans_verdicts():
+    reports = default_plan_reports()
+    assert set(reports) == {name for name, _, _, _ in DEFAULT_PLANS}
+    assert reports["scale16-default"]["feasible"] is True
+    assert reports["scale22-single-device"]["feasible"] is False
+    assert reports["scale22-sharded16-tuned"]["feasible"] is True
+    json.dumps(reports)   # artifact must be JSON-serializable
+
+
+def test_report_accepts_config_objects_and_key_tuples():
+    from repro.core.bfs import BFSConfig
+    from repro.core.hybrid_bfs import HybridConfig
+    shape = GraphShape(2 ** 14, 2 ** 18, 512)
+    cfg = BFSConfig(td_chunk=2048, bu_chunk=256)
+    direct = contract_report(cfg, shape)
+    hybrid = contract_report(HybridConfig(bfs=cfg), shape)
+    keyed = contract_report(("fused", HybridConfig(bfs=cfg), 1), shape)
+    assert direct.to_json() == hybrid.to_json() == keyed.to_json()
+    cohort = contract_report(("cohort", HybridConfig(bfs=cfg), 8, "x"), shape)
+    assert "batch=8" in cohort.plan
+    sharded = contract_report(("sharded", HybridConfig(bfs=cfg), 4, "s", 0.5),
+                              shape)
+    assert "n_parts=4" in sharded.plan
+
+
+def test_report_stable_across_interpret_modes():
+    from repro.runtime.config import runtime_scope
+    shape = GraphShape(2 ** 16, 2 ** 20, 2048)
+    knobs = dict(td_chunk=4096, bu_chunk=512, bu_slab=32)
+    with runtime_scope(interpret="on"):
+        on = contract_report(knobs, shape).to_json()
+    with runtime_scope(interpret="off"):
+        off = contract_report(knobs, shape).to_json()
+    assert on == off
+
+
+# ===========================================================================
+# CLI gate
+# ===========================================================================
+
+
+def test_cli_kernel_contracts_clean_on_tree():
+    from repro.analysis.cli import main
+    assert main([SRC, "--root", REPO, "--kernel-contracts"]) == 0
+
+
+def test_cli_list_rules_includes_kc(capsys):
+    from repro.analysis.cli import main
+    assert main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rid in KC_RULES:
+        assert rid in out
+
+
+def test_cli_json_schema_has_kernel_contracts(capsys):
+    from repro.analysis.cli import main
+    rc = main([SRC, "--root", REPO, "--kernel-contracts", "--json"])
+    payload = json.loads(capsys.readouterr().out)
+    assert rc == 0
+    kc = payload["kernel_contracts"]
+    assert kc["errors"] == []
+    assert all(w["rule"] == "KC003" for w in kc["warnings"])
+
+
+def test_cli_contract_report_artifact(tmp_path, capsys):
+    from repro.analysis.cli import main
+    out = tmp_path / "contract-report.json"
+    rc = main([SRC, "--root", REPO, "--contract-report-out", str(out)])
+    capsys.readouterr()
+    assert rc == 0
+    reports = json.loads(out.read_text())
+    assert reports["scale16-default"]["feasible"] is True
+    assert reports["scale22-single-device"]["feasible"] is False
+
+
+def test_cli_flags_injected_unregistered_kernel(tmp_path):
+    bad = tmp_path / "src" / "repro" / "kernels" / "sneaky.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("from jax.experimental import pallas as pl\n"
+                   "def sneaky_pallas(x):\n"
+                   "    return pl.pallas_call(None, grid=(1,))(x)\n")
+    from repro.analysis.cli import main
+    assert main([str(bad), "--root", str(tmp_path), "--kernel-contracts",
+                 "--no-bytecode-guard"]) == 1
+
+
+# ===========================================================================
+# typed wrapper errors + padding regressions (jax path)
+# ===========================================================================
+
+
+def test_pallas_wrappers_raise_typed_error_on_nondivisible():
+    import jax.numpy as jnp
+    from repro.kernels import bottomup as BU
+    from repro.kernels import frontier_fused as FF
+    from repro.kernels import topdown as TD
+    deg = jnp.zeros(130, jnp.int32)
+    nbrs = jnp.zeros((130, 32), jnp.int32)
+    v = jnp.zeros(256, jnp.uint8)
+    with pytest.raises(C.GridCoverageError, match="rows=130.*drop the.*last"):
+        BU.bottomup_pallas(deg, nbrs, v, rblk=128, interpret=True)
+    with pytest.raises(C.GridCoverageError, match="kernels.ops.topdown"):
+        TD.topdown_pallas(deg, nbrs, v, cblk=128, interpret=True)
+    with pytest.raises(C.GridCoverageError, match="V=100"):
+        FF.frontier_fused_pallas(jnp.zeros(100, jnp.uint8),
+                                 jnp.zeros(100, jnp.int32),
+                                 blk_words=8, interpret=True)
+    assert issubclass(C.GridCoverageError, ValueError)
+
+
+def test_ops_pad_nondivisible_rows_correctly():
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    r, w, v = 130, 32, 256            # r is not a multiple of any rblk tier
+    rng = np.random.default_rng(0)
+    deg = jnp.asarray(rng.integers(1, w, size=r), jnp.int32)
+    nbrs = jnp.asarray(rng.integers(0, v, size=(r, w)), jnp.int32)
+    frontier = jnp.zeros(v, jnp.uint8).at[7].set(1)
+    found, parent = ops.bottomup(deg, nbrs, frontier, interpret=True)
+    assert found.shape == (r,) and parent.shape == (r,)
+    # oracle: row i is found iff one of its first deg[i] slots holds vertex 7
+    nb, dg = np.asarray(nbrs), np.asarray(deg)
+    cols = np.arange(w)[None, :]
+    want = ((nb == 7) & (cols < dg[:, None])).any(axis=1)
+    assert np.array_equal(np.asarray(found) > 0, want)
+
+
+def test_ops_bottomup_budget_error_points_at_sharded_fallback():
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.runtime.config import runtime_scope
+    r, w, v = 8, 32, 1031             # distinct V: jit must trace fresh
+    deg = jnp.ones(r, jnp.int32)
+    nbrs = jnp.zeros((r, w), jnp.int32)
+    frontier = jnp.zeros(v, jnp.uint8)
+    with runtime_scope(vmem_budget_bytes=1000):
+        with pytest.raises(C.KernelBudgetError) as ei:
+            ops.bottomup(deg, nbrs, frontier, interpret=True)
+    assert "sharded" in str(ei.value)
+    assert "REPRO_VMEM_BUDGET" in str(ei.value)
+    # same shape fits once the budget is back at the default
+    found, _ = ops.bottomup(deg, nbrs, frontier, interpret=True)
+    assert found.shape == (r,)
+
+
+def test_ops_bottomup_batch_budget_is_per_lane():
+    import jax.numpy as jnp
+    from repro.kernels import ops
+    from repro.runtime.config import runtime_scope
+    b, r, w, v = 4, 8, 32, 1033
+    deg = jnp.ones((b, r), jnp.int32)
+    nbrs = jnp.zeros((r, w), jnp.int32)
+    with runtime_scope(vmem_budget_bytes=1000):
+        with pytest.raises(C.KernelBudgetError):
+            ops.bottomup_batch(deg, nbrs, jnp.zeros((b, v), jnp.uint8),
+                               interpret=True)
+    with runtime_scope(vmem_budget_bytes=2048):
+        # per-lane V (1033 B) fits 2048 B even though B*V would not
+        found, _ = ops.bottomup_batch(deg, nbrs,
+                                      jnp.zeros((b, v), jnp.uint8),
+                                      interpret=True)
+        assert found.shape == (b, r)
+
+
+# ===========================================================================
+# session gate
+# ===========================================================================
+
+
+def _strict_runtime(strict, budget):
+    from repro.runtime.config import RuntimeConfig
+    return RuntimeConfig.resolve(strict_contracts=strict,
+                                 vmem_budget_bytes=budget,
+                                 kernel_backend="on", prewarm=False)
+
+
+def test_session_gate_warns_on_infeasible_plan(small_graph):
+    from repro.engine.session import GraphSession
+    from repro.core.bfs import BFSConfig
+    s = GraphSession(small_graph, runtime=_strict_runtime(False, 4096),
+                     prewarm=False)
+    key = ("fused", BFSConfig(backend_kernels=True), 1)
+    with pytest.warns(C.KernelContractWarning, match="KC001"):
+        s.executable(key, lambda: (lambda x: x), persist=False)
+    # memoized: the second lookup is a plain cache hit, no second warning
+    with warnings_mod.catch_warnings():
+        warnings_mod.simplefilter("error")
+        s.executable(key, lambda: (lambda x: x), persist=False)
+
+
+def test_session_gate_strict_refuses_and_refuses_again(small_graph):
+    from repro.engine.session import GraphSession
+    from repro.core.bfs import BFSConfig
+    s = GraphSession(small_graph, runtime=_strict_runtime(True, 4096),
+                     prewarm=False)
+    key = ("fused", BFSConfig(backend_kernels=True), 1)
+    for _ in range(2):               # a strict retry must refuse again
+        with pytest.raises(C.KernelBudgetError, match="KC001"):
+            s.executable(key, lambda: (lambda x: x), persist=False)
+    assert key not in s._executables
+
+
+def test_session_gate_skips_disabled_kernel_path(small_graph):
+    from repro.engine.session import GraphSession
+    from repro.core.bfs import BFSConfig
+    from repro.runtime.config import RuntimeConfig
+    rt = RuntimeConfig.resolve(vmem_budget_bytes=4096, kernel_backend="off",
+                               prewarm=False)
+    s = GraphSession(small_graph, runtime=rt, prewarm=False)
+    key = ("fused", BFSConfig(), 1)   # backend_kernels=None -> runtime "off"
+    with warnings_mod.catch_warnings():
+        warnings_mod.simplefilter("error")
+        s.executable(key, lambda: (lambda x: x), persist=False)
+
+
+def test_session_gate_feasible_plan_is_silent(small_graph):
+    from repro.engine.session import GraphSession
+    from repro.core.bfs import BFSConfig
+    s = GraphSession(small_graph, runtime=_strict_runtime(True, None),
+                     prewarm=False)
+    key = ("fused", BFSConfig(backend_kernels=True), 1)
+    with warnings_mod.catch_warnings():
+        warnings_mod.simplefilter("error")
+        s.executable(key, lambda: (lambda x: x), persist=False)
+
+
+# ===========================================================================
+# RuntimeConfig plumbing
+# ===========================================================================
+
+
+def test_runtime_config_vmem_env(monkeypatch):
+    from repro.runtime.config import RuntimeConfig
+    monkeypatch.setenv("REPRO_VMEM_BUDGET", "8MB")
+    monkeypatch.setenv("REPRO_STRICT_CONTRACTS", "1")
+    cfg = RuntimeConfig.resolve()
+    assert cfg.vmem_budget_bytes == 8 * 1024 * 1024
+    assert cfg.strict_contracts is True
+    assert RuntimeConfig.resolve(vmem_budget_bytes=123).vmem_budget_bytes \
+        == 123
+
+
+def test_runtime_config_rejects_nonpositive_budget():
+    from repro.runtime.config import RuntimeConfig
+    with pytest.raises(ValueError):
+        RuntimeConfig.resolve(vmem_budget_bytes=0)
+
+
+def test_runtime_config_default_budget():
+    from repro.runtime.config import RuntimeConfig
+    assert RuntimeConfig.resolve().vmem_budget_bytes \
+        == vmem.DEFAULT_VMEM_BUDGET
+    assert RuntimeConfig.resolve().strict_contracts is False
+
+
+# ===========================================================================
+# hillclimb store (schema v2 + static pruning bookkeeping)
+# ===========================================================================
+
+
+def test_measurement_store_v2_roundtrip(tmp_path):
+    from benchmarks.bfs_hillclimb import MeasurementStore
+    s = MeasurementStore(str(tmp_path), "fp", 4, 5)
+    good, bad = {"bu_chunk": 512}, {"bu_chunk": 4096}
+    s.put(good, 1e6)
+    s.put_infeasible(bad)
+    assert s.get(good) == 1e6 and s.feasible(good) is True
+    assert s.get(bad) is None and s.feasible(bad) is False
+    assert s.feasible({"bu_chunk": 1}) is None
+    assert s.pruned_static == 1
+    assert s.best() == (good, 1e6)
+    # reload round-trips verdicts
+    s2 = MeasurementStore(str(tmp_path), "fp", 4, 5)
+    assert s2.feasible(bad) is False and s2.get(good) == 1e6
+
+
+def test_measurement_store_upgrades_legacy_floats(tmp_path):
+    from benchmarks.bfs_hillclimb import MeasurementStore
+    d = tmp_path / "hillclimb"
+    d.mkdir()
+    key = json.dumps({"bu_chunk": 512}, sort_keys=True)
+    (d / "fp-p4-r5.json").write_text(json.dumps({"points": {key: 2.5e6}}))
+    s = MeasurementStore(str(tmp_path), "fp", 4, 5)
+    assert s.get({"bu_chunk": 512}) == 2.5e6
+    assert s.feasible({"bu_chunk": 512}) is True
+    assert s.pruned_static == 0
