@@ -208,13 +208,16 @@ def main(argv=None):
 
     base = dict(strategy="specialized", hub_frac=0.5, exchange="psum",
                 coordinator="hub", heuristic="paper", bu_slab=32,
-                td_chunk=4096, bu_chunk=512, fixed_bu=3)
+                td_chunk=4096, bu_chunk=512, fixed_bu=3,
+                hub_split=0, hub_deg=256, hub_slab=256)
 
     def cfg_of(d):
         return HybridConfig(
             bfs=BFSConfig(heuristic=d["heuristic"], bu_slab=d["bu_slab"],
                           td_chunk=d["td_chunk"], bu_chunk=d["bu_chunk"],
-                          fixed_bu_steps=d["fixed_bu"]),
+                          fixed_bu_steps=d["fixed_bu"],
+                          hub_split=bool(d["hub_split"]),
+                          hub_deg=d["hub_deg"], hub_slab=d["hub_slab"]),
             exchange=d["exchange"], coordinator=d["coordinator"])
 
     results = {}
@@ -242,6 +245,13 @@ def main(argv=None):
         ("heuristic", ["beamer"]),
         ("fixed_bu", [2, 5]),
         ("coordinator", ["global"]),
+        # Heterogeneous split: turn it on at the seeded hub_deg first, then
+        # sweep the threshold around whichever split point won. Infeasible
+        # hub-kernel configs are pruned by the contract verifier above like
+        # any other point (and persist as static_feasible=false on resume).
+        ("hub_split", [1]),
+        ("hub_deg", [64, 512, 2048]),
+        ("hub_slab", [512]),
     ]
     if args.smoke:
         sweeps = [("bu_chunk", [256, 1024, 2048])]

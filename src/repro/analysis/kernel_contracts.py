@@ -368,7 +368,8 @@ def _coerce_graph_shape(shape) -> GraphShape:
                       max_degree=int(d))
 
 
-_KNOB_DEFAULTS = dict(td_chunk=4096, bu_chunk=512, bu_slab=32)
+_KNOB_DEFAULTS = dict(td_chunk=4096, bu_chunk=512, bu_slab=32,
+                      hub_split=0, hub_deg=256, hub_slab=256)
 
 
 def _extract_plan(plan_key) -> Tuple[Dict[str, int], int, int]:
@@ -442,23 +443,44 @@ def plan_contracts(knobs: Dict[str, int], shape: GraphShape, *,
     if n_parts > 1:
         v = C._ceil_to(_ceil_div(v, n_parts), vmem.LANE)
     v = max(v, 1)
+    hub_split = int(knobs.get("hub_split", 0))
+    w_hub = (C.hub_width(int(knobs.get("hub_deg", 256)), base, growth)
+             if hub_split else None)
     contracts: List[C.KernelContract] = []
     for w in C.width_ladder(shape.max_degree, base, growth):
-        slab = max(min(int(knobs["bu_slab"]), w), 1)
-        r = max(min(int(knobs["bu_chunk"]), v), 1)
-        rblk = min(r, C._ceil_to(r, 8))
-        r_pad = C._ceil_to(r, rblk)
+        if hub_split and w >= w_hub:
+            # Hub side: the whole (few-row, very-wide) bucket dispatches to
+            # the dense hub kernel in one call, rblk pinned to the sublane
+            # minimum. The static row bound comes from the degree floor: a
+            # row in a width-w bucket has > w/growth edges, so at most
+            # 2E*growth/w rows exist (2E directed endpoints).
+            r_h = max(min(2 * shape.num_edges * growth // max(w, 1), v), 1)
+            r_pad = C._ceil_to(r_h, 8)
+            if batch > 1:
+                contracts.append(C.hub_bottomup_batch_contract(
+                    batch, r_pad, w, v, rblk=8))
+            else:
+                contracts.append(C.hub_bottomup_contract(r_pad, w, v, rblk=8))
+        else:
+            slab = max(min(int(knobs["bu_slab"]), w), 1)
+            r = max(min(int(knobs["bu_chunk"]), v), 1)
+            rblk = min(r, C._ceil_to(r, 8))
+            r_pad = C._ceil_to(r, rblk)
+            if batch > 1:
+                contracts.append(C.bottomup_batch_contract(
+                    batch, r_pad, w, v, slab=slab, rblk=rblk))
+            else:
+                contracts.append(C.bottomup_contract(r_pad, w, v, slab=slab,
+                                                     rblk=rblk))
+        # Pushes are side-agnostic (hub pushes are dst-masked through the
+        # same top-down kernel), so the top-down contract rides every bucket.
         cblk = max(8, min(int(knobs["td_chunk"]) // max(w, 1), 128))
         c_pad = C._ceil_to(max(min(_ceil_div(int(knobs["td_chunk"]), w), v),
                                1), cblk)
         if batch > 1:
-            contracts.append(C.bottomup_batch_contract(
-                batch, r_pad, w, v, slab=slab, rblk=rblk))
             contracts.append(C.topdown_batch_contract(
                 batch, c_pad, w, v, cblk=cblk))
         else:
-            contracts.append(C.bottomup_contract(r_pad, w, v, slab=slab,
-                                                 rblk=rblk))
             contracts.append(C.topdown_contract(c_pad, w, v, cblk=cblk))
     blk_words = min(256, C._ceil_to(_ceil_div(v, 32), 8))
     v_ff = C._ceil_to(v, blk_words * 32)
@@ -541,6 +563,9 @@ def contract_report(plan_key, graph_shape, *,
     plan_desc = (f"td_chunk={knobs['td_chunk']} bu_chunk={knobs['bu_chunk']} "
                  f"bu_slab={knobs['bu_slab']} batch={batch} "
                  f"n_parts={n_parts}")
+    if int(knobs.get("hub_split", 0)):
+        plan_desc += (f" hub_split=1 hub_deg={knobs['hub_deg']} "
+                      f"hub_slab={knobs['hub_slab']}")
     return KernelContractReport(plan=plan_desc, graph=shape,
                                 budget_bytes=budget, checks=checks)
 
@@ -566,6 +591,17 @@ DEFAULT_PLANS = (
      dict(td_chunk=4096, bu_chunk=8, bu_slab=32),
      GraphShape(num_vertices=2 ** 22, num_edges=2 ** 26, max_degree=2 ** 15),
      dict(n_parts=16)),
+    # The heterogeneous split rescues scale 22 on ONE device: the wide
+    # buckets that blow the generic kernel's budget (bu_chunk rows x full
+    # hub width, double-buffered) dispatch to the hub kernel instead, whose
+    # 8-row dense tile is 2 x 8 x 32768 x 4 B = 2 MiB — the contract-level
+    # proof that the hub tile fits VMEM where the generic bottom-up tile
+    # does not (same knobs otherwise as the infeasible entry above).
+    ("scale22-hub-split",
+     dict(td_chunk=4096, bu_chunk=512, bu_slab=32,
+          hub_split=1, hub_deg=2048, hub_slab=256),
+     GraphShape(num_vertices=2 ** 22, num_edges=2 ** 26, max_degree=2 ** 15),
+     dict()),
 )
 
 

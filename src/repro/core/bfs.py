@@ -67,6 +67,24 @@ class BFSConfig:
     bu_chunk: int = 512           # rows per bottom-up chunk
     bu_slab: int = 32             # neighbour slots per bottom-up slab
     max_levels: int = 0           # 0 = num_vertices (safe upper bound)
+    # Heterogeneous hub/tail dispatch (API.md §Heterogeneous dispatch).
+    # When `hub_split` is on, every cohort level is executed as two sides:
+    # the hub side (rows with degree above the `hub_deg` threshold, snapped
+    # to the ELL bucket ladder) and the tail side (the low-degree mass,
+    # excluding degree-0 rows, which can never pull). Each side carries its
+    # own direction decision per level: the paper heuristic's threshold is a
+    # static fraction of ALL edges, so its sides always agree (the split is
+    # then a pure execution reorganization — bitwise-identical results,
+    # bounded tail slab scans, a wide dense pass for the few hub rows);
+    # beamer's pull-cost input `mu` is side-local, so the hub side flips
+    # bottom-up as soon as its own unvisited edge mass collapses — the
+    # paper's asymmetric switch inside one query. Split dispatch lives in
+    # the batched cohort path (the engine routes ALL fused traffic through
+    # it, single roots as B=1 cohorts); the one-shot `search_state` ignores
+    # `hub_split`.
+    hub_split: bool = False       # enable hub/tail split per-level dispatch
+    hub_deg: int = 256            # hub threshold (snapped to bucket ladder)
+    hub_slab: int = 256           # neighbour slots per hub-side pull slab
     # Pallas kernel path over ELL tiles. None = auto: real Mosaic lowering on
     # TPU backends, XLA reference path elsewhere (where kernels would run
     # under the interpreter). Explicit True forces the kernel path anywhere
@@ -168,13 +186,19 @@ def init_state(dg: DeviceGraph, root) -> BFSState:
 
 # ---------------------------------------------------------------- top-down --
 
-def _top_down_step(dg: DeviceGraph, cfg: BFSConfig, frontier, visited, parent):
+def _top_down_step(dg: DeviceGraph, cfg: BFSConfig, frontier, visited, parent,
+                   dst_mask=None):
     """One push level: work ~ frontier edge mass, chunked.
 
     Takes the flat (frontier, visited, parent) triple rather than a
     `BFSState` so the batched cohort path can `vmap` it per lane with a
     masked frontier — a lane whose frontier is zeroed contributes zero edge
     slots and therefore zero chunk iterations to the batched while-loop.
+
+    `dst_mask` (bool[V] or None) restricts which DESTINATIONS this pass may
+    discover — the heterogeneous split's side filter. The scatter-min parent
+    merge is commutative, so side-masked passes union to exactly the
+    unmasked pass's result whenever both sides push.
     """
     v = dg.num_vertices
     c = cfg.td_chunk
@@ -196,6 +220,8 @@ def _top_down_step(dg: DeviceGraph, cfg: BFSConfig, frontier, visited, parent):
         eidx = jnp.clip(eidx, 0, max(dg.num_directed_edges - 1, 0))
         dst = jnp.where(valid, dg.indices[eidx], 0)
         fresh = valid & (visited[dst] == 0)
+        if dst_mask is not None:
+            fresh = fresh & dst_mask[dst]
         next_flags = next_flags.at[dst].max(fresh.astype(jnp.uint8))
         pcand = pcand.at[dst].min(jnp.where(fresh, src, INT_MAX))
         return base + c, next_flags, pcand
@@ -212,15 +238,23 @@ def _top_down_step(dg: DeviceGraph, cfg: BFSConfig, frontier, visited, parent):
 # --------------------------------------------------------------- bottom-up --
 
 def _bottom_up_step(dg: DeviceGraph, cfg: BFSConfig, frontier, visited,
-                    parent_in, row_mask=None):
+                    parent_in, row_mask=None, chunk=None, slab=None):
     """One pull level: row chunks x adjacency slabs with block early exit.
 
     `row_mask` (scalar/broadcastable bool, cohort membership under `vmap`)
     masks the unvisited scan: a masked-out lane compacts an empty row queue
-    and contributes zero chunk iterations — no pull work at all.
+    and contributes zero chunk iterations — no pull work at all. The
+    heterogeneous split passes a per-vertex side mask here, plus side-tuned
+    `chunk`/`slab` overrides (defaults: `cfg.bu_chunk`/`cfg.bu_slab`): the
+    per-row first-hit parent is invariant under chunk grouping and slab
+    width (first hit == lowest adjacency slot regardless of how slots are
+    grouped), so any side partition of the rows produces bitwise-identical
+    flags and parents to one unsplit pass — splitting only changes how many
+    slab iterations a chunk's widest row can force on its neighbours.
     """
     v = dg.num_vertices
-    r, w = min(cfg.bu_chunk, dg.num_vertices), cfg.bu_slab
+    r = min(chunk or cfg.bu_chunk, dg.num_vertices)
+    w = slab or cfg.bu_slab
     unvisited = (visited == 0).astype(jnp.uint8)
     if row_mask is not None:
         unvisited = unvisited * row_mask.astype(jnp.uint8)
@@ -457,6 +491,14 @@ class BatchState:
     a finished or pad lane is in no cohort and does no traversal work.
     `used_td`/`used_bu` record the cohort sizes of the step that produced
     this state (the per-level direction-split observability hook).
+
+    Under `hub_split`, every lane carries TWO direction tracks: `bu_mode`/
+    `bu_steps`/`mu` describe the TAIL side and `bu_hub`/`bu_steps_hub`/
+    `mu_hub` the hub side (per-side frontier stats in `nf_hub`/`mf_hub`);
+    `used_*_hub` record the hub-side cohort sizes of the last step. With
+    the split off, the hub track mirrors the tail track (`bu_hub ==
+    bu_mode`) and the side stats stay zero, so side-aware consumers
+    degenerate to the unsplit schema.
     """
     visited: jax.Array    # uint8[B, V]
     frontier: jax.Array   # uint8[B, V]
@@ -464,18 +506,27 @@ class BatchState:
     level: jax.Array      # int32[B, V], INT_MAX = undiscovered
     cur_level: jax.Array  # int32 scalar: shared level counter (synchronous)
     active: jax.Array     # bool[B]: lane still traversing
-    bu_mode: jax.Array    # bool[B]: NEXT step's direction per lane
-    bu_steps: jax.Array   # int32[B]: bottom-up rounds taken per lane
-    mu: jax.Array         # int32[B]: unvisited edge mass per lane
+    bu_mode: jax.Array    # bool[B]: NEXT step's tail-side direction per lane
+    bu_steps: jax.Array   # int32[B]: tail-side bottom-up rounds per lane
+    mu: jax.Array         # int32[B]: unvisited edge mass per lane (all rows)
     nf: jax.Array         # int32[B]: frontier vertex count per lane
     mf: jax.Array         # int32[B]: frontier edge mass per lane
-    used_td: jax.Array    # int32 scalar: top-down cohort size of LAST step
-    used_bu: jax.Array    # int32 scalar: bottom-up cohort size of LAST step
+    used_td: jax.Array    # int32 scalar: tail top-down cohort of LAST step
+    used_bu: jax.Array    # int32 scalar: tail bottom-up cohort of LAST step
+    bu_hub: jax.Array       # bool[B]: NEXT step's hub-side direction
+    bu_steps_hub: jax.Array  # int32[B]: hub-side bottom-up rounds
+    mu_hub: jax.Array       # int32[B]: unvisited HUB edge mass (0 when off)
+    nf_hub: jax.Array       # int32[B]: hub-side frontier count (0 when off)
+    mf_hub: jax.Array       # int32[B]: hub-side frontier edge mass (0 = off)
+    used_td_hub: jax.Array  # int32 scalar: hub top-down cohort of LAST step
+    used_bu_hub: jax.Array  # int32 scalar: hub bottom-up cohort of LAST step
 
     def tree_flatten(self):
         return ((self.visited, self.frontier, self.parent, self.level,
                  self.cur_level, self.active, self.bu_mode, self.bu_steps,
-                 self.mu, self.nf, self.mf, self.used_td, self.used_bu), None)
+                 self.mu, self.nf, self.mf, self.used_td, self.used_bu,
+                 self.bu_hub, self.bu_steps_hub, self.mu_hub, self.nf_hub,
+                 self.mf_hub, self.used_td_hub, self.used_bu_hub), None)
 
     @classmethod
     def tree_unflatten(cls, aux, leaves):
@@ -508,15 +559,49 @@ def init_batch(dg: DeviceGraph, cfg: BFSConfig, roots, active) -> BatchState:
     mu = jnp.where(active, total_e - rdeg, 0)
     nf = jnp.where(active, 1, 0).astype(jnp.int32)
     mf = jnp.where(active, rdeg, 0)
-    bu, bu_steps = _decide_direction_batch(
-        dg, cfg, jnp.zeros(b, jnp.bool_), jnp.zeros(b, jnp.int32), mu, nf, mf)
+    off, zi = jnp.zeros(b, jnp.bool_), jnp.zeros(b, jnp.int32)
+    if cfg.hub_split:
+        hub_v = _hub_row_mask(dg, cfg)
+        e_hub = jnp.sum(jnp.where(hub_v, dg.deg_ext[:-1], 0), dtype=jnp.int32)
+        root_hub = active & hub_v[roots]
+        nf_hub = jnp.where(root_hub, 1, 0).astype(jnp.int32)
+        mf_hub = jnp.where(root_hub, rdeg, 0)
+        mu_hub = jnp.where(active, e_hub - mf_hub, 0)
+        bu, bu_steps = _decide_direction_batch(dg, cfg, off, zi,
+                                               mu - mu_hub, nf, mf)
+        bu_h, steps_h = _decide_direction_batch(dg, cfg, off, zi,
+                                                mu_hub, nf, mf)
+    else:
+        bu, bu_steps = _decide_direction_batch(dg, cfg, off, zi, mu, nf, mf)
+        bu_h, steps_h = bu, bu_steps
+        nf_hub = mf_hub = mu_hub = zi
     return BatchState(visited, visited, parent, level, jnp.int32(0), active,
-                      bu, bu_steps, mu, nf, mf, jnp.int32(0), jnp.int32(0))
+                      bu, bu_steps, mu, nf, mf, jnp.int32(0), jnp.int32(0),
+                      bu_h, steps_h, mu_hub, nf_hub, mf_hub,
+                      jnp.int32(0), jnp.int32(0))
+
+
+def _hub_row_mask(dg: DeviceGraph, cfg: BFSConfig):
+    """bool[V]: row belongs to the hub side (degree above the snapped floor).
+
+    The floor comes from `ell.hub_degree_floor`, so this elementwise
+    predicate selects exactly the rows the kernel path's hub ELL buckets
+    hold — both executions agree on side membership bitwise.
+    """
+    floor = ELL.hub_degree_floor(cfg.hub_deg)
+    return dg.deg_ext[:-1] > floor
 
 
 def _decide_direction_batch(dg: DeviceGraph, cfg: BFSConfig, bu_mode,
                             bu_steps, mu, nf, mf):
-    """Vectorized `_decide_direction`: per-lane next direction + bu counter."""
+    """Vectorized `_decide_direction`: per-lane next direction + bu counter.
+
+    Under `hub_split` this runs once per SIDE with that side's unvisited
+    edge mass as `mu` (the pull-cost input is the only side-local term):
+    the paper heuristic ignores `mu` — its threshold is a static fraction
+    of all edges — so its sides always agree, while beamer's hub side
+    flips bottom-up as soon as the hub edge mass collapses.
+    """
     v = dg.num_vertices
     e = dg.num_directed_edges
     if cfg.heuristic == "topdown":
@@ -536,27 +621,85 @@ def _decide_direction_batch(dg: DeviceGraph, cfg: BFSConfig, bu_mode,
 
 
 def _top_down_step_batch(dg: DeviceGraph, cfg: BFSConfig, frontier, visited,
-                         parent, mask):
+                         parent, mask, dst_mask=None):
     """XLA push over the top-down cohort: lanes outside `mask` get a zeroed
     frontier, so they contribute zero edge slots to the batched while-loop
-    (its trip count is the max edge mass over the COHORT, not the batch)."""
+    (its trip count is the max edge mass over the COHORT, not the batch).
+    `dst_mask` (bool[V], lane-invariant) is the split's side filter."""
     masked = frontier * mask[:, None].astype(frontier.dtype)
     return jax.vmap(
-        lambda f, vis, par: _top_down_step(dg, cfg, f, vis, par))(
+        lambda f, vis, par: _top_down_step(dg, cfg, f, vis, par, dst_mask))(
             masked, visited, parent)
 
 
 def _bottom_up_step_batch(dg: DeviceGraph, cfg: BFSConfig, frontier, visited,
-                          parent, mask):
+                          parent, mask, side=None, chunk=None, slab=None):
     """XLA pull over the bottom-up cohort: masked-out lanes compact an empty
-    row queue and contribute zero chunk iterations."""
+    row queue and contribute zero chunk iterations. `side` (bool[V],
+    lane-invariant) restricts the unvisited scan to one split side, with
+    side-tuned `chunk`/`slab` geometry."""
     return jax.vmap(
-        lambda f, vis, par, m: _bottom_up_step(dg, cfg, f, vis, par, m))(
+        lambda f, vis, par, m: _bottom_up_step(
+            dg, cfg, f, vis, par,
+            row_mask=(m & side) if side is not None else m,
+            chunk=chunk, slab=slab))(
             frontier, visited, parent, mask)
 
 
+def _hub_pull_batch(dg: DeviceGraph, cfg: BFSConfig, hub_rows, frontier,
+                    visited, parent, mask):
+    """Dense pull over the STATIC hub row set, vmapped across lanes.
+
+    Hub membership is a property of the graph (`deg > hub_degree_floor`),
+    not of the search, so the row list is a trace-time constant: the hub
+    pull needs no queue compaction (the tail pays one O(V) compact; the
+    hub none) and no chunked while-loop — one slab scan over all H rows,
+    H being hundreds even at scale 22 (a row in the hub needs > floor
+    edges, so H <= 2E/floor). Settled/masked rows carry degree 0 and the
+    data-dependent slab cond skips them; first-hit parents are bitwise
+    those of the generic chunked scan (same slot order, same argmax rule).
+    """
+    v = dg.num_vertices
+    h = hub_rows.shape[0]
+    w = min(cfg.hub_slab, max(int(dg.num_directed_edges), 1))
+    rptr = dg.indptr[hub_rows]
+    deg = dg.deg_ext[hub_rows]
+
+    def one_lane(f, vis, par, m):
+        rdeg = jnp.where((vis[hub_rows] == 0) & m, deg, 0)
+
+        def slab_cond(sc):
+            s, found, _ = sc
+            return jnp.any(~found & (rdeg > s * w))
+
+        def slab_body(sc):
+            s, found, par_ = sc
+            col = s * w + jnp.arange(w, dtype=jnp.int32)
+            nidx = rptr[:, None] + col[None, :]
+            nvalid = (col[None, :] < rdeg[:, None]) & ~found[:, None]
+            nidx = jnp.clip(nidx, 0, max(dg.num_directed_edges - 1, 0))
+            nbr = jnp.where(nvalid, dg.indices[nidx], 0)
+            hit = nvalid & (f[nbr] > 0)
+            anyhit = jnp.any(hit, axis=1)
+            first = jnp.argmax(hit, axis=1)
+            pcand = nbr[jnp.arange(h), first]
+            par_ = jnp.where(~found & anyhit, pcand, par_)
+            return s + 1, found | anyhit, par_
+
+        found0 = jnp.zeros(h, bool)
+        par0 = jnp.full(h, INT_MAX, jnp.int32)
+        _, found, par_h = jax.lax.while_loop(
+            slab_cond, slab_body, (jnp.int32(0), found0, par0))
+        flags = jnp.zeros(v, jnp.uint8).at[hub_rows].max(
+            found.astype(jnp.uint8))
+        return flags, par.at[hub_rows].min(jnp.where(found, par_h, INT_MAX))
+
+    return jax.vmap(one_lane)(frontier, visited, parent, mask)
+
+
 def _top_down_step_kernels_batch(dg: DeviceGraph, cfg: BFSConfig, ell,
-                                 frontier, visited, parent, mask):
+                                 frontier, visited, parent, mask,
+                                 dst_mask=None):
     """Kernel push over the top-down cohort: one `topdown_batch` invocation
     per ELL bucket serves every lane; masked lanes carry zero degrees and
     their tile blocks skip the visited-gather entirely."""
@@ -568,6 +711,8 @@ def _top_down_step_kernels_batch(dg: DeviceGraph, cfg: BFSConfig, ell,
         act_deg = jnp.where(act, deg[None, :], 0)
         fresh = K.topdown_batch(act_deg, nbrs, visited)      # uint8[B, R, W]
         dst = jnp.clip(nbrs, 0, v - 1)                       # lane-invariant
+        if dst_mask is not None:
+            fresh = fresh * dst_mask[dst][None].astype(fresh.dtype)
         next_flags = next_flags.at[:, dst].max(fresh)
         src = jnp.broadcast_to(rows[:, None], nbrs.shape)
         pcand = pcand.at[:, dst].min(
@@ -577,16 +722,24 @@ def _top_down_step_kernels_batch(dg: DeviceGraph, cfg: BFSConfig, ell,
 
 
 def _bottom_up_step_kernels_batch(dg: DeviceGraph, cfg: BFSConfig, ell,
-                                  frontier, visited, parent, mask):
+                                  frontier, visited, parent, mask,
+                                  hub_kernel=False):
     """Kernel pull over the bottom-up cohort: one `bottomup_batch` invocation
-    per ELL bucket; masked lanes exit after zero slabs."""
+    per ELL bucket; masked lanes exit after zero slabs. With `hub_kernel`,
+    the side's (wide, few-row) buckets dispatch to the hub-specialized
+    single-dense-pass kernel instead of the generic slab scan — same
+    first-hit parents (ELL preserves CSR slot order), no slab loop."""
     b, v = frontier.shape
     next_flags = jnp.zeros((b, v), jnp.uint8)
     for rows, deg, nbrs in ell:
         act = mask[:, None] & (visited[:, rows] == 0)
         act_deg = jnp.where(act, deg[None, :], 0)
-        found, par = K.bottomup_batch(act_deg, nbrs, frontier,
-                                      slab=min(cfg.bu_slab, nbrs.shape[1]))
+        if hub_kernel:
+            found, par = K.hub_bottomup_batch(act_deg, nbrs, frontier)
+        else:
+            found, par = K.bottomup_batch(act_deg, nbrs, frontier,
+                                          slab=min(cfg.bu_slab,
+                                                   nbrs.shape[1]))
         next_flags = next_flags.at[:, rows].max(found)
         parent = parent.at[:, rows].min(jnp.where(found > 0, par, INT_MAX))
     return next_flags, parent
@@ -601,47 +754,136 @@ def _advance_batch(dg: DeviceGraph, cfg: BFSConfig, ell, variant: str,
     driver dispatches "td" / "bu" when a level's batch is single-direction
     (the traced program then contains NO code for the other direction) and
     "mixed" when both cohorts are non-empty.
+
+    Under `hub_split`, "single-direction" means single over every
+    (lane, side) pair. "td" stays ONE unmasked push pass (both sides push:
+    bitwise-identical to the unsplit level, zero split overhead); "bu"
+    becomes two side-restricted pull passes — the tail's slab loop is
+    bounded by the snapped hub floor and its row queue drops the
+    zero-degree mass, while the few hub rows get a wide `hub_slab` scan —
+    which unions to exactly the unsplit pull's flags/parents (per-row
+    first hit is partition-invariant); "mixed" runs up to four side x
+    direction passes, each self-annihilating when its cohort is empty.
     """
-    bu = st.bu_mode
-    td_mask = st.active & ~bu
-    bu_mask = st.active & bu
+    i32 = jnp.int32
     use_kernels = kernels_enabled(cfg)
     b, v = st.frontier.shape
     next_flags = jnp.zeros((b, v), jnp.uint8)
     parent = st.parent
-    if variant in ("td", "mixed"):
+    bu_t, bu_h = st.bu_mode, st.bu_hub
+    td_t_mask = st.active & ~bu_t
+    bu_t_mask = st.active & bu_t
+    td_h_mask = st.active & ~bu_h
+    bu_h_mask = st.active & bu_h
+    if not cfg.hub_split:
+        if variant in ("td", "mixed"):
+            if use_kernels:
+                flags, parent = _top_down_step_kernels_batch(
+                    dg, cfg, ell, st.frontier, st.visited, parent, td_t_mask)
+            else:
+                flags, parent = _top_down_step_batch(
+                    dg, cfg, st.frontier, st.visited, parent, td_t_mask)
+            next_flags = jnp.maximum(next_flags, flags)
+        if variant in ("bu", "mixed"):
+            if use_kernels:
+                flags, parent = _bottom_up_step_kernels_batch(
+                    dg, cfg, ell, st.frontier, st.visited, parent, bu_t_mask)
+            else:
+                flags, parent = _bottom_up_step_batch(
+                    dg, cfg, st.frontier, st.visited, parent, bu_t_mask)
+            next_flags = jnp.maximum(next_flags, flags)
+    else:
+        hub_v = _hub_row_mask(dg, cfg)
+        tail_pull = ~hub_v & (dg.deg_ext[:-1] > 0)   # deg-0 rows never pull
+        # The hub row LIST is static (graph property, not search state):
+        # dg's arrays are trace-time constants here, so this host read
+        # happens once per executable build, like the ELL tile build.
+        hub_rows = jnp.asarray(np.flatnonzero(
+            np.asarray(dg.deg_ext)[:-1] > ELL.hub_degree_floor(cfg.hub_deg)
+        ).astype(np.int32))
         if use_kernels:
-            flags, parent = _top_down_step_kernels_batch(
-                dg, cfg, ell, st.frontier, st.visited, parent, td_mask)
+            ell_tail, ell_hub = ELL.split_tiles(ell, cfg.hub_deg)
+
+        def push(par, lane_mask, dst_mask):
+            if use_kernels:
+                return _top_down_step_kernels_batch(
+                    dg, cfg, ell, st.frontier, st.visited, par, lane_mask,
+                    dst_mask)
+            return _top_down_step_batch(
+                dg, cfg, st.frontier, st.visited, par, lane_mask, dst_mask)
+
+        def pull(par, lane_mask, hub_side):
+            if use_kernels:
+                return _bottom_up_step_kernels_batch(
+                    dg, cfg, ell_hub if hub_side else ell_tail, st.frontier,
+                    st.visited, par, lane_mask, hub_kernel=hub_side)
+            if hub_side:
+                if hub_rows.shape[0] == 0:
+                    return jnp.zeros_like(st.frontier), par
+                return _hub_pull_batch(dg, cfg, hub_rows, st.frontier,
+                                       st.visited, par, lane_mask)
+            # Tail-tuned chunking is the split's other XLA win: tail rows
+            # are degree-bounded by the snapped hub floor, so one wide row
+            # can no longer convoy a whole chunk through hundreds of slab
+            # iterations — the tail safely takes chunks 4x wider (fewer
+            # while-loop trips over the big unvisited queue). Chunk/slab
+            # regrouping never changes first-hit parents.
+            return _bottom_up_step_batch(
+                dg, cfg, st.frontier, st.visited, par, lane_mask,
+                side=tail_pull, chunk=4 * cfg.bu_chunk, slab=cfg.bu_slab)
+
+        if variant == "td":
+            # Both sides push: one unmasked pass covers hub + tail targets.
+            flags, parent = push(parent, td_t_mask, None)
+            next_flags = jnp.maximum(next_flags, flags)
         else:
-            flags, parent = _top_down_step_batch(
-                dg, cfg, st.frontier, st.visited, parent, td_mask)
-        next_flags = jnp.maximum(next_flags, flags)
-    if variant in ("bu", "mixed"):
-        if use_kernels:
-            flags, parent = _bottom_up_step_kernels_batch(
-                dg, cfg, ell, st.frontier, st.visited, parent, bu_mask)
-        else:
-            flags, parent = _bottom_up_step_batch(
-                dg, cfg, st.frontier, st.visited, parent, bu_mask)
-        next_flags = jnp.maximum(next_flags, flags)
+            if variant == "mixed":
+                flags, parent = push(parent, td_t_mask, ~hub_v)
+                next_flags = jnp.maximum(next_flags, flags)
+                flags, parent = push(parent, td_h_mask, hub_v)
+                next_flags = jnp.maximum(next_flags, flags)
+            flags, parent = pull(parent, bu_t_mask, False)
+            next_flags = jnp.maximum(next_flags, flags)
+            flags, parent = pull(parent, bu_h_mask, True)
+            next_flags = jnp.maximum(next_flags, flags)
     if use_kernels:
         _, nf, mf = K.frontier_fused_batch(next_flags, dg.deg_ext[:-1])
     else:
-        nf = jnp.sum(next_flags, axis=1, dtype=jnp.int32)
+        nf = jnp.sum(next_flags, axis=1, dtype=i32)
         mf = jnp.sum(jnp.where(next_flags > 0, dg.deg_ext[:-1][None, :], 0),
-                     axis=1, dtype=jnp.int32)
+                     axis=1, dtype=i32)
     cur = st.cur_level + 1
     visited = jnp.maximum(st.visited, next_flags)
     level = jnp.where(next_flags > 0, cur, st.level)
     mu = st.mu - mf
     max_levels = cfg.max_levels or dg.num_vertices
     active = st.active & (nf > 0) & (cur < max_levels)
-    bu2, steps2 = _decide_direction_batch(dg, cfg, bu, st.bu_steps, mu, nf, mf)
+    if cfg.hub_split:
+        hub_row = _hub_row_mask(dg, cfg)[None, :]
+        nf_hub = jnp.sum(next_flags * hub_row.astype(jnp.uint8),
+                         axis=1, dtype=i32)
+        mf_hub = jnp.sum(jnp.where((next_flags > 0) & hub_row,
+                                   dg.deg_ext[:-1][None, :], 0),
+                         axis=1, dtype=i32)
+        mu_hub = st.mu_hub - mf_hub
+        bu2, steps2 = _decide_direction_batch(dg, cfg, bu_t, st.bu_steps,
+                                              mu - mu_hub, nf, mf)
+        bu_h2, steps_h2 = _decide_direction_batch(
+            dg, cfg, bu_h, st.bu_steps_hub, mu_hub, nf, mf)
+    else:
+        bu2, steps2 = _decide_direction_batch(dg, cfg, bu_t, st.bu_steps,
+                                              mu, nf, mf)
+        bu_h2, steps_h2 = bu2, steps2
+        nf_hub = mf_hub = mu_hub = jnp.zeros(b, i32)
     return BatchState(visited, next_flags, parent, level, cur, active,
                       bu2, steps2, mu, nf, mf,
-                      jnp.sum(td_mask.astype(jnp.int32)),
-                      jnp.sum(bu_mask.astype(jnp.int32)))
+                      jnp.sum(td_t_mask.astype(i32)),
+                      jnp.sum(bu_t_mask.astype(i32)),
+                      bu_h2, steps_h2, mu_hub, nf_hub, mf_hub,
+                      jnp.sum(td_h_mask.astype(i32)) if cfg.hub_split
+                      else jnp.int32(0),
+                      jnp.sum(bu_h_mask.astype(i32)) if cfg.hub_split
+                      else jnp.int32(0))
 
 
 def reachable_variants(cfg: BFSConfig) -> tuple[str, ...]:
@@ -682,6 +924,13 @@ def batch_scalars(st: BatchState) -> dict:
     `jax.device_get`-able dict. `nf`/`mf` count ACTIVE lanes only, so the
     driver's `nf > 0` loop condition terminates when every lane finished
     even if finished lanes still hold a non-empty final frontier.
+
+    Direction-occupancy keys are SIDE-AWARE: `td_next`/`bu_next` count
+    active lanes with ANY side in that direction (under `hub_split` a lane
+    can be in both when its sides disagree; with the split off `bu_hub`
+    mirrors `bu_mode` and the counts collapse to the unsplit schema), and
+    the `*_hub` keys expose the hub side's cohort sizes and frontier mass
+    for the per-level occupancy rows.
     """
     act = st.active
     i32 = jnp.int32
@@ -689,15 +938,21 @@ def batch_scalars(st: BatchState) -> dict:
         nf=jnp.sum(jnp.where(act, st.nf, 0), dtype=i32),
         mf=jnp.sum(jnp.where(act, st.mf, 0), dtype=i32),
         cur=st.cur_level,
-        bu=jnp.any(act & st.bu_mode),
-        td_next=jnp.sum((act & ~st.bu_mode).astype(i32)),
-        bu_next=jnp.sum((act & st.bu_mode).astype(i32)),
+        bu=jnp.any(act & (st.bu_mode | st.bu_hub)),
+        td_next=jnp.sum((act & (~st.bu_mode | ~st.bu_hub)).astype(i32)),
+        bu_next=jnp.sum((act & (st.bu_mode | st.bu_hub)).astype(i32)),
         active_n=jnp.sum(act.astype(i32)),
         used_td=st.used_td,
         used_bu=st.used_bu,
+        used_td_hub=st.used_td_hub,
+        used_bu_hub=st.used_bu_hub,
+        nf_hub=jnp.sum(jnp.where(act, st.nf_hub, 0), dtype=i32),
+        mf_hub=jnp.sum(jnp.where(act, st.mf_hub, 0), dtype=i32),
         nf_lanes=st.nf,
         mf_lanes=st.mf,
         bu_lanes=st.bu_mode,
+        hub_bu_lanes=st.bu_hub,
+        nf_hub_lanes=st.nf_hub,
         active_lanes=act,
     )
 

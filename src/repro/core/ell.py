@@ -53,6 +53,47 @@ def bucket_widths(max_degree: int, base: int = DEFAULT_BASE,
     return widths
 
 
+def hub_width(hub_deg: int, base: int = DEFAULT_BASE,
+              growth: int = DEFAULT_GROWTH) -> int:
+    """Narrowest ladder width >= `hub_deg`: the hub side's first bucket.
+
+    The heterogeneous split (`BFSConfig.hub_split`) snaps its degree
+    threshold to the bucket ladder so no ELL bucket straddles the hub/tail
+    boundary — the kernel path can then dispatch whole buckets to one side
+    and stay bitwise-identical to the elementwise XLA predicate.
+    """
+    w = base
+    while w < hub_deg:
+        w *= growth
+    return w
+
+
+def hub_degree_floor(hub_deg: int, base: int = DEFAULT_BASE,
+                     growth: int = DEFAULT_GROWTH) -> int:
+    """Degree floor T of the snapped hub threshold: a row is hub iff deg > T.
+
+    T is the ladder width below `hub_width` (bucket of width W covers
+    degrees (W/growth, W]), or 0 when `hub_deg` fits the base bucket — then
+    every positive-degree row is hub and the tail side is empty.
+    """
+    w = hub_width(hub_deg, base, growth)
+    return 0 if w == base else w // growth
+
+
+def split_tiles(ell: EllTiles, hub_deg: int, *, base: int = DEFAULT_BASE,
+                growth: int = DEFAULT_GROWTH) -> tuple[EllTiles, EllTiles]:
+    """Partition ELL buckets into (tail, hub) sides by the snapped threshold.
+
+    Bucket membership is decided by tile width, which by construction
+    agrees with the per-row `deg > hub_degree_floor(...)` predicate: the
+    ladder snap guarantees every row in a width-W bucket is on one side.
+    """
+    w_h = hub_width(hub_deg, base, growth)
+    tail = tuple(t for t in ell if t.nbrs.shape[-1] < w_h)
+    hub = tuple(t for t in ell if t.nbrs.shape[-1] >= w_h)
+    return tail, hub
+
+
 def build_ell(indptr: np.ndarray, indices: np.ndarray, degrees: np.ndarray,
               row_ids: np.ndarray | None = None, *,
               base: int = DEFAULT_BASE,

@@ -122,54 +122,80 @@ def _local_top_down(pg_shapes, cfg: BFSConfig, indptr, indices, row_gid,
 
 def _local_bottom_up(pg_shapes, cfg: BFSConfig, indptr, indices, row_gid,
                      visited, frontier):
-    """Pull step over this device's unvisited rows (slab early exit)."""
+    """Pull step over this device's unvisited rows (slab early exit).
+
+    Under `cfg.hub_split` the local row queue splits by the snapped hub
+    degree floor into a tail pass (degree-bounded rows, 4x wider chunks —
+    no convoy risk) and a hub pass (few very-wide rows, small chunks of
+    `hub_slab`-wide scans), and zero-degree rows leave the queue entirely.
+    Pure load-balance reorganization: per-row first-hit parents are
+    invariant under any partition of the rows, so the union of the two
+    passes is bitwise the unsplit pull. (The BSP path keeps ONE direction
+    decision — per-side asymmetric choice lives on the fused cohort path.)
+    """
     v_pad, r, e_local = pg_shapes
-    rc, w = min(cfg.bu_chunk, r), cfg.bu_slab
     visited_ext = jnp.concatenate([visited, jnp.ones(1, jnp.uint8)])  # phantom=visited
-    row_unvisited = (visited_ext[jnp.minimum(row_gid, v_pad)] == 0).astype(jnp.uint8)
-    queue, m = fr.compact(row_unvisited)               # local row idx; fill==r
+    row_unvisited = (visited_ext[jnp.minimum(row_gid, v_pad)] == 0)
     ldeg = indptr[1:] - indptr[:-1]
     ldeg_ext = jnp.concatenate([ldeg, jnp.zeros(1, jnp.int32)])
 
-    def chunk_body(carry):
-        base, next_flags, pcand = carry
-        lrows = jax.lax.dynamic_slice(queue, (base,), (rc,))
-        rdeg = ldeg_ext[jnp.minimum(lrows, r)]
-        lrows_c = jnp.minimum(lrows, r - 1)
-        rptr = indptr[lrows_c]
-        gid = row_gid[lrows_c]                          # scatter target (global)
+    def pull_pass(row_sel, rc, w, next_flags, pcand):
+        queue, m = fr.compact(row_sel.astype(jnp.uint8))  # local idx; fill==r
 
-        def slab_cond(sc):
-            s, found, _ = sc
-            return jnp.any(~found & (rdeg > s * w))
+        def chunk_body(carry):
+            base, next_flags, pcand = carry
+            lrows = jax.lax.dynamic_slice(queue, (base,), (rc,))
+            rdeg = ldeg_ext[jnp.minimum(lrows, r)]
+            lrows_c = jnp.minimum(lrows, r - 1)
+            rptr = indptr[lrows_c]
+            gid = row_gid[lrows_c]                      # scatter target (global)
 
-        def slab_body(sc):
-            s, found, par = sc
-            col = s * w + jnp.arange(w, dtype=jnp.int32)
-            nvalid = (col[None, :] < rdeg[:, None]) & ~found[:, None]
-            nidx = jnp.clip(rptr[:, None] + col[None, :], 0, e_local - 1)
-            nbr = jnp.where(nvalid, indices[nidx], 0)
-            hit = nvalid & (frontier[nbr] > 0)
-            anyhit = jnp.any(hit, axis=1)
-            first = jnp.argmax(hit, axis=1)
-            pc = nbr[jnp.arange(rc), first]
-            par = jnp.where(~found & anyhit, pc, par)
-            return s + 1, found | anyhit, par
+            def slab_cond(sc):
+                s, found, _ = sc
+                return jnp.any(~found & (rdeg > s * w))
 
-        _, found, par = jax.lax.while_loop(
-            slab_cond, slab_body,
-            (jnp.int32(0), jnp.zeros(rc, bool), jnp.full(rc, INT_MAX, jnp.int32)))
-        found = found & (lrows < r)
-        tgt = jnp.where(lrows < r, gid, v_pad)          # drop fill rows
-        next_flags = next_flags.at[tgt].max(found.astype(jnp.uint8), mode="drop")
-        pcand = pcand.at[tgt].min(jnp.where(found, par, INT_MAX), mode="drop")
-        return base + rc, next_flags, pcand
+            def slab_body(sc):
+                s, found, par = sc
+                col = s * w + jnp.arange(w, dtype=jnp.int32)
+                nvalid = (col[None, :] < rdeg[:, None]) & ~found[:, None]
+                nidx = jnp.clip(rptr[:, None] + col[None, :], 0, e_local - 1)
+                nbr = jnp.where(nvalid, indices[nidx], 0)
+                hit = nvalid & (frontier[nbr] > 0)
+                anyhit = jnp.any(hit, axis=1)
+                first = jnp.argmax(hit, axis=1)
+                pc = nbr[jnp.arange(rc), first]
+                par = jnp.where(~found & anyhit, pc, par)
+                return s + 1, found | anyhit, par
 
-    init = (jnp.int32(0), jnp.zeros(v_pad, jnp.uint8),
-            jnp.full(v_pad, INT_MAX, jnp.int32))
-    _, next_flags, pcand = jax.lax.while_loop(
-        lambda cy: cy[0] < m, chunk_body, init)
-    return next_flags, pcand
+            _, found, par = jax.lax.while_loop(
+                slab_cond, slab_body,
+                (jnp.int32(0), jnp.zeros(rc, bool),
+                 jnp.full(rc, INT_MAX, jnp.int32)))
+            found = found & (lrows < r)
+            tgt = jnp.where(lrows < r, gid, v_pad)      # drop fill rows
+            next_flags = next_flags.at[tgt].max(found.astype(jnp.uint8),
+                                                mode="drop")
+            pcand = pcand.at[tgt].min(jnp.where(found, par, INT_MAX),
+                                      mode="drop")
+            return base + rc, next_flags, pcand
+
+        _, next_flags, pcand = jax.lax.while_loop(
+            lambda cy: cy[0] < m, chunk_body, (jnp.int32(0), next_flags,
+                                               pcand))
+        return next_flags, pcand
+
+    next_flags = jnp.zeros(v_pad, jnp.uint8)
+    pcand = jnp.full(v_pad, INT_MAX, jnp.int32)
+    if not cfg.hub_split:
+        return pull_pass(row_unvisited, min(cfg.bu_chunk, r), cfg.bu_slab,
+                         next_flags, pcand)
+    floor = ELL.hub_degree_floor(cfg.hub_deg)
+    tail_sel = row_unvisited & (ldeg > 0) & (ldeg <= floor)
+    hub_sel = row_unvisited & (ldeg > floor)
+    next_flags, pcand = pull_pass(tail_sel, min(4 * cfg.bu_chunk, r),
+                                  cfg.bu_slab, next_flags, pcand)
+    return pull_pass(hub_sel, min(cfg.bu_chunk, 128, r), cfg.hub_slab,
+                     next_flags, pcand)
 
 
 # ------------------------------------------------------- kernel-path steps --

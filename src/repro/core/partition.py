@@ -67,6 +67,29 @@ class PartitionedGraph:
         return self.plan.n_parts
 
 
+def hub_tail_masses(degrees: np.ndarray, hub_deg: int, *, base: int = 32,
+                    growth: int = 2) -> dict:
+    """Row/edge mass on each side of the snapped hub threshold (host numpy).
+
+    The heterogeneous split's reporting helper: `hub_deg` snaps to the ELL
+    bucket ladder exactly as `BFSConfig.hub_split` does (`ell.hub_width` /
+    `ell.hub_degree_floor`), so these masses describe the rows the hub and
+    tail passes actually own. Used by the energy/occupancy sections of
+    `benchmarks/bench_teps.py`.
+    """
+    from repro.core.ell import hub_degree_floor
+    deg = np.asarray(degrees).astype(np.int64)
+    floor = hub_degree_floor(hub_deg, base, growth)
+    hub = deg > floor
+    tail = ~hub & (deg > 0)
+    return dict(
+        hub_degree_floor=int(floor),
+        n_hub=int(hub.sum()), n_tail=int(tail.sum()),
+        n_zero=int((deg == 0).sum()),
+        e_hub=int(deg[hub].sum()), e_tail=int(deg[tail].sum()),
+    )
+
+
 def _snake_deal(order: np.ndarray, n_parts: int) -> list[np.ndarray]:
     """Deal `order` (degree-desc) to partitions in snake order: edge balance."""
     idx = np.arange(len(order))

@@ -13,8 +13,11 @@ Three backends, auto-selected from partition count and available devices
   on the shared `LevelDriver`): per level the batch splits into a top-down
   cohort, a bottom-up cohort, and a finished cohort, and each direction
   pass runs ONCE over its masked cohort — with per-level streaming and
-  cancellation. Unbatched mode keeps one whole-search XLA program per root
-  (`repro.core.bfs.search_state`, the Graph500 measurement mode).
+  cancellation. Unbatched (Graph500) mode runs the SAME cohort step at
+  batch bucket 1, one root at a time with per-root wall timing — there is
+  exactly one step implementation, which is what lets the heterogeneous
+  hub/tail split (`BFSConfig.hub_split`) specialize scalar and batched
+  traversal at once.
 * ``sharded`` — the paper's partitioned BSP search under `shard_map`
   (`repro.core.hybrid_bfs.make_hybrid_search`), pipelined over roots: all
   queries are dispatched asynchronously against one cached executable and
@@ -272,17 +275,9 @@ class Engine:
     # old vmap-of-whole-search lowered its per-level `lax.cond` to a select
     # that executed both), finished and pad lanes out of every cohort, and
     # the driver's per-level streaming/cancellation hooks for free.
-    # Unbatched (Graph500) mode keeps a whole-search executable per root —
-    # a scalar-root program whose `lax.cond` stays a real branch.
-
-    def _fused_single_executable(self, bcfg: BFSConfig):
-        """Cached scalar-root whole-search executable (Graph500 mode)."""
-        dg = self.session.device_graph()
-        ell = self.session.ell_tiles() if B.kernels_enabled(bcfg) else None
-        key = ("fused", bcfg, 1)
-        fn = self.session.executable(
-            key, lambda: lambda r: B.search_state(dg, r, bcfg, ell=ell))
-        return key, fn
+    # Unbatched (Graph500) mode is the SAME machinery at bucket 1: one
+    # cohort step implementation serves scalar and batched traversal, so a
+    # step specialization (the hub/tail split) lands everywhere at once.
 
     def _cohort_backend(self, bcfg: BFSConfig,
                         bucket: int) -> CohortBatchBackend:
@@ -357,24 +352,30 @@ class Engine:
                                    _tree_depth(level), dt, per_root,
                                    "fused", 1, e_und,
                                    batch_level_stats=rows)
-        # Graph500 mode: one root at a time against a scalar-root
-        # whole-search executable (real per-level branch, one dispatch).
-        key, fn = self._fused_single_executable(hcfg.bfs)
-        self.session.warm(
-            key, lambda: fn(jnp.int32(roots_arr[0])).frontier)
-        parents, levels, per_root = [], [], []
+        # Graph500 mode: one root at a time through the B=1 cohort — the
+        # same five executables as a size-1 batch, timed per root. The
+        # driver's host loop replaces the old whole-search `lax.while_loop`
+        # program; level dispatch stays one executable call per level.
         kernels = "pallas" if B.kernels_enabled(hcfg.bfs) else "xla"
+        backend = self._cohort_backend(hcfg.bfs, 1)
+        backend.fault_ctx = dict(mode="scalar", kernels=kernels)
+        active1 = jnp.ones(1, dtype=bool)
+        self.session.warm(
+            ("cohort_warm", hcfg.bfs, 1),
+            lambda: backend.warm((jnp.asarray([roots_arr[0]], jnp.int32),
+                                  active1)))
+        parents, levels, per_root = [], [], []
         for r in roots_arr:
             if control is not None:
                 control.check()
             fault_point("dispatch", mode="scalar", kernels=kernels)
             t0 = time.perf_counter()
-            st = fn(jnp.int32(r))
-            # repro-ok: TH001 timed dispatch: per_root latency must include device completion
-            jax.block_until_ready(st.frontier)
+            # repro-ok: TH001 timed dispatch: driver.run blocks on the final
+            # sync, so per_root latency includes device completion.
+            parent, level, _rows, _t = LevelDriver(backend).run(
+                (jnp.asarray([r], jnp.int32), active1), None, control)
             per_root.append(time.perf_counter() - t0)
-            p, l = B.finalize(st)
-            parents.append(p); levels.append(l)
+            parents.append(parent[0]); levels.append(level[0])
         per_root = np.asarray(per_root)
         level = np.stack(levels)
         return TraversalResult(roots_arr, np.stack(parents), level,

@@ -295,17 +295,35 @@ class CohortBatchBackend:
         return outs
 
     def row_extra(self, pre, post) -> dict:
-        used_td, used_bu = int(post["used_td"]), int(post["used_bu"])
+        # Side-aware occupancy: td/bu_lanes count lanes with ANY side in
+        # that direction (a lane whose sides agree is one lane, not two —
+        # `td_next`/`bu_next` of the pre-step sync are exactly the cohort
+        # sizes the dispatched step ran). With the heterogeneous split off
+        # the hub counters are zero and every row degenerates to the old
+        # schema (hub_* = 0, frontier_hub = 0, hub lane direction mirrors
+        # tail).
+        used_td = int(pre["td_next"])
+        used_bu = int(pre["bu_next"])
+        nf_hub = int(pre.get("nf_hub", 0))
         return dict(
             direction=("mixed" if used_td and used_bu
                        else ("bu" if used_bu else "td")),
             td_lanes=used_td,
             bu_lanes=used_bu,
+            hub_td_lanes=int(post.get("used_td_hub", 0)),
+            hub_bu_lanes=int(post.get("used_bu_hub", 0)),
+            frontier_hub=nf_hub,
+            frontier_tail=int(pre["nf"]) - nf_hub,
             active_lanes=int(pre["active_n"]),
             batch=self.bucket,
             lane_frontier=[int(x) for x in pre["nf_lanes"]],
             lane_edges=[int(x) for x in pre["mf_lanes"]],
             lane_direction=["bu" if x else "td" for x in pre["bu_lanes"]],
+            lane_hub_direction=["bu" if x else "td"
+                                for x in pre.get("hub_bu_lanes",
+                                                 pre["bu_lanes"])],
+            lane_hub_frontier=[int(x) for x in pre.get("nf_hub_lanes",
+                                                       [0] * self.bucket)],
             lane_active=[bool(x) for x in pre["active_lanes"]],
         )
 

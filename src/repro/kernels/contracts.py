@@ -112,6 +112,17 @@ def width_ladder(max_degree: int, base: int = 32, growth: int = 2) -> list:
     return widths
 
 
+def hub_width(hub_deg: int, base: int = 32, growth: int = 2) -> int:
+    """Narrowest ladder width >= hub_deg — pure mirror of
+    `repro.core.ell.hub_width` (the heterogeneous split's snapped
+    threshold); `tests/test_hetero_split.py` proves the two stay identical.
+    """
+    w = base
+    while w < hub_deg:
+        w *= growth
+    return w
+
+
 @dataclasses.dataclass(frozen=True)
 class BlockContract:
     """One BlockSpec, concretely instantiated."""
@@ -182,6 +193,56 @@ def bottomup_batch_contract(b: int, r: int, w: int, v: int, *,
     wp = _ceil_to(w, slab) if w else slab
     return KernelContract(
         kernel="bottomup_batch_pallas", module="bottomup",
+        grid=(b, r // rblk),
+        blocks=(
+            BlockContract("deg", "in", (b, r), (1, rblk), "int32",
+                          lambda l, i: (l, i)),
+            BlockContract("nbrs", "in", (r, wp), (rblk, wp), "int32",
+                          lambda l, i: (i, 0)),
+            BlockContract("frontier", "in", (b, v), (1, v), "uint8",
+                          lambda l, i: (l, 0)),
+            BlockContract("found", "out", (b, r), (1, rblk), "uint8",
+                          lambda l, i: (l, i)),
+            BlockContract("parent", "out", (b, r), (1, rblk), "int32",
+                          lambda l, i: (l, i)),
+        ),
+        gathers=(GatherSpec("nbrs", "frontier", (0, v), (0, v - 1)),),
+    )
+
+
+def hub_bottomup_contract(r: int, w: int, v: int, *,
+                          rblk: int = 8) -> KernelContract:
+    """Hub-specialized dense bottom-up (`kernels.hub`): tiny row blocks over
+    very wide tiles. At the reference shape (64 hub rows of width 32768,
+    V=2^22) the double-buffered nbrs working set is 2 x 8 x 32768 x 4 B =
+    2 MiB + a 4 MiB resident frontier — inside the 16 MiB budget where the
+    generic `bottomup_contract` at the same tile (rblk=128) would need
+    2 x 16 MiB for the nbrs block alone."""
+    wp = _ceil_to(w, 128) if w else 128
+    return KernelContract(
+        kernel="hub_bottomup_pallas", module="hub",
+        grid=(r // rblk,),
+        blocks=(
+            BlockContract("deg", "in", (r,), (rblk,), "int32",
+                          lambda i: (i,)),
+            BlockContract("nbrs", "in", (r, wp), (rblk, wp), "int32",
+                          lambda i: (i, 0)),
+            BlockContract("frontier", "in", (v,), (v,), "uint8",
+                          lambda i: (0,)),
+            BlockContract("found", "out", (r,), (rblk,), "uint8",
+                          lambda i: (i,)),
+            BlockContract("parent", "out", (r,), (rblk,), "int32",
+                          lambda i: (i,)),
+        ),
+        gathers=(GatherSpec("nbrs", "frontier", (0, v), (0, v - 1)),),
+    )
+
+
+def hub_bottomup_batch_contract(b: int, r: int, w: int, v: int, *,
+                                rblk: int = 8) -> KernelContract:
+    wp = _ceil_to(w, 128) if w else 128
+    return KernelContract(
+        kernel="hub_bottomup_batch_pallas", module="hub",
         grid=(b, r // rblk),
         blocks=(
             BlockContract("deg", "in", (b, r), (1, rblk), "int32",
@@ -332,6 +393,12 @@ REGISTRY: Dict[str, KernelContractSpec] = {
         KernelContractSpec(
             "bottomup_batch_pallas", "bottomup", bottomup_batch_contract,
             dict(b=8, r=4096, w=2048, v=65536, slab=32, rblk=128)),
+        KernelContractSpec(
+            "hub_bottomup_pallas", "hub", hub_bottomup_contract,
+            dict(r=64, w=32768, v=2**22, rblk=8)),
+        KernelContractSpec(
+            "hub_bottomup_batch_pallas", "hub", hub_bottomup_batch_contract,
+            dict(b=8, r=64, w=32768, v=2**20, rblk=8)),
         KernelContractSpec(
             "topdown_pallas", "topdown", topdown_contract,
             dict(c=4096, w=2048, v=65536, cblk=128)),

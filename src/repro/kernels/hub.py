@@ -1,0 +1,157 @@
+"""Pallas TPU kernel: hub-specialized bottom-up pass (one dense scan, no slab loop).
+
+The heterogeneous split (`BFSConfig.hub_split`, API.md §Heterogeneous
+dispatch) sends the widest ELL buckets — the scale-free hub rows — to this
+kernel instead of the generic slab scan in `kernels.bottomup`. The shapes
+invert the generic kernel's assumptions and so does the tiling:
+
+* Few rows, very wide tiles: a hub bucket at RMAT scale 22 is ~64 rows of
+  width 32768, where the tail holds millions of rows of width <= 256. The
+  generic kernel's 128-row block would be one mostly-empty program with a
+  [128, 32768] = 16 MiB VMEM tile — exactly the KC001 budget blowout PR 9's
+  golden trio flagged. Here ``rblk`` drops to 8 (the int32 sublane minimum),
+  so the double-buffered neighbour tile is 2 x [8, W] and fits comfortably.
+* No early-exit loop: a hub row's adjacency is frontier-dense almost every
+  bottom-up level (that is what makes it a hub), so the slab loop's
+  "stop after the first hit" bet pays the while-loop overhead without
+  saving work. One full-width vectorized pass + argmax first-hit replaces
+  it. First-hit parents are bitwise-identical to the slab scan's: argmax
+  over the whole row returns the lowest hitting slot, and ELL preserves CSR
+  slot order.
+
+Grid: one program per ``rblk`` rows (x lanes for the batch variant). The
+frontier block is mapped whole (index map -> block 0 per lane) and stays
+VMEM-resident across programs, same as the generic kernel.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.contracts import require_divisible
+
+_PAD_HINT = ("kernels.ops.hub_bottomup pads rows before dispatching; call "
+             "it, or pad the tile yourself")
+
+
+def _hub_bottomup_kernel(deg_ref, nbrs_ref, frontier_ref, found_ref,
+                         parent_ref, *, int_max: int):
+    deg = deg_ref[...]                      # [rblk]
+    frontier = frontier_ref[...]            # [v]
+    rblk, wmax = nbrs_ref.shape
+    v = frontier.shape[0]
+
+    nbr = nbrs_ref[...]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (rblk, wmax), 1)
+    valid = cols < deg[:, None]
+    safe = jnp.clip(nbr, 0, v - 1)
+    fbits = jnp.take(frontier, safe.reshape(-1), axis=0).reshape(rblk, wmax)
+    hit = valid & (fbits > 0)
+    anyhit = jnp.any(hit, axis=1)
+    first = jnp.argmax(hit, axis=1)         # lowest hitting slot == CSR first
+    pcand = jnp.take_along_axis(safe, first[:, None], axis=1)[:, 0]
+    found_ref[...] = anyhit.astype(jnp.uint8)
+    parent_ref[...] = jnp.where(anyhit, pcand, int_max)
+
+
+def hub_bottomup_pallas(deg: jax.Array, nbrs: jax.Array, frontier: jax.Array,
+                        *, rblk: int = 8, int_max: int = 2**31 - 1,
+                        interpret: bool = True) -> tuple[jax.Array, jax.Array]:
+    """Dense hub-row scan: returns (found uint8[R], parent int32[R]).
+
+    Args:
+      deg: int32[R] row degrees (0 rows produce no hit).
+      nbrs: int32[R, W] ELL-packed neighbour ids, W a lane multiple (the ops
+        wrapper pads; hub bucket widths are >= 128 by construction anyway).
+      frontier: uint8[V] 0/1 frontier flags.
+      rblk: rows per grid program — small, because W is huge.
+    """
+    r, w = nbrs.shape
+    require_divisible("hub_bottomup_pallas", "rows", r, rblk, hint=_PAD_HINT)
+    require_divisible("hub_bottomup_pallas", "width", w, 128, hint=_PAD_HINT)
+    v = frontier.shape[0]
+    kernel = functools.partial(_hub_bottomup_kernel, int_max=int_max)
+    return pl.pallas_call(
+        kernel,
+        grid=(r // rblk,),
+        in_specs=[
+            pl.BlockSpec((rblk,), lambda i: (i,)),
+            pl.BlockSpec((rblk, w), lambda i: (i, 0)),
+            pl.BlockSpec((v,), lambda i: (0,)),      # frontier: VMEM-resident
+        ],
+        out_specs=[
+            pl.BlockSpec((rblk,), lambda i: (i,)),
+            pl.BlockSpec((rblk,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r,), jnp.uint8),
+            jax.ShapeDtypeStruct((r,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(deg, nbrs, frontier)
+
+
+# ------------------------------------------------------------ batched (lane) --
+#
+# Cohort variant: the grid grows a lane axis, the ELL tile is SHARED across
+# lanes, each lane scans its own frontier. Lane membership rides the degrees
+# (a lane outside the hub bottom-up cohort has all-zero degrees -> no valid
+# slots -> no hits), mirroring `bottomup_batch`.
+
+
+def _hub_bottomup_batch_kernel(deg_ref, nbrs_ref, frontier_ref, found_ref,
+                               parent_ref, *, int_max: int):
+    deg = deg_ref[0]                        # [rblk] (lane-masked)
+    rblk, wmax = nbrs_ref.shape
+    v = frontier_ref.shape[1]
+
+    nbr = nbrs_ref[...]
+    cols = jax.lax.broadcasted_iota(jnp.int32, (rblk, wmax), 1)
+    valid = cols < deg[:, None]
+    safe = jnp.clip(nbr, 0, v - 1)
+    fbits = jnp.take(frontier_ref[0], safe.reshape(-1),
+                     axis=0).reshape(rblk, wmax)
+    hit = valid & (fbits > 0)
+    anyhit = jnp.any(hit, axis=1)
+    first = jnp.argmax(hit, axis=1)
+    pcand = jnp.take_along_axis(safe, first[:, None], axis=1)[:, 0]
+    found_ref[0] = anyhit.astype(jnp.uint8)
+    parent_ref[0] = jnp.where(anyhit, pcand, int_max)
+
+
+def hub_bottomup_batch_pallas(deg: jax.Array, nbrs: jax.Array,
+                              frontier: jax.Array, *, rblk: int = 8,
+                              int_max: int = 2**31 - 1,
+                              interpret: bool = True
+                              ) -> tuple[jax.Array, jax.Array]:
+    """Returns (found uint8[B, R], parent int32[B, R]); deg [B, R]
+    lane-masked, nbrs [R, W] shared, frontier [B, V] per lane."""
+    b, r = deg.shape
+    w = nbrs.shape[1]
+    require_divisible("hub_bottomup_batch_pallas", "rows", r, rblk,
+                      hint=_PAD_HINT)
+    require_divisible("hub_bottomup_batch_pallas", "width", w, 128,
+                      hint=_PAD_HINT)
+    v = frontier.shape[1]
+    kernel = functools.partial(_hub_bottomup_batch_kernel, int_max=int_max)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, r // rblk),
+        in_specs=[
+            pl.BlockSpec((1, rblk), lambda l, i: (l, i)),
+            pl.BlockSpec((rblk, w), lambda l, i: (i, 0)),
+            pl.BlockSpec((1, v), lambda l, i: (l, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, rblk), lambda l, i: (l, i)),
+            pl.BlockSpec((1, rblk), lambda l, i: (l, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, r), jnp.uint8),
+            jax.ShapeDtypeStruct((b, r), jnp.int32),
+        ],
+        interpret=interpret,
+    )(deg, nbrs, frontier)

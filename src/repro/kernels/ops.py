@@ -12,6 +12,7 @@ import jax.numpy as jnp
 
 from repro.kernels import bottomup as _bu
 from repro.kernels import frontier_fused as _ff
+from repro.kernels import hub as _hub
 from repro.kernels import topdown as _td
 from repro.kernels.contracts import check_frontier_residency
 
@@ -88,6 +89,31 @@ def bottomup(deg, nbrs, frontier, *, slab=32, rblk=128, interpret=None):
     return found[:r], parent[:r]
 
 
+@functools.partial(jax.jit, static_argnames=("rblk", "interpret"))
+def hub_bottomup(deg, nbrs, frontier, *, rblk=8, interpret=None):
+    """Hub-side dense bottom-up: (found uint8[R], parent int32[R]).
+
+    Dispatches the widest ELL buckets to the single-dense-pass hub kernel
+    (`kernels.hub`) instead of the generic slab scan. Rows pad to an `rblk`
+    multiple (degree 0, sliced back off), W pads to a lane multiple, an
+    empty tile short-circuits.
+    """
+    r, w = nbrs.shape
+    if r == 0:
+        return (jnp.zeros(0, jnp.uint8), jnp.zeros(0, jnp.int32))
+    check_frontier_residency(frontier.shape[0],
+                             budget_bytes=_frontier_budget(),
+                             kernel="kernels.ops.hub_bottomup")
+    rblk = min(rblk, _ceil_to(r, 8))
+    deg_p, _ = _pad_rows(deg, rblk)
+    nbrs_p, _ = _pad_rows(nbrs, rblk)
+    nbrs_p, _ = _pad_axis1(nbrs_p, 128)
+    found, parent = _hub.hub_bottomup_pallas(
+        deg_p, nbrs_p, frontier, rblk=rblk,
+        interpret=_auto_interpret(interpret))
+    return found[:r], parent[:r]
+
+
 @functools.partial(jax.jit, static_argnames=("blk_words", "interpret"))
 def frontier_fused(flags, deg, *, blk_words=256, interpret=None):
     """Fused pack+count+edge-mass: (packed uint32[ceil(V/32)], nf, mf)."""
@@ -155,6 +181,30 @@ def bottomup_batch(deg, nbrs, frontier, *, slab=32, rblk=128, interpret=None):
     nbrs_p, _ = _pad_rows(nbrs, rblk)
     found, parent = _bu.bottomup_batch_pallas(
         deg_p, nbrs_p, frontier, slab=slab, rblk=rblk,
+        interpret=_auto_interpret(interpret))
+    return found[:, :r], parent[:, :r]
+
+
+@functools.partial(jax.jit, static_argnames=("rblk", "interpret"))
+def hub_bottomup_batch(deg, nbrs, frontier, *, rblk=8, interpret=None):
+    """Batched hub-side dense bottom-up: (found uint8[B, R], parent int32[B, R]).
+
+    `deg` is int32[B, R] per-lane cohort-masked degrees; `nbrs` int32[R, W]
+    is the shared (wide) hub ELL tile; `frontier` uint8[B, V] per lane.
+    Ragged handling mirrors `hub_bottomup`.
+    """
+    b, r = deg.shape
+    if r == 0 or b == 0:
+        return (jnp.zeros((b, 0), jnp.uint8), jnp.zeros((b, 0), jnp.int32))
+    check_frontier_residency(frontier.shape[1],
+                             budget_bytes=_frontier_budget(),
+                             kernel="kernels.ops.hub_bottomup_batch")
+    rblk = min(rblk, _ceil_to(r, 8))
+    deg_p, _ = _pad_axis1(deg, rblk)
+    nbrs_p, _ = _pad_rows(nbrs, rblk)
+    nbrs_p, _ = _pad_axis1(nbrs_p, 128)
+    found, parent = _hub.hub_bottomup_batch_pallas(
+        deg_p, nbrs_p, frontier, rblk=rblk,
         interpret=_auto_interpret(interpret))
     return found[:, :r], parent[:, :r]
 

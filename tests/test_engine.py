@@ -62,13 +62,20 @@ def test_batch_of_8_roots_single_trace(small_graph):
     assert session.total_materialized == 2 * COHORT_EXECUTABLES
 
 
-def test_unbatched_mode_shares_one_executable(small_graph):
+def test_unbatched_mode_is_b1_cohort(small_graph):
     session = GraphSession(small_graph)
     engine = Engine(session)
     res = engine.bfs([3, 5, 9], batched=False, validate=True)
     assert res.per_root_seconds.shape == (3,)
-    # 3 roots, one batch-1 executable, materialized once (trace or load)
-    assert session.total_materialized == 1
+    # The scalar path IS the cohort path at bucket 1: no separate
+    # whole-search executable, just the one shared cohort set, materialized
+    # once across all 3 roots.
+    assert _fused_keys(session) == []
+    keys = _cohort_keys(session)
+    assert keys and all(k[2] == 1 for k in keys), keys
+    assert len(keys) == COHORT_EXECUTABLES, keys
+    assert session.total_materialized == COHORT_EXECUTABLES
+    assert all(session.materialize_count(k) == 1 for k in keys)
     assert res.teps_hmean > 0
 
 

@@ -1,0 +1,175 @@
+"""Heterogeneous hub/tail split dispatch (`BFSConfig.hub_split`).
+
+Acceptance gates for the degree-split execution model:
+
+* bitwise parity (parents, levels, per-level stats) of the split path vs
+  the unsplit cohort path on skewed RMAT, star, path, and edgeless graphs,
+  across the paper heuristic and both forced directions, on the XLA
+  reference path and the Pallas kernel path;
+* per-side direction choice: under beamer's side-local `mu` the hub side
+  flips bottom-up on levels where the tail still pushes — levels stay
+  bitwise, parents stay valid, and the per-level rows expose the
+  disagreement (`lane_hub_direction` vs `lane_direction`);
+* per-side numpy oracles: a forced bottom-up split run yields the
+  first-frontier-neighbour-in-CSR-order parent, a forced top-down split
+  run the min-id frontier parent — the split cannot change pull/push
+  tie-breaking;
+* `kernels.contracts.hub_width` is a faithful mirror of `ell.hub_width`
+  (the verifier prunes with the exact snap rule the runtime dispatches
+  with);
+* the scalar path is the B=1 cohort: an unbatched engine run materializes
+  cohort executables at bucket 1 and nothing else.
+"""
+import numpy as np
+import pytest
+
+from repro.core import ell as ELL
+from repro.core import graph as G, ref
+from repro.core.bfs import BFSConfig
+from repro.engine import Engine, GraphSession
+from repro.kernels import contracts as KC
+
+INT_MAX = np.iinfo(np.int32).max
+
+
+def _star(n=48):
+    src = np.zeros(n - 1, np.int64)
+    dst = np.arange(1, n, dtype=np.int64)
+    return G.from_edges(src, dst, n)
+
+
+def _path(n=50):
+    src = np.arange(n - 1, dtype=np.int64)
+    return G.from_edges(src, src + 1, n)
+
+
+def _edgeless(n=17):
+    e = np.zeros(0, np.int64)
+    return G.from_edges(e, e, n)
+
+
+RMAT = G.rmat(9, seed=3)
+GRAPHS = {
+    "rmat": (RMAT, [int(np.argmax(RMAT.degrees)), 0, 7, 123]),
+    "star": (_star(), [0, 1, 5]),
+    "path": (_path(), [0, 25]),
+    "edgeless": (_edgeless(), [0, 3]),
+}
+
+STATS_KEYS = ("level", "direction", "td_lanes", "bu_lanes", "active_lanes",
+              "lane_frontier", "lane_edges", "lane_direction", "lane_active")
+
+
+def _rows(res, keys=STATS_KEYS):
+    return [{k: row[k] for k in keys} for row in res.batch_level_stats]
+
+
+@pytest.mark.parametrize("kernels", [False, True], ids=["xla", "pallas"])
+@pytest.mark.parametrize("heuristic", ["paper", "topdown", "bottomup"])
+@pytest.mark.parametrize("gname", list(GRAPHS))
+def test_split_bitwise_parity(gname, heuristic, kernels):
+    """Split vs unsplit: parents, levels, and stats rows bitwise-identical.
+
+    Under the paper heuristic (global gamma*E threshold) and the forced
+    directions, both sides always choose the same direction, so the split
+    is a pure execution reorganization: the hub pull and tail pull
+    partition the pull's rows (first-hit-in-slot-order is partition
+    invariant) and the dst-masked pushes partition the push's scatter-min.
+    """
+    g, roots = GRAPHS[gname]
+    engine = Engine(g)
+    base = engine.bfs(roots, BFSConfig(heuristic=heuristic,
+                                       backend_kernels=kernels))
+    for hub_deg in (32, 256):
+        cfg = BFSConfig(heuristic=heuristic, backend_kernels=kernels,
+                        hub_split=True, hub_deg=hub_deg)
+        res = engine.bfs(roots, cfg)
+        np.testing.assert_array_equal(base.parent, res.parent,
+                                      err_msg=f"hub_deg={hub_deg}")
+        np.testing.assert_array_equal(base.level, res.level,
+                                      err_msg=f"hub_deg={hub_deg}")
+        assert _rows(base) == _rows(res), f"hub_deg={hub_deg}"
+        for i, r in enumerate(roots):
+            ref.validate_parents(g, int(r), res.parent[i], res.level[i])
+
+
+def test_beamer_sides_disagree_levels_bitwise():
+    """Beamer's side-local `mu` flips the hub side bottom-up on levels
+    where the tail still pushes. Levels (and per-lane frontier stats) are
+    direction-independent so they stay bitwise; parents legitimately
+    differ on asymmetric levels but remain valid BFS trees."""
+    g = G.rmat(10, seed=1)
+    roots = [int(np.argmax(g.degrees)), 0, 3, 17]
+    engine = Engine(g)
+    base = engine.bfs(roots, BFSConfig(heuristic="beamer"))
+    cfg = BFSConfig(heuristic="beamer", hub_split=True, hub_deg=64)
+    res = engine.bfs(roots, cfg)
+    np.testing.assert_array_equal(base.level, res.level)
+    lane_keys = ("level", "lane_frontier", "lane_edges", "lane_active")
+    assert _rows(base, lane_keys) == _rows(res, lane_keys)
+    for i, r in enumerate(roots):
+        ref.validate_parents(g, int(r), res.parent[i], res.level[i])
+    disagree = [
+        row["level"] for row in res.batch_level_stats
+        if any(a and hd != td for a, hd, td in zip(row["lane_active"],
+                                                   row["lane_hub_direction"],
+                                                   row["lane_direction"]))]
+    assert disagree, "expected levels where hub and tail choose differently"
+
+
+def test_split_parent_oracles_forced_directions():
+    """Per-side tie-break oracles on a split run (numpy reference):
+
+    * forced bottom-up — every non-root visited vertex's parent is its
+      FIRST neighbour in adjacency (CSR slot) order on the previous level;
+    * forced top-down — the MIN-ID neighbour on the previous level (the
+      scatter-min over frontier sources).
+    """
+    g = G.rmat(8, seed=5)
+    root = int(np.argmax(g.degrees))
+    engine = Engine(g)
+    for heuristic, pick in (
+            ("bottomup", lambda nbrs: nbrs[0]),
+            ("topdown", lambda nbrs: nbrs.min())):
+        cfg = BFSConfig(heuristic=heuristic, hub_split=True, hub_deg=32)
+        res = engine.bfs([root], cfg)
+        parent, level = res.parent[0], res.level[0]
+        for v in range(g.num_vertices):
+            if level[v] <= 0:
+                continue
+            nbrs = g.indices[g.indptr[v]:g.indptr[v + 1]]
+            prev = nbrs[level[nbrs] == level[v] - 1]
+            assert parent[v] == pick(prev), (heuristic, v)
+
+
+def test_contract_hub_width_mirrors_ell():
+    """The verifier's snap rule must be the runtime's snap rule: a config
+    the verifier prunes/passes maps to exactly the tile the dispatcher
+    builds."""
+    for hub_deg in list(range(1, 300)) + [511, 512, 513, 4096, 10 ** 6]:
+        assert KC.hub_width(hub_deg) == ELL.hub_width(hub_deg), hub_deg
+        floor = ELL.hub_degree_floor(hub_deg)
+        assert floor < ELL.hub_width(hub_deg)
+    # non-default ladder geometry snaps identically too
+    for hub_deg in (1, 65, 129, 1000):
+        assert (KC.hub_width(hub_deg, base=64, growth=4)
+                == ELL.hub_width(hub_deg, base=64, growth=4))
+
+
+@pytest.mark.parametrize("hub_split", [False, True], ids=["unsplit", "split"])
+def test_scalar_path_is_b1_cohort(hub_split):
+    """Trace-count proof: the unbatched (scalar) path IS the cohort step at
+    bucket 1 — no separate single-root step executable exists."""
+    g, roots = GRAPHS["rmat"]
+    session = GraphSession(g)
+    engine = Engine(session)
+    cfg = BFSConfig(hub_split=hub_split, hub_deg=64)
+    res1 = engine.bfs(roots, cfg, batched=False)
+    keys = list(session.cache_info()["plan_sources"])
+    assert [k for k in keys if k[0] == "fused"] == []
+    cohort = [k for k in keys if k[0] == "cohort"]
+    assert cohort and all(k[2] == 1 for k in cohort), cohort
+    # and it computes the same answers as the batched cohort
+    resb = engine.bfs(roots, cfg)
+    np.testing.assert_array_equal(res1.parent, resb.parent)
+    np.testing.assert_array_equal(res1.level, resb.level)
